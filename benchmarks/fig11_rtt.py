@@ -1,0 +1,53 @@
+"""Fig 11: FCT slowdown vs inter/intra RTT ratio (8x .. 512x).
+
+Same realistic workload at 40 % load while the WAN propagation delay grows.
+Slowdown = FCT / ideal-FCT-for-that-size-and-path.  Paper: Uno's advantage
+grows with the RTT gap (5x lower tail slowdown at ratio 512).
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from benchmarks.common import MS, US
+from repro.netsim import workloads as W
+from repro.netsim.topology import TwoDCFatTree
+
+SCHEMES = ("uno", "gemini", "mprdma+bbr")
+
+
+def _slowdowns(flows, net) -> list[float]:
+    out = []
+    for f in flows:
+        if f.fct is None:
+            continue
+        ideal = f.base_rtt + f.size / net.rate
+        out.append(f.fct / ideal)
+    return out
+
+
+def _one(scheme: str, ratio: int, n_flows: int, seed: int = 13) -> dict:
+    cc, lb = common.scheme_lb(scheme)
+    intra = 14 * US
+    net = TwoDCFatTree(seed=seed, intra_rtt=intra, inter_rtt=ratio * intra)
+    if cc == "uno":
+        net.attach_phantoms()
+    flows = W.poisson_mix(net, load=0.4, n_flows=n_flows, cc_scheme=cc, lb=lb,
+                          ec=(8, 2) if scheme == "uno" else None, seed=seed)
+    last_start = max(f.start_t for f in flows)
+    net.sim.run(until=last_start + 4000 * MS)
+    sl = _slowdowns(flows, net)
+    sl_inter = _slowdowns([f for f in flows if f.is_inter], net)
+    return {"slowdown_mean": round(sum(sl) / len(sl), 2) if sl else None,
+            "slowdown_p99": round(common.pctl(sl, 0.99), 2) if sl else None,
+            "inter_slowdown_p99": (round(common.pctl(sl_inter, 0.99), 2)
+                                   if sl_inter else None),
+            "unfinished": sum(1 for f in flows if f.fct is None)}
+
+
+def run(quick: bool = True) -> dict:
+    ratios = (8, 128, 512) if quick else (8, 32, 128, 256, 512)
+    n_flows = 400 if quick else 1500
+    out = {"n_flows": n_flows}
+    for r in ratios:
+        out[f"ratio{r}"] = {s: _one(s, r, n_flows) for s in SCHEMES}
+    common.save("fig11_rtt", out)
+    return out

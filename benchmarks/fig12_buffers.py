@@ -1,0 +1,44 @@
+"""Fig 12: asymmetric buffers — shallow intra-DC (~intra BDP ~ 175 KiB/port)
+vs deep WAN switches (~0.1 x inter BDP ~ 2.2 MiB/port), realistic workload
+at 40 % load.  Paper: Uno keeps its advantage under heterogeneous buffering.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from benchmarks.common import KIB, MIB, MS
+from repro.netsim import workloads as W
+from repro.netsim.topology import TwoDCFatTree
+
+SCHEMES = ("uno", "uno+ecmp", "gemini", "mprdma+bbr")
+
+
+def _one(scheme: str, n_flows: int, seed: int = 17) -> dict:
+    cc, lb = common.scheme_lb(scheme)
+    net = TwoDCFatTree(seed=seed, qcap=175 * KIB,
+                       wan_qcap=int(2.2 * MIB))
+    if cc == "uno":
+        net.attach_phantoms()
+    flows = W.poisson_mix(net, load=0.4, n_flows=n_flows, cc_scheme=cc,
+                          lb=lb, ec=(8, 2) if scheme == "uno" else None,
+                          seed=seed)
+    last_start = max(f.start_t for f in flows)
+    net.sim.run(until=last_start + 3000 * MS)
+    out = {}
+    for tag, sel in (("intra", [f for f in flows if not f.is_inter]),
+                     ("inter", [f for f in flows if f.is_inter])):
+        fcts = [f.fct for f in sel if f.fct is not None]
+        s = common.summarize_ms(fcts)
+        s["unfinished"] = sum(1 for f in sel if f.fct is None)
+        out[tag] = s
+    out["drops"] = net.sim.dropped
+    return out
+
+
+def run(quick: bool = True) -> dict:
+    n_flows = 700 if quick else 2500
+    out = {"n_flows": n_flows,
+           "qcap_intra_KiB": 175, "qcap_wan_MiB": 2.2}
+    for scheme in SCHEMES:
+        out[scheme] = _one(scheme, n_flows)
+    common.save("fig12_buffers", out)
+    return out

@@ -1,0 +1,124 @@
+"""Fig 13: failure scenarios.
+
+ A) one of the 8 border links fails; latency-sensitive 5 MiB inter-DC flows;
+    repeat R times for distribution stats (paper uses violin plots over 100).
+ B) correlated random loss (Gilbert-Elliott fitted to Table 1's measurements)
+    on the WAN links; single inter-DC flow.
+ C) cross-DC data-parallel Allreduce: per-iteration gradient exchange of
+    ~70-500 MiB split into concurrent reduce streams; link failure + random
+    drops; report measured/ideal ratio per iteration.
+
+Compared: UnoLB / RPS / PLB, each with and without (8,2) erasure coding,
+all on UnoCC (the paper isolates the RC aspect the same way).
+"""
+from __future__ import annotations
+
+import random
+import statistics
+
+from benchmarks import common
+from benchmarks.common import MIB, MS
+from repro.netsim import workloads as W
+from repro.netsim.topology import GilbertElliott, TwoDCFatTree, fail_link
+
+LBS = ("unolb", "rps", "plb")
+
+
+def _scenario_a(lb: str, ec, runs: int, seed0: int = 100) -> dict:
+    means, maxes = [], []
+    for r in range(runs):
+        net = TwoDCFatTree(seed=seed0 + r)
+        net.attach_phantoms()
+        rng = random.Random(seed0 + r)
+        fail_link(net.link(f"B0->B1.{rng.randrange(8)}"))
+        flows = []
+        for _ in range(16):
+            src = rng.randrange(0, 128)
+            dst = rng.randrange(128, 256)
+            flows.append(W.spawn(net, src, dst, 5 * MIB, cc_scheme="uno",
+                                 lb=lb, ec=ec, rng=rng, n_subflows=8))
+        net.sim.run(until=600 * MS)
+        fcts = [f.fct for f in flows if f.fct is not None]
+        unfin = sum(1 for f in flows if f.fct is None)
+        if fcts:
+            means.append(statistics.mean(fcts) / MS)
+            maxes.append((max(fcts) / MS) if not unfin else 600.0)
+    return {"runs": runs,
+            "mean_fct_ms": round(statistics.mean(means), 2),
+            "p95_run_mean_ms": round(common.pctl(means, 0.95), 2),
+            "worst_max_ms": round(max(maxes), 2)}
+
+
+def _scenario_b(lb: str, ec, runs: int, seed0: int = 300) -> dict:
+    """Single 5 MiB inter-DC flow under Table-1-fitted correlated loss."""
+    fcts = []
+    for r in range(runs):
+        net = TwoDCFatTree(seed=seed0 + r)
+        net.attach_phantoms()
+        rng = random.Random(seed0 + r)
+        for ln in net.wan_links:
+            # Setup-1 rates (65 ms RTT pair): 5.01e-5 overall, bursty
+            ln.loss_fn = GilbertElliott(rng, loss_rate=5.01e-4, burst=0.3)
+        f = W.spawn(net, rng.randrange(128), 128 + rng.randrange(128),
+                    5 * MIB, cc_scheme="uno", lb=lb, ec=ec, rng=rng,
+                    n_subflows=8)
+        net.sim.run(until=400 * MS)
+        fcts.append((f.fct / MS) if f.fct is not None else 400.0)
+    return {"runs": runs,
+            "mean_fct_ms": round(statistics.mean(fcts), 2),
+            "p95_fct_ms": round(common.pctl(fcts, 0.95), 2),
+            "worst_ms": round(max(fcts), 2)}
+
+
+def _scenario_c(lb: str, ec, iters: int, seed0: int = 500) -> dict:
+    """Cross-DC Allreduce: per iteration, every DC0 'replica shard owner'
+    exchanges its gradient shard with its DC1 peer (both directions), i.e.
+    2 x n_streams flows of shard_size; iteration time = last completion.
+    Ideal = shard bytes / (WAN share) + base RTT.  Link flaps + random drops.
+    """
+    n_streams = 8
+    shard = 16 * MIB                     # ~128 MiB per iteration each way
+    ratios = []
+    for it in range(iters):
+        net = TwoDCFatTree(seed=seed0 + it)
+        net.attach_phantoms()
+        rng = random.Random(seed0 + it)
+        for ln in net.wan_links:
+            ln.loss_fn = GilbertElliott(rng, loss_rate=2e-4, burst=0.3)
+        # one border link flaps mid-iteration
+        bad = net.link(f"B0->B1.{rng.randrange(8)}")
+        net.sim.at(2 * MS, lambda l=bad: setattr(l, "failed", True))
+        net.sim.at(60 * MS, lambda l=bad: setattr(l, "failed", False))
+        flows = []
+        for s in range(n_streams):
+            a = net.host_id(0, s % 8, 0, 0)
+            b = net.host_id(1, s % 8, 0, 0)
+            flows.append(W.spawn(net, a, b, shard, cc_scheme="uno", lb=lb,
+                                 ec=ec, rng=rng, n_subflows=8))
+            flows.append(W.spawn(net, b, a, shard, cc_scheme="uno", lb=lb,
+                                 ec=ec, rng=rng, n_subflows=8))
+        net.sim.run(until=2000 * MS)
+        done = [f.fct + f.start_t for f in flows if f.fct is not None]
+        t_iter = max(done) if len(done) == len(flows) else 2000 * MS
+        # ideal: n_streams shards share 8 WAN links per direction
+        ideal = net.inter_rtt + shard * n_streams / (8 * net.rate)
+        ratios.append(t_iter / ideal)
+    return {"iters": iters,
+            "mean_ratio": round(statistics.mean(ratios), 2),
+            "p95_ratio": round(common.pctl(ratios, 0.95), 2),
+            "worst_ratio": round(max(ratios), 2)}
+
+
+def run(quick: bool = True) -> dict:
+    runs = 10 if quick else 100
+    iters = 6 if quick else 100
+    out = {}
+    for name, fn, n in (("A_border_link_fail", _scenario_a, runs),
+                        ("B_correlated_loss", _scenario_b, runs),
+                        ("C_allreduce", _scenario_c, iters)):
+        out[name] = {}
+        for lb in LBS:
+            for tag, ec in (("+EC", (8, 2)), ("", None)):
+                out[name][lb + tag] = fn(lb, ec, n)
+    common.save("fig13_failures", out)
+    return out

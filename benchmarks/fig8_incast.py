@@ -1,0 +1,55 @@
+"""Fig 8: incast grid — 8+0 / 0+8 / 4+4 (intra+inter) x schemes.
+
+All schemes use packet spraying (paper: "we use packet spraying for all
+schemes as load balancing has a negligible impact under receiver-side
+incast").  Reports FCT stats + steady-state fairness per scenario.
+"""
+from __future__ import annotations
+
+import random
+
+from benchmarks import common
+from benchmarks.common import MIB, MS
+from repro.netsim import workloads as W
+from repro.netsim.topology import TwoDCFatTree
+
+
+def _one(scheme: str, n_intra: int, n_inter: int, size: int,
+         horizon: float, seed: int = 2) -> dict:
+    cc, _ = common.scheme_lb(scheme)
+    net = TwoDCFatTree(seed=seed)
+    if cc == "uno":
+        net.attach_phantoms()
+    flows = W.incast(net, n_intra=n_intra, n_inter=n_inter, size=size,
+                     cc_scheme=cc, lb="rps", seed=seed, trace_rate=True)
+    net.sim.run(until=horizon)
+    fcts = [f.fct for f in flows if f.fct is not None]
+    rates = W.bin_rates(flows, 1 * MS, horizon)
+    # fairness over the window where >= 6 flows are active
+    best_j, steady_j = 0.0, None
+    t = 4 * MS
+    while t + 8 * MS < horizon:
+        cur = [W.mean_rate_gbps(rates[f.id], t, t + 8 * MS) for f in flows]
+        if sum(1 for r in cur if r > 0.05) >= min(6, len(flows)):
+            j = W.jain(cur)
+            best_j = max(best_j, j)
+            steady_j = j if steady_j is None else max(steady_j, j)
+        t += 4 * MS
+    return {"fct": common.summarize_ms(fcts),
+            "unfinished": sum(1 for f in flows if f.fct is None),
+            "steady_jain": round(best_j, 3),
+            "drops": net.sim.dropped}
+
+
+def run(quick: bool = True) -> dict:
+    size = 64 * MIB if quick else 1024 * MIB
+    horizon = (400 if quick else 3000) * MS
+    ideal_ms = 8 * size / 12.5 / MS
+    out = {"flow_size_MiB": size // MIB, "ideal_fct_ms": round(ideal_ms, 1)}
+    for tag, (ni, ne) in (("intra8", (8, 0)), ("inter8", (0, 8)),
+                          ("mixed4+4", (4, 4))):
+        out[tag] = {}
+        for scheme in common.SCHEMES:
+            out[tag][scheme] = _one(scheme, ni, ne, size, horizon)
+    common.save("fig8_incast", out)
+    return out

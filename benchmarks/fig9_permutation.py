@@ -1,0 +1,48 @@
+"""Fig 9: permutation workload, as-is (8 WAN links) vs fully-provisioned WAN.
+
+Each selected host sends one flow to a random other host (mix of intra/inter).
+Schemes: Uno (UnoCC+UnoLB), Uno+ECMP, Gemini, MPRDMA+BBR.  The inter-DC links
+are the scarce resource in the as-is topology; with a fully-provisioned WAN
+(64 border links) the gap narrows (paper Fig 9 right).
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from benchmarks.common import MIB, MS
+from repro.netsim import workloads as W
+from repro.netsim.topology import TwoDCFatTree
+
+SCHEMES = ("uno", "uno+ecmp", "gemini", "mprdma+bbr")
+
+
+def _one(scheme: str, n_wan: int, size: int, n_hosts: int, horizon: float,
+         seed: int = 4) -> dict:
+    cc, lb = common.scheme_lb(scheme)
+    net = TwoDCFatTree(seed=seed, n_wan=n_wan)
+    if cc == "uno":
+        net.attach_phantoms()
+    flows = W.permutation(net, size=size, cc_scheme=cc, lb=lb,
+                          ec=(8, 2) if scheme == "uno" else None,
+                          seed=seed, n_hosts=n_hosts)
+    net.sim.run(until=horizon)
+    fcts = [f.fct for f in flows if f.fct is not None]
+    inter = [f.fct for f in flows if f.fct is not None and f.is_inter]
+    intra = [f.fct for f in flows if f.fct is not None and not f.is_inter]
+    return {"fct": common.summarize_ms(fcts),
+            "fct_inter": common.summarize_ms(inter),
+            "fct_intra": common.summarize_ms(intra),
+            "unfinished": sum(1 for f in flows if f.fct is None),
+            "drops": net.sim.dropped}
+
+
+def run(quick: bool = True) -> dict:
+    size = 8 * MIB if quick else 64 * MIB
+    n_hosts = 64 if quick else 256
+    horizon = (400 if quick else 2000) * MS
+    out = {"flow_size_MiB": size // MIB, "n_hosts": n_hosts}
+    for tag, n_wan in (("wan800G", 8), ("wan_full", 64)):
+        out[tag] = {}
+        for scheme in SCHEMES:
+            out[tag][scheme] = _one(scheme, n_wan, size, n_hosts, horizon)
+    common.save("fig9_permutation", out)
+    return out

@@ -1,0 +1,60 @@
+"""Kernel microbenchmarks: RS encode/decode + int8 quant throughput.
+
+On this CPU container the Pallas kernels run in interpret mode, so absolute
+numbers are not TPU numbers; we therefore report (a) wall time of the
+jnp-oracle path (what the dry-run embeds), (b) interpret-mode correctness
+sweep timing, and (c) the analytic VPU-op count per byte of the bit-sliced
+kernel — the quantity the roofline in EXPERIMENTS.md §Perf uses:
+
+  encode (k=8, r=2): per k rows: <=8 xtime steps (4 int ops) shared across
+  parity rows + <=2*8 masked XOR accumulates -> ~*6 int32 vector ops per
+  input byte lane*, i.e. ~0.75 ops/byte/parity-row.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels import ops, ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)                                    # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run(quick: bool = True) -> dict:
+    rng = np.random.default_rng(0)
+    B = 1 << (18 if quick else 22)
+    data = jnp.asarray(rng.integers(0, 256, (8, B), dtype=np.uint8))
+    flat = jnp.asarray(rng.normal(size=B * 4).astype(np.float32))
+
+    enc_ref = jax.jit(lambda d: ref.rs_encode_ref(d, 2))
+    t_enc_ref = _time(enc_ref, data)
+    t_enc_pallas = _time(lambda d: ops.rs_encode(d, 2), data)
+    parity = ops.rs_encode(data, 2)
+    surv = jnp.concatenate([data[2:], parity], 0)
+    t_dec = _time(lambda s: ops.rs_decode(s, 8, 2, (0, 1), (0, 1)), surv)
+    t_q = _time(lambda x: ops.quant_int8(x)[0], flat)
+
+    mb = 8 * B / 1e6
+    out = {
+        "payload_MB": mb,
+        "rs_encode_ref_jnp_MBps": mb / t_enc_ref,
+        "rs_encode_pallas_interp_MBps": mb / t_enc_pallas,
+        "rs_decode_pallas_interp_MBps": mb / t_dec,
+        "quant_int8_MBps": 4 * B / 1e6 / t_q,
+        "analytic_vpu_ops_per_byte_encode": 6.0 / 8.0,
+        "note": "interpret-mode wall times (CPU container); the analytic "
+                "ops/byte is what the TPU roofline uses",
+    }
+    common.save("kernels_bench", out)
+    return out

@@ -1,0 +1,91 @@
+"""Benchmark driver: one module per paper table/figure + kernel microbenches.
+
+  PYTHONPATH=src python -m benchmarks.run            # quick mode (default)
+  PYTHONPATH=src python -m benchmarks.run --full     # paper-scale runs
+  PYTHONPATH=src python -m benchmarks.run --only fig3_fairness fig13_failures
+
+Each module writes results/paper/<name>.json; this driver prints a compact
+summary per benchmark (tee to bench_output.txt for the record).
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import json
+import time
+import traceback
+
+MODULES = [
+    "table1_loss",
+    "fig3_fairness",
+    "fig4_phantom",
+    "fig8_incast",
+    "fig9_permutation",
+    "fig10_load",
+    "fig11_rtt",
+    "fig12_buffers",
+    "fig13_failures",
+    "kernels_bench",
+    "uno_collectives_bench",
+]
+
+
+def _summ(name: str, res: dict) -> str:
+    """One informative line per benchmark."""
+    try:
+        if name == "fig3_fairness":
+            return " | ".join(
+                f"{s}: t_fair={res[s]['time_to_fair_ms']}ms "
+                f"best_jain={res[s]['best_jain']}"
+                for s in ("uno", "gemini", "mprdma+bbr"))
+        if name == "fig4_phantom":
+            return (f"queue mean {res['no_phantom']['queue_mean_KiB']:.0f}KiB "
+                    f"-> {res['with_phantom']['queue_mean_KiB']:.0f}KiB; rpc "
+                    f"mean x{res.get('rpc_mean_improvement_x')} "
+                    f"p99 x{res.get('rpc_p99_improvement_x')}")
+        if name == "fig10_load":
+            keys = [k for k in res if k.startswith("load")]
+            parts = []
+            for k in keys:
+                u = res[k]["uno"]; g = res[k]["gemini"]
+                parts.append(
+                    f"{k}: uno p99 intra/inter="
+                    f"{u['intra']['p99_ms']:.1f}/{u['inter']['p99_ms']:.1f}ms "
+                    f"gemini={g['intra']['p99_ms']:.1f}/{g['inter']['p99_ms']:.1f}ms")
+            return " | ".join(parts)
+        if name == "fig13_failures":
+            a = res["A_border_link_fail"]
+            return (f"A mean-fct: uno+EC={a['unolb+EC']['mean_fct_ms']}ms "
+                    f"unolb={a['unolb']['mean_fct_ms']}ms "
+                    f"rps+EC={a['rps+EC']['mean_fct_ms']}ms "
+                    f"plb+EC={a['plb+EC']['mean_fct_ms']}ms")
+    except Exception:
+        pass
+    return json.dumps(res)[:240]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+    mods = args.only if args.only else MODULES
+    failures = []
+    for name in mods:
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            res = mod.run(quick=not args.full)
+            print(f"[{name}] {time.time() - t0:7.1f}s  {_summ(name, res)}",
+                  flush=True)
+        except Exception as e:
+            failures.append(name)
+            print(f"[{name}] FAILED: {e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+    print("all benchmarks done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Batched serving: prefill + KV-cache decode over queued requests.
+
+  PYTHONPATH=src python examples/serve_batched.py
+"""
+import numpy as np
+
+from repro.configs.base import reduced
+from repro.configs.registry import get_config
+from repro.launch.serve import Request, serve
+
+
+def main() -> None:
+    cfg = reduced(get_config("qwen2.5-3b"), n_layers=4, d_model=256,
+                  n_heads=8, n_kv_heads=2, head_dim=32, d_ff=512, vocab=4096)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab, 48, dtype=np.int32), 24)
+            for i in range(12)]
+    stats = serve(cfg, reqs, batch=4, max_len=48 + 24)
+    print(f"served {stats['requests']} requests / {stats['tokens']} tokens "
+          f"in {stats['wall_s']:.2f}s  ({stats['tok_per_s']:.0f} tok/s)")
+    print(f"TTFT p50 {stats['ttft_p50_ms']:.1f} ms, "
+          f"inter-token p50 {stats['itl_p50_ms']:.2f} ms")
+    assert stats["tokens"] == 12 * 24
+    # greedy decode is deterministic across identical requests
+    print("first completions:", stats["completions"])
+    print("serving example OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Deterministic synthetic data pipeline (host-sharded, prefetching).
+
+Every batch is a pure function of (seed, step) so restarts resume the exact
+data stream — no data-loader state in checkpoints.  `ShardedPipeline` builds
+each global batch directly as a sharded jax.Array (one host callback per
+addressable shard — the same pattern a multi-host input pipeline uses),
+with a background prefetch thread keeping `depth` batches in flight.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def synth_batch(cfg: ModelConfig, step: int, batch: int, seq: int,
+                seed: int = 0) -> dict:
+    """Markov-ish synthetic tokens: learnable structure (not uniform noise)
+    so quickstart loss visibly decreases."""
+    rng = np.random.default_rng(np.uint64(seed * 1_000_003 + step))
+    v = cfg.vocab
+    base = rng.integers(0, v, size=(batch, 1), dtype=np.int32)
+    drift = rng.integers(0, 7, size=(batch, seq), dtype=np.int32)
+    toks = (base + np.cumsum(drift, axis=1)) % v
+    if cfg.input_mode == "embeddings":
+        emb = rng.standard_normal((batch, seq, cfg.d_model)).astype(np.float32)
+        inputs = emb.astype(np.dtype("bfloat16") if cfg.compute_dtype ==
+                            "bfloat16" else np.float32)
+    else:
+        inputs = toks
+    targets = np.roll(toks, -1, axis=1).astype(np.int32)
+    return {"inputs": inputs, "targets": targets}
+
+
+class ShardedPipeline:
+    """Prefetching iterator of sharded global batches."""
+
+    def __init__(self, cfg: ModelConfig, *, batch: int, seq: int,
+                 shardings: Optional[dict] = None, seed: int = 0,
+                 depth: int = 2, start_step: int = 0):
+        self.cfg = cfg
+        self.batch = batch
+        self.seq = seq
+        self.shardings = shardings
+        self.seed = seed
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _make(self, step: int) -> dict:
+        host = synth_batch(self.cfg, step, self.batch, self.seq, self.seed)
+        if self.shardings is None:
+            return {k: jax.numpy.asarray(v) for k, v in host.items()}
+        out = {}
+        for k, v in host.items():
+            sh = self.shardings[k]
+            out[k] = jax.make_array_from_callback(
+                v.shape, sh, lambda idx, vv=v: vv[idx])
+        return out
+
+    def _worker(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self._q.put((self._step, self._make(self._step)), timeout=0.5)
+                self._step += 1
+            except queue.Full:
+                continue
+
+    def __iter__(self) -> Iterator:
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self) -> None:
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2)

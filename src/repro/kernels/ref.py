@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every kernel (the `ref.py` of the kernel contract).
+
+Table-based GF(256) (gathers via jnp.take — correct everywhere, slow on TPU)
+and straightforward quantization math.  tests/test_kernels.py sweeps shapes
+and dtypes asserting the Pallas kernels match these exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import gf
+
+_EXP = jnp.asarray(gf.EXP, jnp.int32)
+_LOG = jnp.asarray(gf.LOG, jnp.int32)
+
+
+def gf_mul_ref(a, b):
+    """Elementwise GF(256) multiply via log/exp tables (uint8-valued int32)."""
+    a = a.astype(jnp.int32)
+    b = b.astype(jnp.int32)
+    la = jnp.take(_LOG, a)
+    lb = jnp.take(_LOG, b)
+    prod = jnp.take(_EXP, la + lb)
+    return jnp.where((a == 0) | (b == 0), 0, prod)
+
+
+def gf_matmul_ref(coeffs, x):
+    """(M,K) uint8 coeff matrix x (K,B) uint8 data -> (M,B) uint8."""
+    c = coeffs.astype(jnp.int32)[:, :, None]        # (M,K,1)
+    d = x.astype(jnp.int32)[None, :, :]             # (1,K,B)
+    prods = gf_mul_ref(jnp.broadcast_to(c, (c.shape[0], d.shape[1], d.shape[2])),
+                       jnp.broadcast_to(d, (c.shape[0], d.shape[1], d.shape[2])))
+    out = prods[:, 0, :]
+    for k in range(1, prods.shape[1]):
+        out = jnp.bitwise_xor(out, prods[:, k, :])
+    return out.astype(jnp.uint8)
+
+
+def rs_encode_ref(data, r: int):
+    """data: (k, B) uint8 -> parity (r, B) uint8 (systematic Vandermonde)."""
+    k = data.shape[0]
+    rows = gf.rs_generator_rows(k, r)
+    coeffs = jnp.asarray(np.array(rows, dtype=np.uint8))
+    return gf_matmul_ref(coeffs, data)
+
+
+def rs_decode_ref(survivors, k: int, r: int, missing: tuple[int, ...],
+                  parity_avail: tuple[int, ...]):
+    """survivors: (n_sur, B) uint8 in gf.rs_decode_matrix order -> missing
+    data rows (m, B) uint8."""
+    C = gf.rs_decode_matrix(k, r, tuple(missing), tuple(parity_avail))
+    coeffs = jnp.asarray(np.array(C, dtype=np.uint8))
+    return gf_matmul_ref(coeffs, survivors)
+
+
+# ----------------------------------------------------------------- int8 quant
+
+def quant_int8_ref(x, block: int = 256):
+    """Blockwise absmax int8 quantization.  x: (..., N) with N % block == 0.
+    Returns (q int8 same shape, scales f32 (..., N/block))."""
+    shape = x.shape
+    xb = x.astype(jnp.float32).reshape(shape[:-1] + (shape[-1] // block, block))
+    amax = jnp.max(jnp.abs(xb), axis=-1)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(xb / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(shape), scale
+
+
+def dequant_int8_ref(q, scale, block: int = 256, dtype=jnp.float32):
+    shape = q.shape
+    qb = q.astype(jnp.float32).reshape(shape[:-1] + (shape[-1] // block, block))
+    out = qb * scale[..., None]
+    return out.reshape(shape).astype(dtype)

@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax import: jax locks the device count on first init.
+# The dry-run is the ONLY entry point that forces 512 placeholder devices.
+
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:  jax.jit(step, in/out shardings).lower(**ShapeDtypeStructs)
+.compile(), then record memory_analysis / cost_analysis / collective traffic
+(parsed from the partitioned HLO) into a JSON the roofline table reads.
+
+Usage:
+  python -m repro.launch.dryrun --arch granite-8b --shape train_4k [--multipod]
+  python -m repro.launch.dryrun --all            # every cell, subprocess each
+"""
+
+import argparse
+import json
+import math
+import pathlib
+import subprocess
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import models, sharding, train
+from repro.configs.base import SHAPES, RunConfig
+from repro.configs.registry import ARCH_IDS, cell_supported, get_config
+from repro.launch import hlo_analysis, hlo_costs
+from repro.launch.mesh import make_production_mesh
+from repro.models import api as model_api
+
+RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _cell_rules(shape, cfg=None):
+    rules = {}
+    if cfg is not None:
+        rules.update(sharding.profile_rules(cfg))
+    # long_500k: batch=1 -> shard the KV/state cache over `data` on the
+    # sequence dim instead of the (unshardable) batch dim.
+    if shape.name == "long_500k":
+        rules.update({"seq_kv": ("data",), "kv_batch": ()})
+    return rules
+
+
+def analytic_model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference),
+    plus attention quadratic terms (causal-halved)."""
+    defs = models.param_defs(cfg)
+    flat = jax.tree.leaves(defs, is_leaf=model_api.is_def)
+    n_total = sum(math.prod(d.shape) for d in flat)
+    # active fraction for MoE expert weights
+    n_active = 0
+    for path, d in _flat_items(defs):
+        n = math.prod(d.shape)
+        if "embed" in path:
+            continue
+        if cfg.n_experts and ("w_gate" in path or "w_up" in path or "w_down" in path) \
+                and len(d.shape) >= 3 and d.shape[-3] == cfg.n_experts or \
+                (cfg.n_experts and d.shape[1:2] == (cfg.n_experts,)):
+            n = n * cfg.top_k / cfg.n_experts
+        n_active += n
+    B, S = shape.global_batch, shape.seq_len
+    n_attn = cfg.n_layers if cfg.n_heads else 0
+    if cfg.family == "hybrid":
+        n_attn = cfg.n_layers // cfg.attn_period
+    if shape.kind == "train":
+        tokens = B * S
+        return 6 * n_active * tokens + 6 * n_attn * B * S * S * cfg.q_dim
+    if shape.kind == "prefill":
+        tokens = B * S
+        return 2 * n_active * tokens + 2 * n_attn * B * S * S * cfg.q_dim
+    # decode: one token vs KV of S
+    return 2 * n_active * B + 4 * n_attn * B * S * cfg.q_dim
+
+
+def _flat_items(defs, prefix=""):
+    if isinstance(defs, dict):
+        for k, v in defs.items():
+            yield from _flat_items(v, f"{prefix}/{k}")
+    else:
+        yield prefix, defs
+
+
+def _shardings_for(tree_specs, mesh):
+    return sharding.spec_tree_to_shardings(mesh, tree_specs)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool, uno: bool = False):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                "skipped": True, "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = math.prod(mesh.devices.shape)
+    rules = _cell_rules(shape, cfg)
+    if cfg.fsdp_over_pod:
+        rules["fsdp"] = ("pod", "data")
+    run = RunConfig(uno_enabled=uno)
+
+    t0 = time.time()
+    with sharding.use_mesh(mesh, rules):
+        if shape.kind == "train":
+            state = train.make_train_state(cfg, abstract=True)
+            sspecs = train.state_pspecs(cfg)
+            batch = models.train_input_specs(cfg, shape)
+            bspecs = train.batch_pspecs(cfg, batch)
+            uno_sync = None
+            if uno:
+                from repro.core.uno_collectives import make_uno_grad_sync
+                uno_sync = make_uno_grad_sync(mesh, cfg, run)
+            step = train.make_train_step(cfg, run, uno_sync=uno_sync,
+                                         mesh=mesh)
+            jitted = jax.jit(
+                step,
+                in_shardings=(_shardings_for(sspecs, mesh),
+                              _shardings_for(bspecs, mesh), None),
+                out_shardings=(_shardings_for(sspecs, mesh), None),
+                donate_argnums=(0,))
+            lowered = jitted.lower(state, batch,
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+        elif shape.kind == "prefill":
+            pspecs = models.param_pspecs(cfg)
+            params = models.abstract_params(cfg)
+            inputs = models.prefill_input_specs(cfg, shape)
+            ispec = train.batch_pspecs(cfg, inputs)
+            step = train.make_prefill_step(cfg, shape.seq_len)
+            jitted = jax.jit(step,
+                             in_shardings=(_shardings_for(pspecs, mesh),
+                                           _shardings_for(ispec, mesh)))
+            lowered = jitted.lower(params, inputs)
+        else:  # decode
+            pspecs = models.param_pspecs(cfg)
+            params = models.abstract_params(cfg)
+            cache = models.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+            cspecs = models.cache_pspecs(cfg, shape.global_batch, shape.seq_len)
+            inputs = models.decode_input_specs(cfg, shape)
+            ispec = train.batch_pspecs(cfg, inputs)
+            step = train.make_decode_step(cfg)
+            jitted = jax.jit(step,
+                             in_shardings=(_shardings_for(pspecs, mesh),
+                                           _shardings_for(cspecs, mesh),
+                                           _shardings_for(ispec, mesh), None),
+                             out_shardings=(None, _shardings_for(cspecs, mesh)),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params, cache, inputs,
+                                   jax.ShapeDtypeStruct((), jnp.int32))
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    # ---- analyses
+    rec = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+           "uno": uno, "chips": chips, "skipped": False,
+           "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1)}
+    try:
+        ma = compiled.memory_analysis()
+        print(ma)
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                rec[attr] = int(v)
+    except Exception as e:  # CPU backend may not support it
+        rec["memory_analysis_error"] = str(e)
+    try:
+        ca = compiled.cost_analysis()
+        print({k: v for k, v in ca.items() if "flops" in k or "bytes" in k})
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        rec["hlo_flops"] = float(ca.get("flops", 0.0))
+        rec["hlo_bytes"] = float(ca.get("bytes accessed", 0.0))
+        rec["hlo_transcendentals"] = float(ca.get("transcendentals", 0.0))
+    except Exception as e:
+        rec["cost_analysis_error"] = str(e)
+
+    pod_size = 256
+    text = compiled.as_text()
+    # Loop-aware per-device cost model (XLA cost_analysis counts scan bodies
+    # once; see hlo_costs docstring).
+    costs = hlo_costs.analyze(text, pod_size=pod_size)
+    rec["costs"] = costs
+    rec["model_flops"] = analytic_model_flops(get_config(arch), SHAPES[shape_name])
+
+    # analytic parameter/state bytes per device (HBM budget sanity)
+    defs = models.param_defs(get_config(arch))
+    rec["param_bytes_total"] = model_api.param_bytes(defs)
+    rec["param_count"] = model_api.param_count(defs)
+
+    terms = hlo_analysis.roofline_terms(
+        costs["flops"], costs["hbm_bytes"], costs["collective_bytes"], chips)
+    rec["roofline"] = terms
+    rec["useful_flops_ratio"] = (
+        rec["model_flops"] / (costs["flops"] * chips) if costs["flops"] else None)
+    return rec
+
+
+def write_result(rec, out_dir: pathlib.Path):
+    out_dir.mkdir(parents=True, exist_ok=True)
+    tag = "multipod" if rec["multi_pod"] else "pod"
+    if rec.get("uno"):
+        tag += "-uno"
+    path = out_dir / f"{rec['arch']}__{rec['shape']}__{tag}.json"
+    path.write_text(json.dumps(rec, indent=1))
+    print("wrote", path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--uno", action="store_true",
+                    help="lower the Uno cross-pod grad-sync train step")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+    out_dir = pathlib.Path(args.out)
+
+    if args.all:
+        failures = []
+        for arch in ARCH_IDS:
+            for shape_name in SHAPES:
+                for mp in (False, True):
+                    tag = "multipod" if mp else "pod"
+                    dest = out_dir / f"{arch}__{shape_name}__{tag}.json"
+                    if dest.exists():
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape_name,
+                           "--out", str(out_dir)] + (["--multipod"] if mp else [])
+                    print(">>", " ".join(cmd), flush=True)
+                    r = subprocess.run(cmd)
+                    if r.returncode != 0:
+                        failures.append((arch, shape_name, mp))
+        if failures:
+            print("FAILED CELLS:", failures)
+            sys.exit(1)
+        print("all cells done")
+        return
+
+    rec = lower_cell(args.arch, args.shape, args.multipod, uno=args.uno)
+    write_result(rec, out_dir)
+
+
+if __name__ == "__main__":
+    main()

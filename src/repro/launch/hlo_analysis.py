@@ -1,0 +1,132 @@
+"""Parse lowered/compiled HLO text for collective traffic (roofline §collective).
+
+cost_analysis() has no collective-bytes entry, so we sum operand/result sizes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute in the (SPMD, per-device-shape) module, converting to
+bytes-moved-per-device with standard ring estimates:
+
+  all-gather        result * (G-1)/G         (receives everyone else's shard)
+  reduce-scatter    result * (G-1)            (ring pass of full operand)
+  all-reduce        2 * result * (G-1)/G      (RS + AG phases)
+  all-to-all        result * (G-1)/G
+  collective-permute result                   (point-to-point)
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(?P<ty>[a-z0-9]+)\[(?P<dims>[0-9,]*)\][^ ]*)\s*"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_TUPLE_TY_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_SRC_TGT_RE = re.compile(r"source_target_pairs=\{\{")
+
+
+def _shape_bytes(ty: str, dims: str) -> int:
+    n = math.prod(int(d) for d in dims.split(",") if d) if dims else 1
+    return n * _DTYPE_BYTES.get(ty, 4)
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _group_span(line: str, pod_size: int) -> bool:
+    """True if any replica group crosses the pod boundary (device//pod_size)."""
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",")]
+        return len({i // pod_size for i in ids}) > 1
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        n_groups, g = int(m.group(1)), int(m.group(2))
+        # iota groups [n,g]<=[N]: group k = {k*g .. k*g+g-1} unless a transpose
+        # suffix reorders; conservative: crossing iff a contiguous group spans.
+        return g > pod_size or (g * n_groups > pod_size and g > 1 and
+                                "T(" in line)
+    return False
+
+
+def analyze_collectives(hlo_text: str, pod_size: int = 256) -> dict:
+    """Returns {'total_bytes', 'by_op', 'dci_bytes', 'count'} per device."""
+    by_op: dict[str, float] = defaultdict(float)
+    dci = 0.0
+    count = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        op = m.group("op")
+        if m.group("ty"):
+            size = _shape_bytes(m.group("ty"), m.group("dims"))
+        else:  # tuple result: sum element shapes from the leading (...) group
+            paren = line.split("=", 1)[1].split(op)[0]
+            size = sum(_shape_bytes(t, d) for t, d in _TUPLE_TY_RE.findall(paren))
+        g = _group_size(line)
+        if op == "all-gather":
+            moved = size * (g - 1) / g
+        elif op == "reduce-scatter":
+            moved = size * (g - 1)
+        elif op == "all-reduce":
+            moved = 2 * size * (g - 1) / g
+        elif op == "all-to-all":
+            moved = size * (g - 1) / g
+        else:  # collective-permute
+            moved = size
+        by_op[op] += moved
+        if _group_span(line, pod_size) or (op == "collective-permute"
+                                           and _cp_crosses(line, pod_size)):
+            dci += moved
+        count += 1
+    return {"total_bytes": float(sum(by_op.values())),
+            "by_op": dict(by_op), "dci_bytes": float(dci), "count": count}
+
+
+def _cp_crosses(line: str, pod_size: int) -> bool:
+    m = re.search(r"source_target_pairs=\{([^}]*(?:\},\{[^}]*)*)\}\}", line)
+    if not m:
+        return False
+    pairs = re.findall(r"\{(\d+),(\d+)\}", line)
+    return any(int(a) // pod_size != int(b) // pod_size for a, b in pairs)
+
+
+# ------------------------------------------------------------ roofline terms
+
+V5E = {
+    "peak_flops": 197e12,      # bf16 / chip
+    "hbm_bw": 819e9,           # bytes/s / chip
+    "ici_bw": 50e9,            # bytes/s / link (assignment constant)
+    "hbm_bytes": 16 * 2**30,
+}
+
+
+def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
+                   chips: int, *, per_device: bool = True) -> dict:
+    """Three roofline terms in seconds.  flops/hbm_bytes are whole-module
+    (cost_analysis is per-device-program on SPMD, i.e. already per device —
+    set per_device accordingly)."""
+    div = 1 if per_device else chips
+    t_compute = flops / div / V5E["peak_flops"]
+    t_memory = hbm_bytes / div / V5E["hbm_bw"]
+    t_coll = coll_bytes / V5E["ici_bw"]   # coll_bytes is per-device by design
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    return {"t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant}

@@ -1,0 +1,290 @@
+"""While-loop-aware HLO cost model (flops / HBM bytes / collective bytes).
+
+XLA's `compiled.cost_analysis()` counts each while-loop body ONCE — with
+scan-over-layers models that under-counts by the trip count.  This module
+parses the partitioned (per-device-shape) HLO text, extracts while trip
+counts, and accumulates per-computation costs with loop multipliers:
+
+  flops            2 * |result| * contraction  for every dot (incl. in fusions)
+  hbm_bytes        operands + result of top-level (non-fusion-interior) ops
+  collective bytes ring estimates per op type (see COLLECTIVE_FACTORS)
+
+These are deterministic, documented estimates — the "profile" of the dry-run
+(no real TPU wall clock exists here).  All numbers are PER DEVICE because the
+partitioned module is a per-device program.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+# op kind = first lowercase word followed by '(' (skips types like f32[..],
+# /*index=N*/ comments, and S(5) memory-space annotations)
+_OP_RE = re.compile(r"(?:^|[\s/])([a-z][\w\-]*)\(")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_CALL_ATTR_RE = re.compile(r"(?:body|condition|calls|to_apply|branch_computations)="
+                           r"\{?(%[\w.\-]+(?:,\s*%[\w.\-]+)*)\}?")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{")
+_PARAM_RE = re.compile(r"\(([^)]*)\)\s*->")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def _parse_shapes(type_str: str) -> list[tuple[str, int]]:
+    """All (dtype, elems) pairs in a type string (handles tuples)."""
+    out = []
+    for ty, dims in _SHAPE_RE.findall(type_str):
+        if ty not in _DTYPE_BYTES:
+            continue
+        n = math.prod(int(d) for d in dims.split(",") if d) if dims else 1
+        out.append((ty, n))
+    return out
+
+
+def _bytes_of(type_str: str) -> int:
+    return sum(_DTYPE_BYTES[ty] * n for ty, n in _parse_shapes(type_str))
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    operands: list[str]
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: dict[str, Op] = field(default_factory=dict)
+    order: list[str] = field(default_factory=list)
+    callees: list[tuple[str, str]] = field(default_factory=list)  # (kind, name)
+    is_entry: bool = False
+
+
+def parse_module(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not raw.startswith(" ") and "{" in line and "->" in line:
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group(1), is_entry=line.strip().startswith("ENTRY"))
+                comps[cur.name] = cur
+                continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        om = _OP_RE.search(rest)
+        if not om:
+            continue
+        kind = om.group(1)
+        result_type = rest[: om.start()].strip().rstrip("/* ")
+        # operand names: %refs inside the (...) right after the op name
+        args_start = om.end()
+        depth, i = 1, args_start
+        while i < len(rest) and depth:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        operands = re.findall(r"%([\w.\-]+)", rest[args_start:i - 1])
+        op = Op(name, kind, result_type, operands, line)
+        cur.ops[name] = op
+        cur.order.append(name)
+        for cm in _CALL_ATTR_RE.finditer(rest):
+            for ref in re.findall(r"%([\w.\-]+)", cm.group(1)):
+                attr = cm.group(0).split("=")[0]
+                cur.callees.append((attr, ref))
+    return comps
+
+
+def _trip_count(cond: Computation, while_line: str = "") -> int:
+    m = _TRIP_RE.search(while_line)     # XLA annotates known_trip_count
+    if m:
+        return int(m.group(1))
+    consts = [int(c) for op in cond.ops.values()
+              for c in _CONST_RE.findall(op.line)]
+    return max(consts) if consts else 1
+
+
+def _multipliers(comps: dict[str, Computation]) -> dict[str, float]:
+    mult: dict[str, float] = defaultdict(float)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        return {c: 1.0 for c in comps}
+    fusion_interior: set[str] = set()
+
+    def visit(comp: Computation, m: float):
+        mult[comp.name] += m
+        for op in comp.ops.values():
+            trip = 1.0
+            body = cond = None
+            for cm in _CALL_ATTR_RE.finditer(op.line):
+                attr = cm.group(0).split("=")[0]
+                refs = re.findall(r"%([\w.\-]+)", cm.group(1))
+                if attr == "body":
+                    body = refs[0]
+                elif attr == "condition":
+                    cond = refs[0]
+                elif attr in ("calls", "to_apply", "branch_computations"):
+                    for r in refs:
+                        if r in comps and mult[r] == 0.0:
+                            if op.kind == "fusion":
+                                fusion_interior.add(r)
+                            visit(comps[r], m)
+            if body and body in comps:
+                if cond and cond in comps:
+                    trip = _trip_count(comps[cond], op.line)
+                    visit(comps[cond], m * trip)
+                visit(comps[body], m * trip)
+
+    visit(entry, 1.0)
+    _multipliers.fusion_interior = fusion_interior  # type: ignore[attr-defined]
+    return dict(mult)
+
+
+# HBM-traffic proxy: count operand+result bytes only for ops that force
+# buffer materialization on TPU (dots, fusions, data movement, collectives).
+# Bare elementwise ops in the CPU-compiled module would be fused on TPU, so
+# counting them would double-bill the same bytes.
+_COUNT_BYTES = {"dot", "fusion", "custom-call", "copy", "dynamic-slice",
+                "dynamic-update-slice", "gather", "scatter", "reduce",
+                "reduce-window", "sort", "convolution", "pad", "concatenate",
+                "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute", "transpose", "reshape"}
+
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2
+
+
+def _crosses_pod(line: str, pod_size: int) -> bool:
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        ids = [int(x) for x in m.group(1).split(",")]
+        if len({i // pod_size for i in ids}) > 1:
+            return True
+    m = _IOTA_GROUPS_RE.search(line)
+    if m and int(m.group(2)) > pod_size:
+        return True
+    pairs = re.findall(r"\{(\d+),(\d+)\}", line.split("source_target_pairs=")[-1]) \
+        if "source_target_pairs" in line else []
+    return any(int(a) // pod_size != int(b) // pod_size for a, b in pairs)
+
+
+def analyze(text: str, pod_size: int = 256) -> dict:
+    comps = parse_module(text)
+    mult = _multipliers(comps)
+    fusion_interior = getattr(_multipliers, "fusion_interior", set())
+
+    flops = 0.0
+    hbm_bytes = 0.0
+    coll_bytes = 0.0
+    coll_by_op: dict[str, float] = defaultdict(float)
+    dci_bytes = 0.0
+    coll_count = 0
+
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            continue
+        top_level = comp.name not in fusion_interior
+        for op in comp.ops.values():
+            # ---- flops: dot ops (anywhere, incl. fusion interiors)
+            if op.kind == "dot":
+                shapes = _parse_shapes(op.result_type)
+                if shapes:
+                    res_elems = sum(n for _, n in shapes)
+                    cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+                    contract = 1
+                    if cdims and op.operands:
+                        lhs = comp.ops.get(op.operands[0])
+                        if lhs:
+                            lshapes = _SHAPE_RE.findall(lhs.result_type)
+                            if lshapes:
+                                dims = [int(d) for d in lshapes[0][1].split(",") if d]
+                                for ci in cdims.group(1).split(","):
+                                    if ci and int(ci) < len(dims):
+                                        contract *= dims[int(ci)]
+                    flops += m * 2.0 * res_elems * contract
+            elif op.kind == "convolution":
+                shapes = _parse_shapes(op.result_type)
+                if shapes:
+                    flops += m * 2.0 * shapes[0][1] * 64  # coarse (unused path)
+
+            # ---- HBM bytes: top-level op operand+result traffic
+            if top_level and op.kind in _COUNT_BYTES:
+                b = _bytes_of(op.result_type)
+                for oname in op.operands:
+                    src = comp.ops.get(oname)
+                    if src is not None:
+                        b += _bytes_of(src.result_type)
+                hbm_bytes += m * b
+
+            # ---- collectives
+            base_kind = op.kind.replace("-start", "").replace("-done", "")
+            if base_kind in COLLECTIVE_OPS and not op.kind.endswith("-done"):
+                shapes = _parse_shapes(op.result_type)
+                if op.kind.endswith("-start") and len(shapes) > 1:
+                    size = _DTYPE_BYTES[shapes[-1][0]] * shapes[-1][1]
+                else:
+                    size = sum(_DTYPE_BYTES[t] * n for t, n in shapes)
+                g = _group_size(op.line)
+                if base_kind == "all-gather":
+                    moved = size * (g - 1) / g
+                elif base_kind == "reduce-scatter":
+                    moved = size * (g - 1)
+                elif base_kind == "all-reduce":
+                    moved = 2 * size * (g - 1) / g
+                elif base_kind == "all-to-all":
+                    moved = size * (g - 1) / g
+                else:
+                    moved = size
+                coll_bytes += m * moved
+                coll_by_op[base_kind] += m * moved
+                coll_count += 1
+                if _crosses_pod(op.line, pod_size):
+                    dci_bytes += m * moved
+
+    return {
+        "flops": flops,
+        "hbm_bytes": hbm_bytes,
+        "collective_bytes": coll_bytes,
+        "collective_by_op": dict(coll_by_op),
+        "dci_bytes": dci_bytes,
+        "collective_sites": coll_count,
+        "n_computations": len(comps),
+    }

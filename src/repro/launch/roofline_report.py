@@ -1,0 +1,99 @@
+"""Aggregate results/dryrun/*.json into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m repro.launch.roofline_report [--md]
+
+Per (arch x shape) single-pod cell: the three roofline terms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS usefulness ratio, per-chip HBM need; plus
+the multipod DCI summary and the hillclimb candidate ranking (worst
+roofline fraction / most collective-bound / most Uno-representative).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(tag: str) -> dict:
+    out = {}
+    for p in sorted(RESULTS.glob(f"*__{tag}.json")):
+        rec = json.loads(p.read_text())
+        out[(rec["arch"], rec["shape"])] = rec
+    return out
+
+
+def fraction(rec) -> float | None:
+    """Roofline fraction: ideal compute time / achievable step time where
+    ideal = MODEL_FLOPS/(chips*peak) and achievable = max of the 3 terms."""
+    r = rec.get("roofline")
+    if not r or rec.get("skipped"):
+        return None
+    ideal = rec["model_flops"] / (rec["chips"] * 197e12)
+    bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+    return ideal / bound if bound else None
+
+
+def row(rec) -> dict:
+    r = rec["roofline"]
+    c = rec["costs"]
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "t_compute_s": r["t_compute_s"], "t_memory_s": r["t_memory_s"],
+        "t_collective_s": r["t_collective_s"], "dominant": r["dominant"],
+        "model_flops": rec["model_flops"],
+        "useful_ratio": rec.get("useful_flops_ratio"),
+        "roofline_fraction": fraction(rec),
+        "collective_GB": c["collective_bytes"] / 1e9,
+        "dci_GB": c.get("dci_bytes", 0.0) / 1e9,
+        "hbm_arg_GB": rec.get("argument_size_in_bytes", 0) / 2**30 / rec["chips"],
+        "temp_GB_per_chip": rec.get("temp_size_in_bytes", 0) / 2**30 / rec["chips"],
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    pod = load("pod")
+    multi = load("multipod")
+
+    rows = [row(r) for r in pod.values() if not r.get("skipped")]
+    rows.sort(key=lambda x: (x["arch"], SHAPE_ORDER.index(x["shape"])))
+
+    hdr = ("| arch | shape | t_comp (s) | t_mem (s) | t_coll (s) | dominant "
+           "| MODEL/HLO | roofline frac |")
+    sep = "|" + "---|" * 8
+    print(hdr)
+    print(sep)
+    for x in rows:
+        print(f"| {x['arch']} | {x['shape']} | {x['t_compute_s']:.3g} "
+              f"| {x['t_memory_s']:.3g} | {x['t_collective_s']:.3g} "
+              f"| **{x['dominant']}** | "
+              f"{(x['useful_ratio'] or 0):.2f} | "
+              f"{(x['roofline_fraction'] or 0) * 100:.1f}% |")
+
+    live = [x for x in rows if x["roofline_fraction"] is not None]
+    worst = sorted(live, key=lambda x: x["roofline_fraction"])[:5]
+    coll = sorted(live, key=lambda x: -x["t_collective_s"] /
+                  max(x["t_compute_s"] + x["t_memory_s"], 1e-12))[:5]
+    print("\n### hillclimb candidates")
+    print("worst roofline fraction:",
+          [(x["arch"], x["shape"],
+            f"{x['roofline_fraction'] * 100:.2f}%") for x in worst])
+    print("most collective-bound:",
+          [(x["arch"], x["shape"], f"{x['t_collective_s']:.3g}s coll vs "
+            f"{max(x['t_compute_s'], x['t_memory_s']):.3g}s next")
+           for x in coll])
+
+    n_multi_ok = sum(1 for r in multi.values() if not r.get("skipped"))
+    n_multi_skip = sum(1 for r in multi.values() if r.get("skipped"))
+    print(f"\nmultipod cells compiled: {n_multi_ok} "
+          f"(+{n_multi_skip} documented skips)")
+
+
+if __name__ == "__main__":
+    main()

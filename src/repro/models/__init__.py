@@ -1,0 +1,87 @@
+"""Uniform model API: family dispatch + ShapeDtypeStruct input specs per cell."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import api, hybrid, ssm, transformer
+
+
+def _mod(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe"):
+        return transformer
+    if cfg.family == "ssm":
+        return ssm
+    if cfg.family == "hybrid":
+        return hybrid
+    raise ValueError(cfg.family)
+
+
+def param_defs(cfg):
+    return _mod(cfg).param_defs(cfg)
+
+
+def init_params(rng, cfg):
+    return api.init_params(rng, param_defs(cfg))
+
+
+def abstract_params(cfg):
+    return api.abstract_params(param_defs(cfg))
+
+
+def param_pspecs(cfg):
+    return api.param_pspecs(param_defs(cfg))
+
+
+def loss_fn(params, batch, cfg):
+    return _mod(cfg).loss_fn(params, batch, cfg)
+
+
+def prefill(params, inputs, cfg, max_len):
+    return _mod(cfg).prefill(params, inputs, cfg, max_len)
+
+
+def decode_step(params, cache, inputs, pos, cfg):
+    return _mod(cfg).decode_step(params, cache, inputs, pos, cfg)
+
+
+def cache_defs(cfg, batch, max_len):
+    return _mod(cfg).cache_defs(cfg, batch, max_len)
+
+
+def abstract_cache(cfg, batch, max_len):
+    return api.abstract_params(cache_defs(cfg, batch, max_len))
+
+
+def cache_pspecs(cfg, batch, max_len):
+    return api.param_pspecs(cache_defs(cfg, batch, max_len))
+
+
+# ---------------------------------------------------------------- input specs
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """ShapeDtypeStruct stand-ins for one global training batch."""
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "embeddings":   # audio/vlm frontend stubs (assignment)
+        inputs = jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        inputs = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    return {"inputs": inputs, "targets": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    """One-token decode inputs against a KV cache of shape.seq_len."""
+    B = shape.global_batch
+    if cfg.input_mode == "embeddings":
+        inputs = jax.ShapeDtypeStruct((B, 1, cfg.d_model), jnp.bfloat16)
+    else:
+        inputs = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    return inputs
+
+
+def prefill_input_specs(cfg: ModelConfig, shape: ShapeSpec):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.input_mode == "embeddings":
+        return jax.ShapeDtypeStruct((B, S, cfg.d_model), jnp.bfloat16)
+    return jax.ShapeDtypeStruct((B, S), jnp.int32)

@@ -1,0 +1,75 @@
+"""Parameter metadata + materialization shared by every model family.
+
+Each model defines a pytree of `ParamDef` (shape + logical sharding axes +
+init).  From that we derive, without duplication:
+  - `init_params(rng)`        : materialized arrays (CPU smoke tests / training)
+  - `abstract_params()`       : ShapeDtypeStructs (dry-run, no allocation)
+  - `param_pspecs()`          : PartitionSpec tree under the active mesh
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[Optional[str], ...]          # logical axis per dim
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"                     # normal | zeros | ones
+    scale: Optional[float] = None            # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _materialize(key, d: ParamDef):
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, d.dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, d.dtype)
+    scale = d.scale
+    if scale is None:
+        fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+        scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(d.dtype)
+
+
+def init_params(rng, defs):
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(rng, len(leaves))
+    return jax.tree.unflatten(treedef, [_materialize(k, d) for k, d in zip(keys, leaves)])
+
+
+def abstract_params(defs):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_def
+    )
+
+
+def param_pspecs(defs):
+    return jax.tree.map(lambda d: sharding.resolve(*d.axes, shape=d.shape),
+                        defs, is_leaf=is_def)
+
+
+def param_count(defs) -> int:
+    return sum(math.prod(d.shape) for d in jax.tree.leaves(defs, is_leaf=is_def))
+
+
+def param_bytes(defs) -> int:
+    return sum(
+        math.prod(d.shape) * jnp.dtype(d.dtype).itemsize
+        for d in jax.tree.leaves(defs, is_leaf=is_def)
+    )

@@ -1,0 +1,156 @@
+"""Jamba-style hybrid: 1 attention layer per `attn_period`, rest Mamba(SSD);
+every layer followed by an FFN that alternates dense / MoE (`moe_every`).
+
+Scan is over *periods* (stacked params per in-period position); the 8-layer
+period body is unrolled, keeping HLO compact (8 bodies x 9 scan steps for
+jamba-1.5-large's 72 layers).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.layers import chunked_softmax_xent, mlp, rms_norm
+from repro.models.mamba2 import (mamba_block, mamba_cache_defs,
+                                 mamba_decode_step, mamba_param_defs)
+from repro.models.moe import moe_ffn, moe_param_defs
+from repro.models.transformer import (attention_block, attention_decode_block,
+                                      attn_param_defs, mlp_param_defs)
+from repro.sharding import shard
+
+F32 = jnp.float32
+
+
+def _n_periods(cfg):
+    assert cfg.n_layers % cfg.attn_period == 0
+    return cfg.n_layers // cfg.attn_period
+
+
+def _is_moe(cfg, pos: int) -> bool:
+    return cfg.n_experts > 0 and (pos % cfg.moe_every == 1)
+
+
+def param_defs(cfg):
+    NP = _n_periods(cfg)
+    layers = {}
+    for pos in range(cfg.attn_period):
+        entry = {}
+        if pos == 0:
+            entry["attn"] = attn_param_defs(cfg, NP)
+        else:
+            entry["mamba"] = mamba_param_defs(cfg, NP)
+        if _is_moe(cfg, pos):
+            entry["ffn"] = moe_param_defs(cfg, NP, cfg.d_ff_expert)
+        else:
+            entry["ffn"] = mlp_param_defs(cfg, NP, cfg.d_ff)
+        layers[f"pos{pos}"] = entry
+    return {
+        "layers": layers,
+        "embed": api.ParamDef((cfg.vocab, cfg.d_model), ("vocab", "fsdp"), scale=1.0),
+        "final_norm": api.ParamDef((cfg.d_model,), (None,), init="ones"),
+        "lm_head": api.ParamDef((cfg.d_model, cfg.vocab), ("fsdp", "vocab")),
+    }
+
+
+def _embed(params, tokens, cfg):
+    h = jnp.take(params["embed"], tokens, axis=0).astype(cfg.cdtype())
+    return shard(h, "batch", None, None)
+
+
+def _ffn(h, p, cfg, pos):
+    hn = rms_norm(h, p["norm"], cfg.norm_eps)
+    if _is_moe(cfg, pos):
+        return h + moe_ffn(hn, p, cfg, cfg.d_ff_expert)
+    return h + mlp(hn, p, cfg.act)
+
+
+def forward(params, tokens, cfg, *, collect_state=False):
+    h = _embed(params, tokens, cfg)
+    B, S = h.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def body(carry, pp):
+        h = carry
+        kv = None
+        convs, ssms = [], []
+        for pos in range(cfg.attn_period):
+            p = pp[f"pos{pos}"]
+            if pos == 0:
+                h, kv = attention_block(h, p["attn"], cfg, positions=positions)
+            else:
+                if collect_state:
+                    h, (ct, st) = mamba_block(h, p["mamba"], cfg, return_state=True)
+                    convs.append(ct)
+                    ssms.append(st)
+                else:
+                    h = mamba_block(h, p["mamba"], cfg)
+            h = _ffn(h, p["ffn"], cfg, pos)
+        if collect_state:
+            return h, (kv, jnp.stack(convs), jnp.stack(ssms))
+        return h, None
+
+    if cfg.remat_policy != "none":
+        body = jax.checkpoint(body)
+    h, states = jax.lax.scan(body, h, params["layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return (h, states) if collect_state else h
+
+
+def loss_fn(params, batch, cfg):
+    h = forward(params, batch["inputs"], cfg)
+    return chunked_softmax_xent(h, params["lm_head"], batch["targets"])
+
+
+def cache_defs(cfg, batch: int, max_len: int):
+    NP = _n_periods(cfg)
+    n_mamba = cfg.attn_period - 1
+    kv_shape = (NP, batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+    kv_axes = (None, "kv_batch", "seq_kv", "tensor", None)
+    m = mamba_cache_defs(cfg, n_mamba, batch)
+    out = {"k": api.ParamDef(kv_shape, kv_axes, init="zeros"),
+           "v": api.ParamDef(kv_shape, kv_axes, init="zeros")}
+    for name, d in m.items():
+        out[name] = api.ParamDef((NP,) + d.shape, (None,) + d.axes, d.dtype,
+                                 init="zeros")
+    return out
+
+
+def prefill(params, tokens, cfg, max_len: int):
+    h, (ks_vs, convs, ssms) = forward(params, tokens, cfg, collect_state=True)
+    ks, vs = ks_vs
+    S = tokens.shape[1]
+    pad = max_len - S
+    if pad:
+        ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    logits = (h[:, -1] @ params["lm_head"]).astype(F32)
+    cache = {"k": ks, "v": vs, "conv": convs, "ssm": ssms}
+    return logits, cache, jnp.int32(S)
+
+
+def decode_step(params, cache, tokens, pos, cfg):
+    h = _embed(params, tokens, cfg)
+
+    def body(carry, xs):
+        h = carry
+        pp, kc, vc, conv_p, ssm_p = xs
+        new_convs, new_ssms = [], []
+        for i in range(cfg.attn_period):
+            p = pp[f"pos{i}"]
+            if i == 0:
+                h, kc, vc = attention_decode_block(h, p["attn"], cfg, kc, vc, pos)
+            else:
+                h, (nc, ns) = mamba_decode_step(
+                    h, (conv_p[i - 1], ssm_p[i - 1]), p["mamba"], cfg)
+                new_convs.append(nc)
+                new_ssms.append(ns)
+            h = _ffn(h, p["ffn"], cfg, i)
+        return h, (kc, vc, jnp.stack(new_convs), jnp.stack(new_ssms))
+
+    h, (ks, vs, convs, ssms) = jax.lax.scan(
+        body, h, (params["layers"], cache["k"], cache["v"], cache["conv"],
+                  cache["ssm"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h[:, -1] @ params["lm_head"]).astype(F32)
+    return logits, {"k": ks, "v": vs, "conv": convs, "ssm": ssms}

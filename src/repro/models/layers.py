@@ -1,0 +1,165 @@
+"""Core layers: RMSNorm, RoPE, GQA attention (flash-style scan), MLPs, losses.
+
+Everything is pure JAX; activations use cfg.compute_dtype (bf16) with f32
+softmax/norm/loss numerics.  Logical sharding constraints are applied inline so
+the same code lowers correctly on (data, model) and (pod, data, model) meshes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import shard
+
+F32 = jnp.float32
+NEG_INF = -1e30
+
+
+def rms_norm(x, w, eps):
+    xf = x.astype(F32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(F32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------- RoPE
+
+def rope_cos_sin(positions, head_dim, theta, dtype):
+    """positions: int32[...]; returns cos/sin of shape positions.shape+(head_dim/2,)."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=F32) / half))
+    ang = positions.astype(F32)[..., None] * freqs
+    return jnp.cos(ang).astype(dtype), jnp.sin(ang).astype(dtype)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., S, H, D); cos/sin: (..., S, D/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------- attention
+
+def flash_attention(q, k, v, *, causal: bool, q_offset=0, kv_block: int = 1024,
+                    kv_len=None):
+    """Online-softmax attention with a scan over KV blocks (bounded memory).
+
+    q: (B, Sq, Hq, D);  k, v: (B, Skv, Hkv, D); GQA via Hq = G*Hkv.
+    kv_len: optional int32 — positions >= kv_len are masked (padded KV cache).
+    Returns (B, Sq, Hq, D) in q.dtype.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    blk = min(kv_block, Skv)
+    n_blocks = Skv // blk
+    assert Skv % blk == 0, (Skv, blk)
+
+    scale = D ** -0.5
+    qf = (q.astype(F32) * scale).reshape(B, Sq, Hkv, G, D)
+    kb = k.reshape(B, n_blocks, blk, Hkv, D)
+    vb = v.reshape(B, n_blocks, blk, Hkv, D)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    @jax.checkpoint   # recompute p-matrix in bwd: residuals = carries only
+    def body(carry, inp):
+        m, l, acc = carry
+        j, k_j, v_j = inp
+        k_pos = j * blk + jnp.arange(blk)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k_j.astype(F32),
+                       preferred_element_type=F32)
+        mask = jnp.ones((Sq, blk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= k_pos[None, :]
+        if kv_len is not None:
+            mask &= k_pos[None, :] < kv_len
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, v_j.astype(F32), preferred_element_type=F32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), NEG_INF, F32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), F32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, D), F32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(n_blocks), kb.swapaxes(0, 1), vb.swapaxes(0, 1)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, kv_len):
+    """Single-token attention vs a padded KV cache.
+
+    q: (B, 1, Hq, D); caches: (B, Smax, Hkv, D); kv_len: int32 valid length.
+    """
+    B, _, Hq, D = q.shape
+    _, Smax, Hkv, _ = k_cache.shape
+    G = Hq // Hkv
+    qf = (q.astype(F32) * D ** -0.5).reshape(B, Hkv, G, D)
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(F32),
+                   preferred_element_type=F32)
+    mask = jnp.arange(Smax)[None, None, None, :] < kv_len
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(F32),
+                     preferred_element_type=F32)
+    return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------- MLP
+
+def mlp(h, p, act: str):
+    """p holds w_up/w_down (+ w_gate for swiglu). h: (B, S, d)."""
+    if act == "swiglu":
+        g = jnp.einsum("bsd,df->bsf", h, p["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", h, p["w_up"])
+        z = jax.nn.silu(g.astype(F32)).astype(h.dtype) * u
+    else:
+        u = jnp.einsum("bsd,df->bsf", h, p["w_up"])
+        if act == "squared_relu":
+            r = jax.nn.relu(u.astype(F32))
+            z = (r * r).astype(h.dtype)
+        elif act == "gelu":
+            z = jax.nn.gelu(u.astype(F32)).astype(h.dtype)
+        else:
+            raise ValueError(act)
+    z = shard(z, "batch", None, "tensor")
+    return jnp.einsum("bsf,fd->bsd", z, p["w_down"])
+
+
+# ---------------------------------------------------------------- losses
+
+def chunked_softmax_xent(h, lm_head, labels, *, chunk: int = 1024):
+    """Next-token CE without materializing (B, S, V) logits.
+
+    h: (B, S, d) final hidden states; lm_head: (d, V); labels: int32 (B, S)
+    (already shifted; -1 entries are masked out).  Returns mean nll (f32).
+    """
+    B, S, d = h.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n = S // chunk
+    hc = h.reshape(B, n, chunk, d).swapaxes(0, 1)        # (n, B, c, d)
+    yc = labels.reshape(B, n, chunk).swapaxes(0, 1)      # (n, B, c)
+
+    @jax.checkpoint   # recompute per-chunk logits in backward: peak mem = 1 chunk
+    def body(carry, inp):
+        tot, cnt = carry
+        hx, yx = inp
+        logits = jnp.einsum("bcd,dv->bcv", hx, lm_head).astype(F32)
+        logits = shard(logits, "batch", None, "vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        pick = jnp.take_along_axis(logits, jnp.maximum(yx, 0)[..., None], axis=-1)[..., 0]
+        valid = (yx >= 0).astype(F32)
+        nll = (lse - pick) * valid
+        return (tot + nll.sum(), cnt + valid.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros((), F32), jnp.zeros((), F32)), (hc, yc))
+    return tot / jnp.maximum(cnt, 1.0)

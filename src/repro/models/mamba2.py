@@ -1,0 +1,184 @@
+"""Mamba2 / SSD (state-space duality) block — chunked train scan + O(1) decode.
+
+Implements the SSD algorithm (arXiv:2405.21060): within chunks of Q tokens an
+attention-like quadratic form with decay mask; across chunks a linear state
+recurrence.  Heads are sharded on the `tensor` axis; B/C projections use a
+single group (G=1) broadcast over heads.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.layers import rms_norm
+from repro.sharding import shard
+
+F32 = jnp.float32
+
+
+def ssm_dims(cfg):
+    d_in = cfg.d_inner
+    H = cfg.n_ssm_heads
+    N = cfg.ssm_state
+    P = cfg.ssm_head_dim
+    conv_ch = d_in + 2 * N                      # conv runs over (x, B, C)
+    zxbcdt = 2 * d_in + 2 * N + H               # z, x, B, C, dt
+    return d_in, H, N, P, conv_ch, zxbcdt
+
+
+def mamba_param_defs(cfg, n_layers: int):
+    d = cfg.d_model
+    d_in, H, N, P, conv_ch, zxbcdt = ssm_dims(cfg)
+    L = (n_layers,)
+    ax = (None,)
+    return {
+        "norm": api.ParamDef(L + (d,), ax + (None,), init="ones"),
+        "in_proj": api.ParamDef(L + (d, zxbcdt), ax + ("fsdp", "tensor")),
+        "conv_w": api.ParamDef(L + (cfg.ssm_conv_width, conv_ch), ax + (None, "tensor"),
+                               scale=0.5),
+        "conv_b": api.ParamDef(L + (conv_ch,), ax + ("tensor",), init="zeros"),
+        "dt_bias": api.ParamDef(L + (H,), ax + ("tensor",), jnp.float32, init="zeros"),
+        "A_log": api.ParamDef(L + (H,), ax + ("tensor",), jnp.float32, init="zeros"),
+        "D": api.ParamDef(L + (H,), ax + ("tensor",), jnp.float32, init="ones"),
+        "gate_norm": api.ParamDef(L + (d_in,), ax + ("tensor",), init="ones"),
+        "out_proj": api.ParamDef(L + (d_in, d), ax + ("tensor", "fsdp")),
+    }
+
+
+def _causal_conv(xbc, w, b):
+    """Depthwise causal conv, width W.  xbc: (B, S, C); w: (W, C); b: (C,)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = b.astype(F32)
+    acc = jnp.zeros(xbc.shape, F32)
+    S = xbc.shape[1]
+    for i in range(W):
+        acc = acc + pad[:, i : i + S].astype(F32) * w[i].astype(F32)
+    return jax.nn.silu(acc + out).astype(xbc.dtype)
+
+
+def _split_proj(proj, cfg):
+    d_in, H, N, P, conv_ch, _ = ssm_dims(cfg)
+    z = proj[..., :d_in]
+    xbc = proj[..., d_in : d_in + conv_ch]
+    dt = proj[..., d_in + conv_ch :]
+    return z, xbc, dt
+
+
+def mamba_block(h, p, cfg, *, return_state: bool = False):
+    """Full-sequence SSD.  h: (B, S, d) -> (B, S, d).
+
+    With return_state=True also returns (conv_tail, final_ssm_state) for
+    prefill -> decode handoff: conv_tail is the last W-1 *pre-conv* xbc rows.
+    """
+    B, S0, d = h.shape
+    d_in, H, N, P, conv_ch, _ = ssm_dims(cfg)
+    Q = min(cfg.ssm_chunk, S0)
+    pad = (-S0) % Q
+    S = S0 + pad
+    nc = S // Q
+
+    hn = rms_norm(h, p["norm"], cfg.norm_eps)
+    if pad:
+        hn = jnp.pad(hn, ((0, 0), (0, pad), (0, 0)))
+    proj = jnp.einsum("bsd,dz->bsz", hn, p["in_proj"])
+    proj = shard(proj, "batch", None, "tensor")
+    z, xbc_raw, dt_raw = _split_proj(proj, cfg)
+    xbc = _causal_conv(xbc_raw, p["conv_w"], p["conv_b"])
+    xs, B_, C_ = xbc[..., :d_in], xbc[..., d_in : d_in + N], xbc[..., d_in + N :]
+
+    dt = jax.nn.softplus(dt_raw.astype(F32) + p["dt_bias"].astype(F32))   # (B,S,H)
+    if pad:  # padded steps must be state-identity (decay 1, contribution 0)
+        dt = dt * (jnp.arange(S) < S0).astype(F32)[None, :, None]
+    A = -jnp.exp(p["A_log"].astype(F32))                                   # (H,)
+    x_h = xs.reshape(B, S, H, P)
+    dtx = x_h.astype(F32) * dt[..., None]                                  # (B,S,H,P)
+
+    # chunked views
+    a_c = (dt * A).reshape(B, nc, Q, H)                # per-step log decay
+    cum = jnp.cumsum(a_c, axis=2)                      # inclusive
+    c_last = cum[:, :, -1]                             # (B,nc,H)
+    Bc = B_.reshape(B, nc, Q, N).astype(F32)
+    Cc = C_.reshape(B, nc, Q, N).astype(F32)
+    dtx_c = dtx.reshape(B, nc, Q, H, P)
+
+    # intra-chunk (quadratic with decay mask) — computed per chunk inside scan
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+
+    @jax.checkpoint   # recompute seg/CB in bwd: residuals = state carry only
+    def chunk_body(state, inp):
+        cum_k, clast_k, B_k, C_k, dtx_k = inp
+        # state: (B, H, N, P) f32
+        CB = jnp.einsum("bqn,bkn->bqk", C_k, B_k, preferred_element_type=F32)
+        seg = jnp.exp(cum_k[:, :, None, :] - cum_k[:, None, :, :])   # (B,Q,K,H)
+        seg = jnp.where(tri[None, :, :, None], seg, 0.0)
+        y_in = jnp.einsum("bqk,bqkh,bkhp->bqhp", CB, seg, dtx_k,
+                          preferred_element_type=F32)
+        y_x = jnp.einsum("bqn,bhnp,bqh->bqhp", C_k, state, jnp.exp(cum_k),
+                         preferred_element_type=F32)
+        contrib = jnp.einsum("bkn,bkhp->bhnp", B_k,
+                             dtx_k * jnp.exp(clast_k[:, None] - cum_k)[..., None],
+                             preferred_element_type=F32)
+        state = state * jnp.exp(clast_k)[..., None, None] + contrib
+        return state, y_in + y_x
+
+    state0 = jnp.zeros((B, H, N, P), F32)
+    xs_scan = (cum.swapaxes(0, 1), c_last.swapaxes(0, 1), Bc.swapaxes(0, 1),
+               Cc.swapaxes(0, 1), dtx_c.swapaxes(0, 1))
+    final_state, ys = jax.lax.scan(chunk_body, state0, xs_scan)
+    y = ys.swapaxes(0, 1).reshape(B, S, H, P)
+    y = y + p["D"].astype(F32)[None, None, :, None] * x_h.astype(F32)
+    y = (y.reshape(B, S, d_in) * jax.nn.silu(z.astype(F32)))[:, :S0]
+    y = rms_norm(y.astype(h.dtype), p["gate_norm"], cfg.norm_eps)
+    y = shard(y, "batch", None, "tensor")
+    out = h + jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    if return_state:
+        W = cfg.ssm_conv_width
+        lo = max(0, S0 - (W - 1))
+        conv_tail = xbc_raw[:, lo:S0]                     # (B, <=W-1, conv_ch)
+        if S0 < W - 1:
+            conv_tail = jnp.pad(conv_tail, ((0, 0), (W - 1 - S0, 0), (0, 0)))
+        return out, (conv_tail, final_state)
+    return out
+
+
+def mamba_cache_defs(cfg, n_layers: int, batch: int):
+    d_in, H, N, P, conv_ch, _ = ssm_dims(cfg)
+    W = cfg.ssm_conv_width
+    return {
+        "conv": api.ParamDef((n_layers, batch, W - 1, conv_ch),
+                             (None, "kv_batch", None, "tensor"), init="zeros"),
+        "ssm": api.ParamDef((n_layers, batch, H, N, P),
+                            (None, "kv_batch", "tensor", None, None),
+                            jnp.float32, init="zeros"),
+    }
+
+
+def mamba_decode_step(h, cache_l, p, cfg):
+    """One-token SSD step.  h: (B, 1, d); cache_l = (conv_state, ssm_state)."""
+    B = h.shape[0]
+    d_in, H, N, P, conv_ch, _ = ssm_dims(cfg)
+    conv_state, ssm_state = cache_l                      # (B,W-1,C), (B,H,N,P)
+
+    hn = rms_norm(h, p["norm"], cfg.norm_eps)
+    proj = jnp.einsum("bsd,dz->bsz", hn, p["in_proj"])
+    z, xbc, dt_raw = _split_proj(proj, cfg)
+    xbc = xbc[:, 0]                                       # (B, C)
+    window = jnp.concatenate([conv_state, xbc[:, None]], axis=1)   # (B, W, C)
+    conv_out = (window.astype(F32) * p["conv_w"].astype(F32)[None]).sum(axis=1)
+    xbc_t = jax.nn.silu(conv_out + p["conv_b"].astype(F32))         # (B, C) f32
+    new_conv = window[:, 1:]
+
+    xs, B_, C_ = (xbc_t[:, :d_in], xbc_t[:, d_in : d_in + N], xbc_t[:, d_in + N :])
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(F32) + p["dt_bias"].astype(F32))  # (B,H)
+    A = -jnp.exp(p["A_log"].astype(F32))
+    x_h = xs.reshape(B, H, P)
+    decay = jnp.exp(dt * A)                               # (B,H)
+    contrib = jnp.einsum("bn,bhp->bhnp", B_, x_h * dt[..., None])
+    new_ssm = ssm_state * decay[..., None, None] + contrib
+    y = jnp.einsum("bn,bhnp->bhp", C_, new_ssm) + p["D"].astype(F32)[None, :, None] * x_h
+    y = y.reshape(B, 1, d_in) * jax.nn.silu(z.astype(F32))
+    y = rms_norm(y.astype(h.dtype), p["gate_norm"], cfg.norm_eps)
+    out = h + jnp.einsum("bsi,id->bsd", y, p["out_proj"])
+    return out, (new_conv, new_ssm)

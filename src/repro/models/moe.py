@@ -1,0 +1,128 @@
+"""Top-k MoE FFN with capacity-bounded sort-scatter dispatch (dropless-ish).
+
+Experts are sharded on the `expert` logical axis (-> in-pod `model` mesh axis:
+the expert all-to-all must never cross the DCI hop — see DESIGN.md
+§Arch-applicability).  Dispatch uses argsort + scatter rather than the
+(T, E, C) one-hot tensor, keeping memory O(E*C*d) and FLOPs at the useful
+top-k expert matmuls (roofline honesty: no all-experts dense compute).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding
+from repro.models import api
+from repro.sharding import shard
+
+F32 = jnp.float32
+
+
+def moe_param_defs(cfg, n_layers: int, d_ff: int):
+    d, E = cfg.d_model, cfg.n_experts
+    L = (n_layers,)
+    ax = (None,)
+    return {
+        "norm": api.ParamDef(L + (d,), ax + (None,), init="ones"),
+        "router": api.ParamDef(L + (d, E), ax + ("fsdp", None), jnp.float32),
+        "w_gate": api.ParamDef(L + (E, d, d_ff), ax + ("expert", "fsdp", None)),
+        "w_up": api.ParamDef(L + (E, d, d_ff), ax + ("expert", "fsdp", None)),
+        "w_down": api.ParamDef(L + (E, d_ff, d), ax + ("expert", None, "fsdp")),
+    }
+
+
+def moe_ffn(h, p, cfg, d_ff: int):
+    """h: (B, S, d) -> (B, S, d).  p: per-layer slice of moe_param_defs.
+
+    Dispatch is GROUP-LOCAL: tokens are sorted/scattered within their own
+    batch shard (G = number of mesh shards of the 'batch' axis), producing
+    (G, E, cap_g, d) buffers sharded over `batch` on dim 0.  The single
+    (G, E) -> (E, G) transpose is then the one true all-to-all between the
+    data and expert(model) axes.  A global sort/scatter instead makes XLA
+    materialize the full (E*cap, d) buffer per device and merge it with
+    per-layer all-reduces — 100x the wire bytes (EXPERIMENTS.md §Perf HC1).
+    """
+    B, S, d = h.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    G = sharding.batch_group_count(T)
+    Tg = T // G
+    x = h.reshape(T, d)
+
+    # --- routing (f32 for numerics)
+    logits = jnp.einsum("td,de->te", x.astype(F32), p["router"].astype(F32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, topk_idx = jax.lax.top_k(probs, k)              # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # --- capacity-bounded group-local dispatch via per-group sort
+    cap = int(Tg * k / E * cfg.capacity_factor)
+    cap = max(8, ((cap + 7) // 8) * 8)
+
+    def dispatch(xg, eg):
+        """xg: (Tg, d) one batch shard; eg: (Tg*k,) expert ids."""
+        order = jnp.argsort(eg)                            # stable
+        e_sorted = eg[order]
+        rank = jnp.arange(Tg * k) - jnp.searchsorted(e_sorted, e_sorted,
+                                                     side="left")
+        keep = rank < cap
+        slot = jnp.where(keep, e_sorted * cap + rank, E * cap)
+        tok = order // k
+        buf = jnp.zeros((E * cap + 1, d), xg.dtype)
+        buf = buf.at[slot].set(xg[tok])                    # unique slots
+        return buf[: E * cap].reshape(E, cap, d), order, keep, slot
+
+    xg = x.reshape(G, Tg, d)
+    eg = topk_idx.reshape(G, Tg * k)
+    xe, order, keep, slot = jax.vmap(dispatch)(xg, eg)     # (G, E, cap, d)
+    xe = shard(xe, "batch", None, None, None)
+
+    # --- group -> expert layout: (E, G*cap, d) with the slot dim G-major.
+    # G-blocks of dim 1 coincide with the BATCH shards, so constraining
+    # dim 1 to 'batch' moves NO tokens at all: E goes replicated->sharded
+    # (a free local slice) and each device computes its experts on its own
+    # tokens' slots.  Tokens never cross the batch axes — only the (much
+    # smaller) FSDP weight gathers do.  Crucially 'batch' (not 'fsdp'):
+    # on the multi-pod mesh batch = (pod, data) and 'fsdp'=(data) would
+    # re-group the slots ACROSS PODS — 48.6 TB/device of DCI-crossing
+    # all-gather (§Perf HC1 iter 5; 29x reduction from this one word).
+    # Full iteration log in EXPERIMENTS.md §Perf HC1.
+    xee = xe.transpose(1, 0, 2, 3).reshape(E, G * cap, d)
+    xee = shard(xee, "expert", "batch", None)
+
+    # --- expert FFN (swiglu or plain, per cfg.act)
+    if cfg.act == "swiglu":
+        g = jnp.einsum("ecd,edf->ecf", xee, p["w_gate"])
+        u = jnp.einsum("ecd,edf->ecf", xee, p["w_up"])
+        z = jax.nn.silu(g.astype(F32)).astype(h.dtype) * u
+    else:
+        u = jnp.einsum("ecd,edf->ecf", xee, p["w_up"])
+        z = jax.nn.gelu(u.astype(F32)).astype(h.dtype)
+    ye = jnp.einsum("ecf,efd->ecd", z, p["w_down"])
+    ye = shard(ye, "expert", "batch", None)
+
+    # --- reverse: all local reshapes (dim layout unchanged)
+    yg = ye.reshape(E, G, cap, d).transpose(1, 0, 2, 3)    # (G, E, cap, d)
+    yg = shard(yg, "batch", None, None, None)
+
+    def combine(ye_g, order_g, keep_g, slot_g):
+        y_rows = ye_g.reshape(E * cap, d)
+        y_sorted = jnp.where(keep_g[:, None],
+                             y_rows[jnp.minimum(slot_g, E * cap - 1)], 0.0)
+        return jnp.zeros((Tg * k, d), h.dtype).at[order_g].set(y_sorted)
+
+    y_flat = jax.vmap(combine)(yg, order, keep, slot)      # (G, Tg*k, d)
+    y = (y_flat.reshape(T, k, d).astype(F32) * gates[..., None]).sum(axis=1)
+    return y.reshape(B, S, d).astype(h.dtype)
+
+
+def aux_load_balance_loss(h, router_w, cfg):
+    """Switch-style load-balance auxiliary (used by training loss)."""
+    B, S, d = h.shape
+    x = h.reshape(-1, d).astype(F32)
+    logits = x @ router_w.astype(F32)
+    probs = jax.nn.softmax(logits, -1)
+    top1 = jnp.argmax(probs, -1)
+    frac = jnp.mean(jax.nn.one_hot(top1, cfg.n_experts, dtype=F32), axis=0)
+    imp = probs.mean(axis=0)
+    return cfg.n_experts * jnp.sum(frac * imp)

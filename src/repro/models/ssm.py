@@ -1,0 +1,85 @@
+"""Pure-SSM LM (mamba2-130m): embed -> N x mamba_block -> head.  Tied embeddings."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import api
+from repro.models.layers import chunked_softmax_xent, rms_norm
+from repro.models.mamba2 import (mamba_block, mamba_cache_defs,
+                                 mamba_decode_step, mamba_param_defs)
+from repro.sharding import shard
+
+F32 = jnp.float32
+
+
+def param_defs(cfg):
+    defs = {
+        "layers": mamba_param_defs(cfg, cfg.n_layers),
+        "final_norm": api.ParamDef((cfg.d_model,), (None,), init="ones"),
+        "lm_head": api.ParamDef((cfg.d_model, cfg.vocab), ("fsdp", "vocab")),
+    }
+    if not cfg.tie_embeddings:
+        defs["embed"] = api.ParamDef((cfg.vocab, cfg.d_model), ("vocab", "fsdp"),
+                                     scale=1.0)
+    return defs
+
+
+def _embed(params, tokens, cfg):
+    table = params["embed"] if "embed" in params else params["lm_head"].T
+    h = jnp.take(table, tokens, axis=0).astype(cfg.cdtype())
+    return shard(h, "batch", None, None)
+
+
+def _remat(fn, cfg):
+    if cfg.remat_policy == "none":
+        return fn
+    return jax.checkpoint(fn)
+
+
+def forward(params, tokens, cfg, *, collect_state=False):
+    h = _embed(params, tokens, cfg)
+
+    def body(carry, lp):
+        if collect_state:
+            out, st = mamba_block(carry, lp, cfg, return_state=True)
+            return out, st
+        return mamba_block(carry, lp, cfg), None
+
+    h, states = jax.lax.scan(_remat(body, cfg), h, params["layers"])
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return (h, states) if collect_state else h
+
+
+def loss_fn(params, batch, cfg):
+    h = forward(params, batch["inputs"], cfg)
+    return chunked_softmax_xent(h, params["lm_head"], batch["targets"])
+
+
+def cache_defs(cfg, batch: int, max_len: int):
+    del max_len  # O(1) state — the point of the SSM long_500k cell
+    return mamba_cache_defs(cfg, cfg.n_layers, batch)
+
+
+def prefill(params, tokens, cfg, max_len: int):
+    del max_len
+    h, (convs, ssms) = forward(params, tokens, cfg, collect_state=True)
+    logits = (h[:, -1] @ params["lm_head"]).astype(F32)
+    cache = {"conv": convs, "ssm": ssms}
+    return logits, cache, jnp.int32(tokens.shape[1])
+
+
+def decode_step(params, cache, tokens, pos, cfg):
+    del pos  # SSM state is position-free
+    h = _embed(params, tokens, cfg)
+
+    def body(carry, xs):
+        lp, conv_l, ssm_l = xs
+        out, (new_conv, new_ssm) = mamba_decode_step(carry, (conv_l, ssm_l), lp, cfg)
+        return out, (new_conv, new_ssm)
+
+    h, (convs, ssms) = jax.lax.scan(body, h, (params["layers"], cache["conv"],
+                                              cache["ssm"]))
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = (h[:, -1] @ params["lm_head"]).astype(F32)
+    return logits, {"conv": convs, "ssm": ssms}

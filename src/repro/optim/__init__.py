@@ -1,0 +1,190 @@
+"""Optimizers: AdamW, Adafactor, Muon (NS5), SGD-M — sharded states (ZeRO-1).
+
+States inherit each param's sharding (same shapes), so optimizer memory is
+FSDP-sharded for free.  Big-model configs use Muon/Adafactor with bf16 states
+(HBM budget analysis in EXPERIMENTS.md §Dry-run).  Muon applies Newton–Schulz
+orthogonalization to >=2D weights in the `layers` subtree and AdamW elsewhere
+(embeddings / head / norms), following standard Muon practice.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def _sdt(cfg):
+    return jnp.dtype(cfg.opt_state_dtype)
+
+
+# ---------------------------------------------------------------- init
+
+def init_opt_state(params, cfg) -> dict:
+    zeros_like = lambda p: jnp.zeros(p.shape, _sdt(cfg))
+    if cfg.optimizer == "adamw":
+        return {"m": jax.tree.map(zeros_like, params),
+                "v": jax.tree.map(zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+    if cfg.optimizer in ("muon", "sgdm"):
+        return {"m": jax.tree.map(zeros_like, params),
+                "step": jnp.zeros((), jnp.int32)}
+    if cfg.optimizer == "adafactor":
+        def factored(p):
+            if p.ndim >= 2:
+                return {"vr": jnp.zeros(p.shape[:-1], F32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], F32)}
+            return {"v": jnp.zeros(p.shape, F32)}
+        return {"f": jax.tree.map(factored, params), "step": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.optimizer)
+
+
+# ---------------------------------------------------------------- updates
+
+def _adamw_update(g, m, v, step, lr, wd, p, b1=0.9, b2=0.95, eps=1e-8):
+    gf = g.astype(F32)
+    m_new = b1 * m.astype(F32) + (1 - b1) * gf
+    v_new = b2 * v.astype(F32) + (1 - b2) * gf * gf
+    mhat = m_new / (1 - b1 ** step)
+    vhat = v_new / (1 - b2 ** step)
+    upd = mhat / (jnp.sqrt(vhat) + eps) + wd * p.astype(F32)
+    return upd * lr, m_new, v_new
+
+
+def _newton_schulz(G, iters: int = 5):
+    """Batched NS5 orthogonalization (Muon).  G: (..., m, n), bf16 matmuls."""
+    a, b, c = 3.4445, -4.7750, 2.0315
+    m, n = G.shape[-2], G.shape[-1]
+    transpose = m > n
+    X = jnp.swapaxes(G, -1, -2) if transpose else G
+    X = X / (jnp.linalg.norm(X, axis=(-2, -1), keepdims=True) + 1e-7)
+    X = X.astype(jnp.bfloat16)
+    for _ in range(iters):
+        A = X @ jnp.swapaxes(X, -1, -2)
+        B = b * A + c * (A @ A)
+        X = a * X + B @ X
+    X = X.astype(F32)
+    return jnp.swapaxes(X, -1, -2) if transpose else X
+
+
+def _rms(x):
+    return jnp.sqrt(jnp.mean(jnp.square(x)) + 1e-12)
+
+
+def apply_updates(params, grads, state, cfg, lr):
+    """Returns (new_params, new_state).  lr: scalar (schedule applied upstream)."""
+    opt = cfg.optimizer
+    wd = 0.1
+    step = state["step"] + 1
+    sdt = _sdt(cfg)
+
+    if opt == "adamw":
+        def upd(p, g, m, v):
+            u, m2, v2 = _adamw_update(g, m, v, step.astype(F32), lr, wd, p)
+            return (p.astype(F32) - u).astype(p.dtype), m2.astype(sdt), v2.astype(sdt)
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "v": new_v, "step": step}
+
+    if opt == "sgdm":
+        def upd(p, g, m):
+            m2 = 0.9 * m.astype(F32) + g.astype(F32)
+            return (p.astype(F32) - lr * m2).astype(p.dtype), m2.astype(sdt)
+        out = jax.tree.map(upd, params, grads, state["m"])
+        new_p = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, {"m": new_m, "step": step}
+
+    if opt == "muon":
+        # NS-orthogonalized momentum on layer matrices; AdamW-style fallback on
+        # the rest would need extra state — use normalized momentum instead.
+        flat_p = flatten_with_paths(params)
+
+        def upd(path, p, g, m):
+            gf = g.astype(F32)
+            m2 = 0.95 * m.astype(F32) + gf
+            use_ns = p.ndim >= 2 and path.startswith("layers/")
+            if use_ns:
+                o = _newton_schulz(m2)
+                scale = jnp.sqrt(jnp.maximum(1.0, p.shape[-2] / p.shape[-1]))
+                u = o * scale * 0.2
+            else:
+                u = m2 / (_rms(m2) + 1e-8)
+            newp = (p.astype(F32) * (1 - lr * wd) - lr * u).astype(p.dtype)
+            return newp, m2.astype(sdt)
+
+        flat_g = flatten_with_paths(grads)
+        flat_m = flatten_with_paths(state["m"])
+        results = {k: upd(k, flat_p[k], flat_g[k], flat_m[k]) for k in flat_p}
+        new_p = unflatten_like(params, {k: v[0] for k, v in results.items()})
+        new_m = unflatten_like(params, {k: v[1] for k, v in results.items()})
+        return new_p, {"m": new_m, "step": step}
+
+    if opt == "adafactor":
+        eps = 1e-30
+
+        def upd(p, g, f):
+            gf = g.astype(F32)
+            g2 = gf * gf + eps
+            if p.ndim >= 2:
+                vr = 0.95 * f["vr"] + 0.05 * g2.mean(axis=-1)
+                vc = 0.95 * f["vc"] + 0.05 * g2.mean(axis=-2)
+                denom = (vr[..., None] / vr.mean(axis=-1, keepdims=True)[..., None]
+                         ) * vc[..., None, :]
+                u = gf / (jnp.sqrt(denom) + 1e-12)
+                f2 = {"vr": vr, "vc": vc}
+            else:
+                v = 0.95 * f["v"] + 0.05 * g2
+                u = gf / (jnp.sqrt(v) + 1e-12)
+                f2 = {"v": v}
+            u = u / jnp.maximum(1.0, _rms(u))
+            newp = (p.astype(F32) * (1 - lr * wd) - lr * u).astype(p.dtype)
+            return newp, f2
+
+        flat_p = flatten_with_paths(params)
+        flat_g = flatten_with_paths(grads)
+        flat_f = flatten_with_paths(state["f"], stop=lambda d: set(d) <= {"v", "vr", "vc"})
+        results = {k: upd(flat_p[k], flat_g[k], flat_f[k]) for k in flat_p}
+        new_p = unflatten_like(params, {k: v[0] for k, v in results.items()})
+        new_f = unflatten_like(params, {k: v[1] for k, v in results.items()},
+                               leaf_is_dict=True)
+        return new_p, {"f": new_f, "step": step}
+
+    raise ValueError(opt)
+
+
+# ---------------------------------------------------------------- path utils
+
+def flatten_with_paths(tree, stop=None) -> dict:
+    out = {}
+
+    def rec(prefix, node):
+        if isinstance(node, dict) and not (stop and stop(node)):
+            for k, v in node.items():
+                rec(f"{prefix}/{k}" if prefix else k, v)
+        else:
+            out[prefix] = node
+
+    rec("", tree)
+    return out
+
+
+def unflatten_like(template, flat: dict, leaf_is_dict=False):
+    def rec(prefix, node):
+        if isinstance(node, dict) and not (leaf_is_dict and prefix in flat):
+            return {k: rec(f"{prefix}/{k}" if prefix else k, v) for k, v in node.items()}
+        return flat[prefix]
+
+    return rec("", template)
+
+
+def lr_schedule(step, base_lr: float, warmup: int, total: int = 100_000):
+    warm = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return base_lr * warm * (0.1 + 0.9 * cos)

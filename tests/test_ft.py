@@ -1,0 +1,151 @@
+"""Fault tolerance: checkpoint atomicity/roundtrip, restart drill,
+straggler QA, data-pipeline determinism, elastic reshard (subprocess)."""
+import json
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import ckpt, data, ft, train
+from repro.configs.base import RunConfig, reduced
+from repro.configs.registry import get_config
+
+CFG = reduced(get_config("smollm-135m"))
+
+
+def _state():
+    return train.make_train_state(CFG, jax.random.PRNGKey(0))
+
+
+def test_ckpt_roundtrip(tmp_path):
+    state = _state()
+    ckpt.save(tmp_path, 7, state)
+    assert ckpt.latest_step(tmp_path) == 7
+    restored = ckpt.restore(tmp_path, 7, state)
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_ckpt_gc_keeps_latest(tmp_path):
+    state = _state()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(tmp_path, s, state, keep=2)
+    assert ckpt.latest_step(tmp_path) == 5
+    steps = sorted(int(p.name.split("_")[1]) for p in tmp_path.glob("step_*"))
+    assert steps == [4, 5]
+
+
+def test_ckpt_tmp_dir_not_visible(tmp_path):
+    """A stale .tmp dir (crash mid-save) must not be picked up."""
+    state = _state()
+    ckpt.save(tmp_path, 3, state)
+    (tmp_path / "step_9.tmp").mkdir()
+    assert ckpt.latest_step(tmp_path) == 3
+
+
+def test_async_ckpt(tmp_path):
+    state = _state()
+    t = ckpt.save(tmp_path, 11, state, background=True)
+    t.join(timeout=30)
+    assert ckpt.latest_step(tmp_path) == 11
+
+
+def test_restart_drill(tmp_path):
+    """Kill training mid-run; a fresh supervisor resumes from the latest
+    checkpoint and finishes with the identical data stream."""
+    step = jax.jit(train.make_train_step(CFG, RunConfig()))
+    state = _state()
+    sup = ft.Supervisor(ft.FTConfig(ckpt_dir=str(tmp_path), ckpt_every=3,
+                                    async_ckpt=False), state_template=state)
+
+    def batches(start=0):
+        pipe = data.ShardedPipeline(CFG, batch=2, seq=16, start_step=start)
+        return iter(pipe)
+
+    with pytest.raises(ft.InjectedFailure):
+        sup.run(state, step, batches(), n_steps=10,
+                inject=ft.fail_at(7))
+    assert ckpt.latest_step(tmp_path) == 5          # ckpts at steps 2 and 5
+
+    sup2 = ft.Supervisor(ft.FTConfig(ckpt_dir=str(tmp_path), ckpt_every=3,
+                                     async_ckpt=False), state_template=state)
+    state2, last = sup2.run(_state(), step, batches(6), n_steps=10)
+    assert last == 10
+    assert any(e["kind"] == "resume" and e["step"] == 5 for e in sup2.events)
+
+
+def test_straggler_qa_event():
+    step = jax.jit(train.make_train_step(CFG, RunConfig()))
+    state = _state()
+    sup = ft.Supervisor(ft.FTConfig(), state_template=state)
+    pipe = data.ShardedPipeline(CFG, batch=2, seq=16)
+    state, last = sup.run(state, step, iter(pipe), n_steps=8,
+                          inject=ft.slow_at(5, 0.6))
+    pipe.close()
+    assert last == 8
+    assert any(e["kind"] == "straggler_qa" for e in sup.events)
+
+
+def test_data_determinism():
+    b1 = data.synth_batch(CFG, 5, 4, 32, seed=1)
+    b2 = data.synth_batch(CFG, 5, 4, 32, seed=1)
+    b3 = data.synth_batch(CFG, 6, 4, 32, seed=1)
+    np.testing.assert_array_equal(b1["inputs"], b2["inputs"])
+    assert not np.array_equal(b1["inputs"], b3["inputs"])
+
+
+def test_pipeline_order_and_restart():
+    p1 = data.ShardedPipeline(CFG, batch=2, seq=16, start_step=0)
+    steps = [next(p1)[0] for _ in range(4)]
+    p1.close()
+    assert steps == [0, 1, 2, 3]
+    p2 = data.ShardedPipeline(CFG, batch=2, seq=16, start_step=2)
+    s, b = next(p2)
+    p2.close()
+    assert s == 2
+    np.testing.assert_array_equal(
+        np.asarray(b["inputs"]),
+        np.asarray(data.synth_batch(CFG, 2, 2, 16)["inputs"]))
+
+
+def test_elastic_reshard_across_meshes(tmp_path):
+    """Save on a (2,2) mesh, restore onto (4,) and onto 1 device — values
+    identical (subprocess: device count must be set before jax init)."""
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np, json
+from jax.sharding import PartitionSpec as P, NamedSharding
+from repro import ckpt, sharding, train
+from repro.configs.base import reduced
+from repro.configs.registry import get_config
+cfg = reduced(get_config("smollm-135m"))
+mesh_a = jax.make_mesh((2, 2), ("data", "model"))
+with sharding.use_mesh(mesh_a):
+    state = train.make_train_state(cfg, jax.random.PRNGKey(0))
+    specs = train.state_pspecs(cfg)
+    sh = sharding.spec_tree_to_shardings(mesh_a, specs)
+    state = jax.tree.map(lambda x, s: jax.device_put(x, s), state, sh)
+    ckpt.save("{tmp_path}", 1, state)
+mesh_b = jax.make_mesh((4,), ("model",))
+with sharding.use_mesh(mesh_b):
+    specs_b = train.state_pspecs(cfg)
+    sh_b = sharding.spec_tree_to_shardings(mesh_b, specs_b)
+    restored = ckpt.restore("{tmp_path}", 1, state, sh_b)
+restored_1dev = ckpt.restore("{tmp_path}", 1, state)
+ok = all(np.array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+         and np.array_equal(np.asarray(a, np.float32),
+                            np.asarray(c, np.float32))
+         for a, b, c in zip(jax.tree.leaves(state),
+                            jax.tree.leaves(restored),
+                            jax.tree.leaves(restored_1dev)))
+print(json.dumps({{"ok": bool(ok)}}))
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert json.loads(out.stdout.strip().splitlines()[-1])["ok"]

@@ -1,0 +1,141 @@
+"""Kernel correctness: GF(2^8) algebra, RS coding, int8 quant.
+
+Pallas kernels (interpret mode on CPU) are swept over shapes/configs and
+asserted allclose/equal against the pure-jnp oracles in repro.kernels.ref.
+Field axioms and MDS recoverability run under hypothesis.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import gf, ops, ref
+
+BYTE = st.integers(0, 255)
+
+
+# ------------------------------------------------------------- field axioms
+
+@settings(max_examples=200, deadline=None)
+@given(BYTE, BYTE, BYTE)
+def test_gf_field_axioms(a, b, c):
+    m = gf.gf_mul_int
+    assert m(a, b) == m(b, a)
+    assert m(a, m(b, c)) == m(m(a, b), c)
+    assert m(a, 1) == a and m(a, 0) == 0
+    assert m(a, b ^ c) == m(a, b) ^ m(a, c)          # distributes over XOR
+
+
+@settings(max_examples=100, deadline=None)
+@given(st.integers(1, 255))
+def test_gf_inverse(a):
+    assert gf.gf_mul_int(a, gf.gf_inv_int(a)) == 1
+
+
+@settings(max_examples=50, deadline=None)
+@given(BYTE, st.lists(BYTE, min_size=4, max_size=16))
+def test_bitsliced_mul_matches_table(c, xs):
+    x = np.asarray(xs, np.int32)
+    bits = gf.gf_mul_const_bitsliced(x, c)
+    table = np.asarray([gf.gf_mul_int(int(v), c) for v in xs])
+    assert (np.asarray(bits) == table).all()
+
+
+def test_xtime_is_mul2():
+    x = np.arange(256, dtype=np.int32)
+    assert (np.asarray(gf.xtime(x)) ==
+            np.asarray([gf.gf_mul_int(int(v), 2) for v in x])).all()
+
+
+# ------------------------------------------------------- RS kernels vs oracle
+
+@pytest.mark.parametrize("k,r", [(8, 2), (4, 2), (8, 3), (10, 2), (6, 1)])
+@pytest.mark.parametrize("b", [64, 1000, 2048, 5003])
+def test_rs_encode_matches_ref(k, r, b):
+    rng = np.random.default_rng(k * 100 + r * 10 + b)
+    data = jnp.asarray(rng.integers(0, 256, (k, b), dtype=np.uint8))
+    assert jnp.array_equal(ops.rs_encode(data, r), ref.rs_encode_ref(data, r))
+
+
+@pytest.mark.parametrize("k,r", [(8, 2), (4, 2), (8, 3)])
+def test_rs_all_loss_patterns_recover(k, r):
+    """MDS property: ANY <= r data erasures are recoverable (exhaustive)."""
+    import itertools
+    rng = np.random.default_rng(7)
+    data = jnp.asarray(rng.integers(0, 256, (k, 256), dtype=np.uint8))
+    for m in range(1, r + 1):
+        for missing in itertools.combinations(range(k), m):
+            _, rec = ops.rs_block_roundtrip(data, r, missing)
+            for row, i in enumerate(missing):
+                assert jnp.array_equal(rec[row], data[i]), (missing, i)
+
+
+def test_rs_decode_with_lost_parity():
+    """Erasures of data rows while some parity is also lost."""
+    rng = np.random.default_rng(9)
+    k, r = 8, 3
+    data = jnp.asarray(rng.integers(0, 256, (k, 512), dtype=np.uint8))
+    parity = ops.rs_encode(data, r)
+    # lose data rows {2, 5} and parity row 0 -> decode from parity {1, 2}
+    present = [i for i in range(k) if i not in (2, 5)]
+    surv = jnp.concatenate([data[jnp.asarray(present)], parity[1:]], axis=0)
+    rec = ops.rs_decode(surv, k, r, (2, 5), (1, 2))
+    assert jnp.array_equal(rec[0], data[2])
+    assert jnp.array_equal(rec[1], data[5])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 32 - 1))
+def test_rs_roundtrip_property(seed):
+    rng = np.random.default_rng(seed)
+    k, r = 8, 2
+    b = int(rng.integers(16, 600))
+    missing = tuple(sorted(rng.choice(k, size=2, replace=False).tolist()))
+    data = jnp.asarray(rng.integers(0, 256, (k, b), dtype=np.uint8))
+    _, rec = ops.rs_block_roundtrip(data, r, missing)
+    for row, i in enumerate(missing):
+        assert jnp.array_equal(rec[row], data[i])
+
+
+# ------------------------------------------------------------------- quant
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("n", [65536, 262144, 70000])
+def test_quant_roundtrip(dtype, n):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(size=n) * 3).astype(dtype)
+    q, s, n0 = ops.quant_int8(x)
+    assert n0 == n
+    xd = ops.dequant_int8(q, s, n0)
+    xb = np.asarray(x, np.float32).reshape(-1)
+    # error bounded by half a quant step of the block scale (+ float eps)
+    scales = np.repeat(np.asarray(s), ops.QUANT_BLOCK)[:n]
+    bound = 0.5 * scales + 1e-6 + 1e-6 * np.abs(xb)
+    assert (np.abs(np.asarray(xd) - xb) <= bound).all()
+
+
+def test_quant_matches_ref():
+    rng = np.random.default_rng(3)
+    n = ops._QCHUNK * 2
+    x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    q, s, _ = ops.quant_int8(x)
+    qr, sr = ref.quant_int8_ref(x)
+    assert jnp.array_equal(q, qr.reshape(-1))
+    assert jnp.allclose(s, sr.reshape(-1))
+
+
+def test_quant_zero_block():
+    x = jnp.zeros((ops._QCHUNK,), jnp.float32)
+    q, s, n0 = ops.quant_int8(x)
+    assert jnp.array_equal(ops.dequant_int8(q, s, n0), x)
+
+
+# ---------------------------------------------------------------- byte pack
+
+def test_f32_bytes_roundtrip():
+    rng = np.random.default_rng(11)
+    x = jnp.asarray(rng.normal(size=1000).astype(np.float32))
+    rows, n0 = ops.f32_to_bytes_rows(x, 8)
+    back = ops.bytes_rows_to_f32(rows, n0)
+    assert jnp.array_equal(back, x)

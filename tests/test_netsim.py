@@ -1,0 +1,193 @@
+"""Event-simulator system tests: conservation, delivery, EC recovery,
+routing reaction, fairness integration."""
+import random
+
+import pytest
+
+from repro.netsim import workloads as W
+from repro.netsim.engine import Simulator
+from repro.netsim.topology import (Dumbbell, GilbertElliott, TwoDCFatTree,
+                                   KIB, MIB, MS, US, fail_link, repair_link)
+
+
+def _net(**kw):
+    net = Dumbbell(n_left=8, n_right=1, **kw)
+    net.attach_phantoms()
+    return net
+
+
+def test_single_flow_completes_at_line_rate():
+    net = _net()
+    f = W.spawn(net, 1, 0, 8 * MIB, cc_scheme="uno", lb="ecmp",
+                rng=random.Random(0))
+    net.sim.run(until=200 * MS)
+    assert f.fct is not None
+    ideal = 8 * MIB / net.rate + net.intra_rtt
+    assert f.fct < 2.0 * ideal, (f.fct, ideal)
+
+
+def test_packet_conservation():
+    net = _net()
+    rng = random.Random(1)
+    flows = [W.spawn(net, i, 0, 4 * MIB, cc_scheme="uno", lb="ecmp", rng=rng)
+             for i in range(1, 6)]
+    net.sim.run(until=400 * MS)
+    sent = sum(f.n_sent for f in flows)
+    # every sent packet was either delivered or dropped — none vanish
+    assert net.sim.delivered + net.sim.dropped == sent
+    assert all(f.fct is not None for f in flows)
+
+
+def test_receiver_gets_every_byte_exactly_once():
+    net = _net()
+    f = W.spawn(net, 2, 0, 3 * MIB + 777, cc_scheme="uno", lb="ecmp",
+                rng=random.Random(2))
+    net.sim.run(until=200 * MS)
+    assert f.receiver.n_got == f.n_pkts
+    assert f.fct is not None
+
+
+def test_rtt_measurement_matches_base():
+    net = _net()
+    f = W.spawn(net, 1, 0, 256 * KIB, cc_scheme="uno", lb="ecmp",
+                rng=random.Random(3))
+    net.sim.run(until=50 * MS)
+    assert f.cc.rtt_base == pytest.approx(net.intra_rtt, rel=0.5)
+
+
+def test_phantom_queue_drains():
+    from repro.netsim.engine import PhantomQueue
+    pq = PhantomQueue(drain_rate=1.0, cap=1000.0)
+    pq.push(0.0, 500)
+    pq.update(200.0)
+    assert pq.occ == pytest.approx(300.0)
+    pq.update(10_000.0)
+    assert pq.occ == 0.0
+
+
+def test_inter_flow_uses_ec_and_recovers_from_loss():
+    net = _net()
+    rng = random.Random(4)
+    # 10% random loss on every WAN link: without EC this would stall badly
+    for ln in net.wan_links:
+        ln.loss_fn = lambda pkt, now, r=rng: r.random() < 0.10
+    f = W.spawn(net, 8, 0, 2 * MIB, cc_scheme="uno", lb="unolb", ec=(8, 2),
+                rng=rng)
+    assert f.ec == (8, 2) and f.n_parity > 0
+    net.sim.run(until=900 * MS)
+    assert f.fct is not None
+    assert f.receiver.complete_t is not None
+
+
+def test_ec_not_applied_intra_dc():
+    net = _net()
+    f = W.spawn(net, 1, 0, 1 * MIB, cc_scheme="uno", lb="unolb", ec=(8, 2),
+                rng=random.Random(5))
+    assert f.ec is None                   # paper: EC is inter-DC only
+
+
+def test_block_recovery_without_retransmit():
+    """Drop exactly y packets of one block -> receiver completes with no
+    NACK-driven retransmissions of that block."""
+    net = Dumbbell(n_left=2, n_right=1)
+    net.attach_phantoms()
+    rng = random.Random(6)
+    dropped = []
+
+    def lossf(pkt, now):
+        if pkt.flow.is_inter and pkt.block == 0 and not pkt.is_parity \
+                and pkt.seq in (0, 1) and not dropped.count(pkt.seq):
+            dropped.append(pkt.seq)
+            return True
+        return False
+
+    for w in net.wan:
+        w.loss_fn = lossf
+    f = W.spawn(net, 2, 0, 320 * KIB, cc_scheme="uno", lb="unolb", ec=(8, 2),
+                rng=rng)
+    net.sim.run(until=400 * MS)
+    assert sorted(dropped) == [0, 1]
+    assert f.fct is not None
+    assert f.n_retx == 0                  # EC absorbed both losses
+
+
+def test_unolb_reroutes_away_from_failed_link():
+    net = TwoDCFatTree(seed=7)
+    net.attach_phantoms()
+    rng = random.Random(7)
+    fail_link(net.link("B0->B1.0"))
+    f = W.spawn(net, 3, 200, 4 * MIB, cc_scheme="uno", lb="unolb", ec=(8, 2),
+                rng=rng, n_subflows=8)
+    net.sim.run(until=600 * MS)
+    assert f.fct is not None
+    assert f.router.n_reroutes >= 0       # completed despite dead border link
+
+
+def test_link_fail_repair_cycle():
+    net = _net()
+    rng = random.Random(8)
+    f = W.spawn(net, 8, 0, 8 * MIB, cc_scheme="uno", lb="unolb", ec=(8, 2),
+                rng=rng)
+    net.sim.at(2 * MS, fail_link, net.wan[0])
+    net.sim.at(30 * MS, repair_link, net.wan[0])
+    net.sim.run(until=900 * MS)
+    assert f.fct is not None
+
+
+def test_gilbert_elliott_rate():
+    rng = random.Random(9)
+    ge = GilbertElliott(rng, loss_rate=1e-3, burst=0.3)
+    n = 400_000
+    losses = sum(1 for _ in range(n) if ge(None, 0.0))
+    assert 0.3e-3 < losses / n < 3e-3
+
+
+def test_mixed_incast_fair_and_complete():
+    """Integration: the paper's 4+4 incast converges near fair share."""
+    net = _net()
+    rng = random.Random(10)
+    flows = []
+    for i in range(1, 5):
+        flows.append(W.spawn(net, i, 0, 24 * MIB, cc_scheme="uno", lb="rps",
+                             rng=rng, trace_rate=True))
+    for i in range(4):
+        flows.append(W.spawn(net, 8 + i, 0, 24 * MIB, cc_scheme="uno",
+                             lb="rps", rng=rng, trace_rate=True))
+    net.sim.run(until=400 * MS)
+    assert all(f.fct is not None for f in flows)
+    rates = W.bin_rates(flows, 1 * MS, 40 * MS)
+    mid = [W.mean_rate_gbps(rates[f.id], 8 * MS, 24 * MS) for f in flows]
+    assert W.jain(mid) > 0.7, mid
+
+
+@pytest.mark.parametrize("scheme", ["uno", "gemini", "mprdma+bbr"])
+def test_all_schemes_complete_small_workload(scheme):
+    net = Dumbbell(n_left=8, n_right=1)
+    if scheme == "uno":
+        net.attach_phantoms()
+    rng = random.Random(11)
+    flows = [W.spawn(net, i, 0, 1 * MIB, cc_scheme=scheme, lb="ecmp", rng=rng)
+             for i in (1, 2, 8)]
+    net.sim.run(until=600 * MS)
+    assert all(f.fct is not None for f in flows)
+
+
+def test_fattree_paths_valid():
+    net = TwoDCFatTree(seed=12)
+    for (s, d) in [(0, 1), (0, 5), (0, 17), (0, 130), (130, 5)]:
+        paths = net.paths(s, d)
+        assert len(paths) >= 1
+        for p in paths:
+            assert p[0].name == f"h{s}->e"
+            assert p[-1].name == f"e->h{d}"
+    assert net.is_inter(0, 130) and not net.is_inter(0, 5)
+
+
+def test_workload_cdf_sampling():
+    rng = random.Random(13)
+    xs = [W.sample_cdf(W.WEBSEARCH_CDF, rng) for _ in range(4000)]
+    assert min(xs) >= 1
+    assert max(xs) <= 20 * MIB
+    mean = sum(xs) / len(xs)
+    assert 0.3 * W.cdf_mean(W.WEBSEARCH_CDF) < mean \
+        < 3 * W.cdf_mean(W.WEBSEARCH_CDF)

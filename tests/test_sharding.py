@@ -1,0 +1,32 @@
+"""Logical-axis resolution rules."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro import sharding
+
+
+def test_no_mesh_resolves_empty():
+    assert sharding.resolve("batch", None) == P()
+
+
+def test_rules_override_context():
+    prev = dict(sharding._STATE.rules)
+    with sharding.use_rules({"batch": ("data",)}):
+        assert sharding._STATE.rules["batch"] == ("data",)
+    assert sharding._STATE.rules == prev
+
+
+def test_divisibility_dropping():
+    mesh = jax.make_mesh((1,), ("model",))
+    with sharding.use_mesh(mesh):
+        # 9 heads on a 1-way axis: fine; shape-indivisible axes are dropped
+        spec = sharding.resolve("tensor", shape=(9,))
+        assert spec in (P("model"), P(None))
+
+
+def test_spec_tree_to_shardings():
+    mesh = jax.make_mesh((1,), ("data",))
+    specs = {"a": P("data"), "b": P()}
+    sh = sharding.spec_tree_to_shardings(mesh, specs)
+    assert sh["a"].spec == P("data")

@@ -1,0 +1,179 @@
+"""UnoCC / baseline controller invariants (unit + hypothesis property)."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.baselines import BBRLite, Gemini, GeminiParams, MPRDMA, make_cc
+from repro.core.unocc import UnoCC, UnoParams
+
+US = 1_000.0
+MS = 1_000_000.0
+
+
+def mk(bdp=175_000.0, **kw):
+    return UnoCC(UnoParams(bdp=bdp, intra_bdp=175_000.0, intra_rtt=14 * US,
+                           **kw))
+
+
+def test_ai_per_rtt_equals_alpha():
+    """Paper: 'after one RTT in an uncongested network, cwnd increases by
+    alpha' — one cwnd's worth of clean ACKs adds ~alpha."""
+    cc = mk()
+    c0 = cc.cwnd
+    acked, t = 0.0, 0.0
+    while acked < c0:
+        cc.on_ack(4096, False, 14 * US, t, t + 14 * US)
+        acked += 4096
+        t += 100.0
+    assert math.isclose(cc.cwnd - c0, cc.p.alpha, rel_tol=0.05)
+
+
+def test_md_reduces_on_marked_epoch():
+    cc = mk()
+    t = 0.0
+    cc.on_ack(4096, False, 14 * US, 0.0, t)            # activates epoch
+    c0 = cc.cwnd
+    # marked ACKs with physical-queue delay, epoch terminates on late send
+    for i in range(30):
+        t += 1000.0
+        cc.on_ack(4096, True, 28 * US, t - 14 * US, t)
+    assert cc.cwnd < c0
+    assert cc.n_md >= 1
+
+
+def test_gentle_md_when_no_delay():
+    """Marks with ~zero relative delay (phantom congestion) shrink cwnd much
+    less than marks with queuing delay."""
+    def run(delay_ns):
+        cc = mk()
+        t = 0.0
+        cc.on_ack(4096, False, 14 * US, 0.0, t)
+        base = cc.rtt_base
+        for i in range(200):
+            t += 1000.0
+            cc.on_ack(4096, True, base + delay_ns, t - 14 * US, t)
+        return cc.cwnd
+
+    gentle = run(0.0)
+    harsh = run(20 * US)
+    assert gentle > harsh
+
+
+def test_qa_collapses_on_blackout():
+    cc = mk()
+    t = 0.0
+    for i in range(50):                                 # healthy window
+        t += 280.0
+        cc.on_ack(4096, False, 14 * US, t - 14 * US, t)
+    c0 = cc.cwnd
+    # then silence: QA ticks with a full pipe and no ACKs
+    for k in range(4):
+        t += 14 * US
+        cc.on_qa_tick(t, inflight=cc.cwnd)
+    assert cc.n_qa >= 1
+    assert cc.cwnd < 0.25 * c0
+
+
+def test_qa_respects_small_window_guard():
+    cc = mk()
+    cc.cwnd = 2 * 4096.0                                # below 4 MTU guard
+    fired = any(cc.on_qa_tick(t * 14 * US, inflight=cc.cwnd)
+                for t in range(1, 6))
+    assert not fired
+
+
+def test_qa_skip_after_trigger():
+    cc = mk()
+    t = 14 * US
+    cc.on_ack(4096, False, 14 * US, 0.0, t)
+    # force two deficient windows -> trigger
+    for k in range(3):
+        t += 14 * US
+        cc.on_qa_tick(t, inflight=cc.cwnd)
+    assert cc.n_qa == 1
+    n = cc.n_qa
+    t += 1000.0
+    cc.on_qa_tick(t, inflight=cc.cwnd)                  # inside skip window
+    assert cc.n_qa == n
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.floats(0.5, 4.0)),
+                min_size=1, max_size=300))
+def test_cwnd_always_bounded(events):
+    """Property: any ACK/QA event sequence keeps cwnd in [min, max]."""
+    cc = mk()
+    t = 0.0
+    for i, (ecn, rtt_mult) in enumerate(events):
+        t += 500.0
+        cc.on_ack(4096, ecn, rtt_mult * 14 * US, t - 14 * US, t)
+        if i % 7 == 0:
+            cc.on_qa_tick(t, inflight=cc.cwnd * 0.9)
+        assert cc.min_cwnd <= cc.cwnd <= cc.max_cwnd
+
+
+def test_epoch_cadence_is_intra_rtt_for_inter_flows():
+    """The fairness mechanism: an inter-DC flow (2 ms RTT) must terminate
+    epochs ~ once per intra-RTT epoch period, not once per own RTT."""
+    cc = UnoCC(UnoParams(bdp=25e6, intra_bdp=175_000.0, intra_rtt=14 * US))
+    t = 0.0
+    rtt = 2 * MS
+    # steady ACK stream: one 4 KiB ACK every 10 us for 20 ms
+    n = 2000
+    for i in range(n):
+        t += 10 * US
+        cc.on_ack(4096, False, rtt, t - rtt, t)
+    # 20 ms / 14 us epoch period ~= 1400 possible epochs; own-RTT cadence
+    # would only allow ~10.
+    assert cc.n_epochs > 200, cc.n_epochs
+
+
+def test_fast_increase_engages_below_bdp():
+    cc = mk()
+    cc.cwnd = cc.min_cwnd * 4
+    t = 0.0
+    for i in range(400):
+        t += 3500.0
+        cc.on_ack(4096, False, 14 * US, t - 14 * US, t)
+    assert cc.cwnd > 0.5 * cc.p.bdp                     # recovered quickly
+
+
+# ------------------------------------------------------------- baselines
+
+def test_gemini_reacts_once_per_own_rtt():
+    p = GeminiParams(bdp=25e6, intra_bdp=175_000.0, intra_rtt=14 * US,
+                     is_inter=True)
+    g = Gemini(p)
+    g._in_slow_start = False
+    t = 0.0
+    rtt = 2 * MS
+    for i in range(2000):
+        t += 10 * US
+        g.on_ack(4096, True, rtt, t - rtt, t)
+    # 20 ms at one reaction per own 2 ms RTT -> ~10 MDs, far fewer than Uno's
+    assert g.n_md <= 20
+
+
+def test_mprdma_decreases_on_marks():
+    m = MPRDMA(175_000.0)
+    c0 = m.cwnd
+    for i in range(50):
+        m.on_ack(4096, True, 14 * US, 0.0, i * 1000.0)
+    assert m.cwnd < c0
+
+
+def test_bbr_estimates_bandwidth():
+    b = BBRLite(25e6)
+    t = 0.0
+    for i in range(3000):
+        t += 3276.8                     # 4 KiB / 1.25 GB/s pace
+        b.on_ack(4096, False, 2 * MS, t - 2 * MS, t)
+    assert b._bw_max > 0
+    assert b.pacing_rate is not None
+
+
+def test_factory():
+    for scheme in ("uno", "gemini", "mprdma+bbr", "mprdma", "bbr"):
+        cc = make_cc(scheme, bdp=1e6, intra_bdp=175e3, intra_rtt=14 * US,
+                     is_inter=True)
+        assert cc.cwnd > 0
