@@ -1,0 +1,74 @@
+"""fleetsim throughput benchmark: flows x epochs per second, plus a sweep.
+
+Acceptance target (ISSUE 1): >= 1,000 flows x 10,000 epochs simulated in
+under 30 s on CPU — the scale gap the fluid model exists to close (the
+packet simulator needs minutes for a few dozen flows).
+
+Reports: jitted single-scenario rate (compile time separated out), the same
+1k-flow scenario's steady utilization/fairness as a sanity check, and a
+vmapped fairness grid to show whole-sweep cost.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common
+from repro.fleetsim import dumbbell, make_params, simulate
+from repro.fleetsim.links import RATE_100G, US
+from repro.fleetsim.sweeps import fairness_sweep, jain
+
+
+def _timed_sim(n_flows: int, n_epochs: int) -> dict:
+    net, bdp, rtt = dumbbell(n_flows // 2, n_flows - n_flows // 2,
+                             n_bottleneck=max(1, n_flows // 64))
+    params = make_params(bdp, rtt, RATE_100G * 14 * US, 14 * US)
+
+    t0 = time.time()
+    final, _ = simulate(net, params, n_epochs=n_epochs)
+    jax.block_until_ready(final.cwnd)
+    cold_s = time.time() - t0          # includes jit compile
+
+    t0 = time.time()
+    final, _ = simulate(net, params, n_epochs=n_epochs)
+    jax.block_until_ready(final.cwnd)
+    warm_s = time.time() - t0
+
+    rate = np.asarray(final.cwnd / params.rtt)
+    return {
+        "n_flows": n_flows, "n_epochs": n_epochs,
+        "cold_s": round(cold_s, 2), "warm_s": round(warm_s, 3),
+        "flow_epochs_per_s": round(n_flows * n_epochs / warm_s),
+        "under_30s": cold_s < 30.0,
+        "final_jain": round(float(jain(rate)), 4),
+    }
+
+
+def run(quick: bool = True) -> dict:
+    out = {"acceptance": _timed_sim(1000, 10_000)}
+    if not quick:
+        out["10k_flows"] = _timed_sim(10_000, 10_000)
+        out["100k_epochs"] = _timed_sim(1000, 100_000)
+
+    t0 = time.time()
+    grid = fairness_sweep([2, 10, 50, 140], [0.8, 0.9, 0.95],
+                          n_warm=50_000 if not quick else 20_000,
+                          n_meas=10_000 if not quick else 5_000)
+    out["fairness_grid"] = {
+        "wall_s": round(time.time() - t0, 1),
+        "cells": int(grid["jain"].size),
+        "min_jain": round(float(grid["jain"].min()), 4),
+        "class_ratio_range": [round(float(grid["class_ratio"].min()), 3),
+                              round(float(grid["class_ratio"].max()), 3)],
+        "util_range": [round(float(grid["util"].min()), 3),
+                       round(float(grid["util"].max()), 3)],
+    }
+    common.save("fleetsim_sweep", out)
+    return out
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(run(quick=True), indent=1))

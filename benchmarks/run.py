@@ -25,6 +25,7 @@ MODULES = [
     "fig11_rtt",
     "fig12_buffers",
     "fig13_failures",
+    "fleetsim_sweep",
     "kernels_bench",
     "uno_collectives_bench",
 ]
@@ -53,6 +54,14 @@ def _summ(name: str, res: dict) -> str:
                     f"{u['intra']['p99_ms']:.1f}/{u['inter']['p99_ms']:.1f}ms "
                     f"gemini={g['intra']['p99_ms']:.1f}/{g['inter']['p99_ms']:.1f}ms")
             return " | ".join(parts)
+        if name == "fleetsim_sweep":
+            a = res["acceptance"]
+            g = res["fairness_grid"]
+            return (f"{a['n_flows']}x{a['n_epochs']}ep cold={a['cold_s']}s "
+                    f"warm={a['warm_s']}s "
+                    f"({a['flow_epochs_per_s']:.2e} flow-epochs/s); "
+                    f"grid {g['cells']} cells {g['wall_s']}s "
+                    f"min_jain={g['min_jain']}")
         if name == "fig13_failures":
             a = res["A_border_link_fail"]
             return (f"A mean-fct: uno+EC={a['unolb+EC']['mean_fct_ms']}ms "

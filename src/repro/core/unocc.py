@@ -27,6 +27,46 @@ from __future__ import annotations
 import dataclasses
 
 
+# --------------------------------------------------------- shared control math
+#
+# The Algorithm-1 arithmetic lives in free functions so the scalar per-flow
+# state machine below and the vectorized fluid model (repro.fleetsim.cc) run
+# the *same* formulas: every expression is plain +-*/ on its inputs, and the
+# only order comparisons are injected via `minimum`/`maximum` so callers can
+# pass jnp.minimum/jnp.maximum for (n_flows,) arrays.  Keeping this module
+# dependency-free (no jax import) is deliberate — netsim and the host-side
+# scheduler must not drag in an accelerator runtime.
+
+def derived_params(bdp, intra_bdp, intra_rtt, *, alpha_frac=0.001,
+                   k_frac=1.0 / 7.0, epoch_period_frac=1.0):
+    """(alpha, K, epoch_period) from the three path quantities (§4.1.1).
+
+    alpha = alpha_frac * BDP        — AI step per clean RTT
+    K     = k_frac * intra-DC BDP   — MD gain knee
+    epoch = frac * intra-DC RTT     — ONE granularity for all flows
+    """
+    return alpha_frac * bdp, k_frac * intra_bdp, epoch_period_frac * intra_rtt
+
+
+def md_ecn_gain(k_md, bdp):
+    """BDP-compensating MD gain 4K/(K+BDP): long (high-BDP) flows see the
+    same marks as short ones but must shed proportionally less per epoch."""
+    return 4.0 * k_md / (k_md + bdp)
+
+
+def md_factor(ecn_ewma, md_scale, k_md, bdp, md_cap, *, minimum=min):
+    """Per-epoch multiplicative-decrease factor on cwnd (Alg 1 l.13),
+    capped at md_cap.  `minimum` is `min` for scalars, jnp.minimum for
+    vectorized state."""
+    return 1.0 - minimum(ecn_ewma * md_ecn_gain(k_md, bdp) * md_scale, md_cap)
+
+
+def gentle_md_scale(md_scale, gentle_scale, gentle_floor, *, maximum=max):
+    """Consecutive phantom-only epochs compound the 0.3x gentle scaling,
+    floored so it cannot decay to zero (see the deviation note below)."""
+    return maximum(md_scale * gentle_scale, gentle_floor)
+
+
 @dataclasses.dataclass
 class UnoParams:
     bdp: float                      # this flow's path BDP (bytes)
@@ -45,6 +85,9 @@ class UnoParams:
     cwnd0: float = 0.0              # initial cwnd (0 -> BDP)
     max_cwnd_bdps: float = 1.5      # cwnd cap in BDPs
 
+    # Same formulas as derived_params (which fleetsim consumes in array
+    # form); kept as single multiplies here — alpha is read on the per-ACK
+    # hot path of the pure-Python packet simulator.
     @property
     def alpha(self) -> float:
         return self.alpha_frac * self.bdp
@@ -150,12 +193,13 @@ class UnoCC:
                 # phantom-only epochs and is floored — compounding to zero
                 # would let cwnd grow until physical queues fill, defeating
                 # the phantom (deviation recorded in DESIGN.md)
-                self._md_scale = max(self._md_scale * p.gentle_scale,
-                                     p.gentle_floor)
+                self._md_scale = gentle_md_scale(self._md_scale,
+                                                 p.gentle_scale,
+                                                 p.gentle_floor)
             else:
                 self._md_scale = 1.0
-            md_ecn = self._ecn_ewma * (4.0 * p.k_md / (p.k_md + p.bdp))
-            factor = 1.0 - min(md_ecn * self._md_scale, p.md_cap)
+            factor = md_factor(self._ecn_ewma, self._md_scale, p.k_md, p.bdp,
+                               p.md_cap)
             self.cwnd = max(self.cwnd * factor, self.min_cwnd)
             self.n_md += 1
         elif frac == 0.0:

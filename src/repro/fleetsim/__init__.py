@@ -1,0 +1,20 @@
+"""repro.fleetsim — JAX-jitted fluid-model simulator for fleet-scale sweeps.
+
+The packet simulator (repro.netsim) is per-packet-faithful but pure Python:
+it tops out at a few dozen flows.  fleetsim trades packet fidelity for a
+flow-level fluid model stepped on the UnoCC epoch clock — (n_flows,) state
+arrays, one jitted `lax.scan` step, scenario grids via `vmap` — so 10k+
+flows x 100k epochs run in seconds and parameter heatmaps (RTT ratio, load,
+phantom drain) become cheap.  repro.fleetsim.validate cross-checks the fluid
+steady state against netsim on small scenarios.
+"""
+from repro.fleetsim.cc import SCHEMES, make_step, simulate, steady_state
+from repro.fleetsim.links import FluidNet, dumbbell
+from repro.fleetsim.state import (FleetParams, FleetState, init_state,
+                                  make_params)
+
+__all__ = [
+    "SCHEMES", "make_step", "simulate", "steady_state",
+    "FluidNet", "dumbbell",
+    "FleetParams", "FleetState", "init_state", "make_params",
+]

@@ -1,0 +1,224 @@
+"""Vectorized congestion-control state machines on a fixed epoch clock.
+
+One `step` = one epoch (intra-DC-RTT-derived period, the paper's single
+granularity).  Per epoch, for all flows at once:
+
+  send rates -> per-link offered load -> queue occupancies (physical +
+  phantom) -> expected ECN mark fractions -> window accumulators -> the
+  scheme's window reaction (Alg 1 for UnoCC; per-own-RTT reactions for the
+  DCTCP / Gemini baselines) -> Quick-Adapt (UnoCC only).
+
+The MD arithmetic is imported from repro.core.unocc — the scalar per-flow
+controller and this fleet model share the formulas, they differ only in
+plumbing.  Everything here is jit-compiled via `jax.lax.scan` and carries
+pure (n_flows,)/(n_links,) arrays, so 10k flows x 100k epochs run in seconds
+and whole scenarios `vmap` across parameter grids (repro.fleetsim.sweeps).
+
+Fluid-model fidelity limits (vs repro.netsim, recorded in ROADMAP.md): flows
+are backlogged (no flow sizes / FCTs / app-limited senders), marking is the
+RED expectation (no per-packet randomness), feedback is one epoch rather
+than one RTT delayed, queues see *offered* load (upstream bottlenecks do not
+thin downstream arrivals), and the scalar controller's fast-increase /
+slow-start transients are omitted.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.unocc import gentle_md_scale, md_ecn_gain, md_factor
+from repro.fleetsim import links as L
+from repro.fleetsim.state import FleetParams, FleetState, init_state
+
+SCHEMES = ("uno", "gemini", "dctcp")
+_FRAC_EPS = 1e-6
+
+
+def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
+              is_inter: Optional[jnp.ndarray] = None):
+    """Build the per-epoch transition: state -> (state', goodput)."""
+    if scheme not in SCHEMES:
+        raise ValueError(f"unknown fleetsim scheme {scheme!r}")
+    if is_inter is None:
+        is_inter = jnp.zeros_like(params.bdp, bool)
+
+    def step(state: FleetState, _):
+        p = params
+        # ---- network: loads, queues, marks, delays ----------------------
+        rate = state.cwnd / p.rtt
+        load = L.offered_load(net, rate)
+        goodput = rate * L.bottleneck_scale(net, load)
+        q_phys, q_phantom = L.step_queues(net, state.q_phys,
+                                          state.q_phantom, load)
+        inst_frac = L.path_mark_frac(net, L.mark_prob(net, q_phys, q_phantom))
+        inst_delay = L.path_delay(net, q_phys)
+        # Feedback lag: a sender observes congestion one flow-RTT late (marks
+        # ride the data+ACK round trip).  First-order filter with time
+        # constant = flow RTT — exact for intra flows (rtt == dt), and for
+        # long-RTT flows it reproduces the overshoot the packet simulator
+        # shows (growth continues while marks are in flight), without
+        # carrying an explicit per-link delay line.
+        fb = jnp.minimum(net.dt / p.rtt, 1.0)
+        frac = state.obs_frac + fb * (inst_frac - state.obs_frac)
+        delay = state.obs_delay + fb * (inst_delay - state.obs_delay)
+        acked = goodput * net.dt
+
+        # ---- window accumulators ----------------------------------------
+        win_acked = state.win_acked + acked
+        win_marked = state.win_marked + frac * acked
+        win_dmin = jnp.minimum(state.win_delay_min, delay)
+        win_dmax = jnp.maximum(state.win_delay_max, delay)
+        fire = state.cc_countdown <= 1
+        can_md = state.skip <= 0
+        wfrac = win_marked / jnp.maximum(win_acked, 1.0)
+        marked = wfrac > _FRAC_EPS
+
+        # ---- additive increase (continuous, on unmarked bytes) ----------
+        ai_gain = p.mtu if scheme == "dctcp" else p.alpha
+        cwnd = state.cwnd + ai_gain * acked * (1.0 - frac) / \
+            jnp.maximum(state.cwnd, 1.0)
+
+        # ---- window reaction --------------------------------------------
+        ecn_ewma = jnp.where(
+            fire, (1.0 - p.ewma_g) * state.ecn_ewma + p.ewma_g * wfrac,
+            state.ecn_ewma)
+        md_scale = state.md_scale
+        if scheme == "uno":                          # Alg 1 OnEpoch
+            gentle = jnp.where(
+                win_dmin < p.delay_thresh,
+                gentle_md_scale(state.md_scale, p.gentle_scale,
+                                p.gentle_floor, maximum=jnp.maximum),
+                1.0)
+            md_scale = jnp.where(fire & marked & can_md, gentle,
+                                 jnp.where(fire & ~marked, 1.0,
+                                           state.md_scale))
+            factor = md_factor(ecn_ewma, md_scale, p.k_md, p.bdp, p.md_cap,
+                               minimum=jnp.minimum)
+            cwnd = jnp.where(fire & marked & can_md,
+                             jnp.maximum(cwnd * factor, p.min_cwnd), cwnd)
+        elif scheme == "gemini":                     # per-own-RTT reaction
+            md = jnp.where(marked,
+                           ecn_ewma * md_ecn_gain(p.k_md, p.bdp), 0.0)
+            wan_md = jnp.where(
+                is_inter & (win_dmax > p.delay_thresh),
+                0.5 * jnp.minimum(win_dmax / p.rtt, 1.0), 0.0)
+            md = jnp.minimum(jnp.maximum(md, wan_md), p.md_cap)
+            cwnd = jnp.where(fire & (md > 0.0),
+                             jnp.maximum(cwnd * (1.0 - md), p.min_cwnd),
+                             cwnd)
+        else:                                        # dctcp: cwnd *= 1 - E/2
+            cwnd = jnp.where(fire & marked,
+                             jnp.maximum(cwnd * (1.0 - 0.5 * ecn_ewma),
+                                         p.min_cwnd),
+                             cwnd)
+
+        win_acked = jnp.where(fire, 0.0, win_acked)
+        win_marked = jnp.where(fire, 0.0, win_marked)
+        win_dmin = jnp.where(fire, jnp.inf, win_dmin)
+        win_dmax = jnp.where(fire, 0.0, win_dmax)
+        cc_countdown = jnp.where(fire, p.cc_period, state.cc_countdown - 1)
+
+        # ---- Quick-Adapt (UnoCC only; Alg 1 OnQA) -----------------------
+        qa_acked = state.qa_acked + acked
+        qa_prev = state.qa_prev_acked
+        qa_deficits = state.qa_deficits
+        skip = jnp.maximum(state.skip - 1, 0)
+        qa_countdown = state.qa_countdown - 1
+        if scheme == "uno":
+            tick = state.qa_countdown <= 1
+            # fluid flows are backlogged, so the "window exercised" guard
+            # (inflight + acked >= beta*cwnd) always holds; the 4-MTU
+            # quantization guard still applies.
+            deficit = (tick & (state.cwnd >= 4.0 * p.mtu)
+                       & (qa_acked < p.beta * state.cwnd))
+            trigger = deficit & (state.qa_deficits >= 1) & can_md
+            cwnd = jnp.where(
+                trigger,
+                jnp.maximum(jnp.maximum(qa_acked, qa_prev), p.min_cwnd),
+                cwnd)
+            qa_deficits = jnp.where(
+                tick, jnp.where(deficit & ~trigger, state.qa_deficits + 1, 0),
+                state.qa_deficits)
+            skip = jnp.where(trigger, 2 * p.qa_period, skip)
+            qa_prev = jnp.where(tick, qa_acked, qa_prev)
+            qa_acked = jnp.where(tick, 0.0, qa_acked)
+            qa_countdown = jnp.where(tick, p.qa_period, qa_countdown)
+
+        cwnd = jnp.clip(cwnd, p.min_cwnd, p.max_cwnd)
+        new = FleetState(
+            cwnd=cwnd, ecn_ewma=ecn_ewma, md_scale=md_scale,
+            q_phys=q_phys, q_phantom=q_phantom,
+            obs_frac=frac, obs_delay=delay,
+            win_acked=win_acked, win_marked=win_marked,
+            win_delay_min=win_dmin, win_delay_max=win_dmax,
+            cc_countdown=cc_countdown,
+            qa_acked=qa_acked, qa_prev_acked=qa_prev,
+            qa_deficits=qa_deficits, qa_countdown=qa_countdown, skip=skip)
+        return new, goodput
+
+    return step
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scheme", "n_epochs", "record"))
+def _simulate(net, params, state0, is_inter, scheme, n_epochs, record):
+    step = make_step(net, params, scheme, is_inter)
+    if record:
+        return jax.lax.scan(step, state0, None, length=n_epochs)
+    final, _ = jax.lax.scan(lambda s, x: (step(s, x)[0], None),
+                            state0, None, length=n_epochs)
+    return final, None
+
+
+def simulate(net: L.FluidNet, params: FleetParams, *, n_epochs: int,
+             scheme: str = "uno", state0: Optional[FleetState] = None,
+             is_inter: Optional[jnp.ndarray] = None, record: bool = False):
+    """Run `n_epochs` epochs; returns (final_state, goodput_trajectory).
+
+    `goodput_trajectory` is (n_epochs, n_flows) bytes/ns when `record`,
+    else None.  Jit-compiled; recompiles only on new (scheme, n_epochs,
+    record, shapes).
+    """
+    if state0 is None:
+        state0 = init_state(params, net.n_links)
+    if is_inter is None:
+        is_inter = jnp.zeros_like(params.bdp, bool)
+    return _simulate(net, params, state0, is_inter, scheme, n_epochs, record)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("scheme", "n_warm", "n_meas"))
+def steady_state_core(net, params, state0, is_inter, scheme, n_warm, n_meas):
+    """Warm up, then return (final_state, mean goodput over n_meas epochs).
+
+    The measurement pass accumulates a running sum in the carry instead of
+    materializing the (n_meas, n_flows) trajectory — this is the vmap-safe
+    entry point sweeps fan out over (a stacked trajectory for a whole grid
+    would not fit memory)."""
+    step = make_step(net, params, scheme, is_inter)
+    state, _ = jax.lax.scan(lambda s, x: (step(s, x)[0], None),
+                            state0, None, length=n_warm)
+
+    def acc_step(carry, _):
+        s, acc = carry
+        s, goodput = step(s, None)
+        return (s, acc + goodput), None
+
+    (state, acc), _ = jax.lax.scan(
+        acc_step, (state, jnp.zeros_like(params.bdp)), None, length=n_meas)
+    return state, acc / n_meas
+
+
+def steady_state(net: L.FluidNet, params: FleetParams, *, n_warm: int,
+                 n_meas: int, scheme: str = "uno",
+                 state0: Optional[FleetState] = None,
+                 is_inter: Optional[jnp.ndarray] = None):
+    if state0 is None:
+        state0 = init_state(params, net.n_links)
+    if is_inter is None:
+        is_inter = jnp.zeros_like(params.bdp, bool)
+    return steady_state_core(net, params, state0, is_inter, scheme,
+                             n_warm, n_meas)

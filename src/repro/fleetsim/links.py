@@ -1,0 +1,160 @@
+"""Fluid-model topology: links as (n_links,) arrays, routes as a padded
+flow→link hop table.
+
+The flow→link incidence is sparse: `routes[i, h]` is the h-th link on flow
+i's path (-1 padding past the last hop).  Per-link aggregates are scatter-adds
+into an `n_links + 1` buffer (the pad slot absorbs the -1s) and per-flow path
+reductions are gathers — both O(n_flows * max_hops) and fully jit/vmap-able.
+
+Queue model per epoch `dt` (forward-Euler on the htsim analogue in
+repro.netsim.engine):
+
+  physical:  q' = clip(q + (arrivals - cap)    * dt, 0, qcap)
+  phantom:   q' = clip(q + (arrivals - drain)  * dt, 0, vcap)   drain < cap
+
+ECN is the *expectation* of the engine's RED: linear ramp between the
+lo/hi thresholds of the marking queue (phantom where attached, else
+physical).  A flow's mark fraction composes independently across hops:
+frac = 1 - prod(1 - p_link).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+GBPS = 0.125               # bytes per ns per Gbit/s (matches netsim.topology)
+RATE_100G = 100 * GBPS
+US = 1_000.0
+MS = 1_000_000.0
+MIB = 1024 * 1024
+_EPS = 1e-9
+
+
+class FluidNet(NamedTuple):
+    """Topology constants.  All (n_links,) float32 except `routes`/`dt`."""
+    cap: jnp.ndarray            # service rate (bytes/ns)
+    qcap: jnp.ndarray           # physical queue capacity (bytes)
+    ecn_lo: jnp.ndarray         # RED thresholds on the *marking* queue
+    ecn_hi: jnp.ndarray
+    drain: jnp.ndarray          # phantom drain rate; == cap where no phantom
+    vcap: jnp.ndarray           # phantom capacity; == qcap where no phantom
+    use_phantom: jnp.ndarray    # bool: mark on phantom (Uno) vs physical RED
+    routes: jnp.ndarray         # (n_flows, max_hops) int32, -1 padded
+    dt: jnp.ndarray             # scalar epoch period (ns)
+
+    @property
+    def n_links(self) -> int:
+        return self.cap.shape[0]
+
+
+def _pad_idx(net: FluidNet) -> jnp.ndarray:
+    """Hop indices with -1 redirected to the scratch slot n_links."""
+    return jnp.where(net.routes >= 0, net.routes, net.n_links)
+
+
+def offered_load(net: FluidNet, rates: jnp.ndarray) -> jnp.ndarray:
+    """(n_links,) aggregate arrival rate from per-flow send rates."""
+    hop_mask = (net.routes >= 0).astype(rates.dtype)
+    per_hop = rates[:, None] * hop_mask              # (n_flows, max_hops)
+    buf = jnp.zeros(net.n_links + 1, rates.dtype)
+    buf = buf.at[_pad_idx(net).ravel()].add(per_hop.ravel())
+    return buf[:net.n_links]
+
+
+def bottleneck_scale(net: FluidNet, load: jnp.ndarray) -> jnp.ndarray:
+    """(n_flows,) goodput/offered ratio: min over the path of cap/load.
+
+    FIFO fluid approximation — an overloaded link serves flows
+    proportionally to their arrival rates.
+    """
+    s = jnp.minimum(1.0, net.cap / jnp.maximum(load, _EPS))
+    s = jnp.concatenate([s, jnp.ones(1, s.dtype)])   # pad slot: no constraint
+    return jnp.min(s[_pad_idx(net)], axis=1)
+
+
+def step_queues(net: FluidNet, q_phys: jnp.ndarray, q_phantom: jnp.ndarray,
+                load: jnp.ndarray):
+    """One forward-Euler epoch of both queue families."""
+    q_phys = jnp.clip(q_phys + (load - net.cap) * net.dt, 0.0, net.qcap)
+    q_phantom = jnp.clip(q_phantom + (load - net.drain) * net.dt,
+                         0.0, net.vcap)
+    return q_phys, q_phantom
+
+
+def mark_prob(net: FluidNet, q_phys: jnp.ndarray,
+              q_phantom: jnp.ndarray) -> jnp.ndarray:
+    """(n_links,) expected RED mark probability on the marking queue."""
+    q = jnp.where(net.use_phantom, q_phantom, q_phys)
+    return jnp.clip((q - net.ecn_lo) /
+                    jnp.maximum(net.ecn_hi - net.ecn_lo, _EPS), 0.0, 1.0)
+
+
+def path_mark_frac(net: FluidNet, p_link: jnp.ndarray) -> jnp.ndarray:
+    """(n_flows,) mark fraction: 1 - prod over hops of (1 - p)."""
+    clean = jnp.concatenate([1.0 - p_link, jnp.ones(1, p_link.dtype)])
+    return 1.0 - jnp.prod(clean[_pad_idx(net)], axis=1)
+
+
+def path_delay(net: FluidNet, q_phys: jnp.ndarray) -> jnp.ndarray:
+    """(n_flows,) relative queueing delay: sum over hops of q/cap (ns)."""
+    d = jnp.concatenate([q_phys / net.cap, jnp.zeros(1, q_phys.dtype)])
+    return jnp.sum(d[_pad_idx(net)], axis=1)
+
+
+# -------------------------------------------------------------------- builders
+
+def dumbbell(n_intra: int, n_inter: int, *, rate: float = RATE_100G,
+             intra_rtt: float = 14 * US, inter_rtt: float = 2 * MS,
+             qcap: float = 1 * MIB, n_wan: int = 8, n_bottleneck: int = 1,
+             phantom: bool = True, drain_frac: float = 0.9,
+             cap_bdps: float = 1.0, min_frac: float = 0.05,
+             max_frac: float = 0.35, red_lo_frac: float = 0.25,
+             red_hi_frac: float = 0.75, epoch_period_frac: float = 1.0):
+    """Fluid mirror of netsim.topology.Dumbbell (+ attach_phantoms defaults).
+
+    Links: one private uplink per intra sender, ONE aggregated WAN pipe
+    (n_wan parallel border links; packet-sprayed inter flows see their sum),
+    and `n_bottleneck` receiver downlinks.  Flow i goes to downlink
+    i % n_bottleneck; intra flows first, then inter flows.
+
+    Returns (FluidNet, bdp (n_flows,), rtt (n_flows,)).
+    """
+    intra_bdp = rate * intra_rtt
+    inter_bdp = rate * inter_rtt
+    n_flows = n_intra + n_inter
+    # link layout: [up_0..up_{n_intra-1}, wan, down_0..down_{n_bottleneck-1}]
+    wan = n_intra
+    down0 = n_intra + 1
+    n_links = n_intra + 1 + n_bottleneck
+
+    cap = [rate] * n_intra + [n_wan * rate] + [rate] * n_bottleneck
+    vcap = ([cap_bdps * intra_bdp] * n_intra + [n_wan * cap_bdps * inter_bdp]
+            + [cap_bdps * intra_bdp] * n_bottleneck)
+    routes, bdp, rtt = [], [], []
+    for i in range(n_intra):
+        routes.append([i, down0 + i % n_bottleneck])
+        bdp.append(intra_bdp)
+        rtt.append(intra_rtt)
+    for j in range(n_inter):
+        routes.append([wan, down0 + (n_intra + j) % n_bottleneck])
+        bdp.append(inter_bdp)
+        rtt.append(inter_rtt)
+
+    cap = jnp.asarray(cap, jnp.float32)
+    qcap_a = jnp.full(n_links, qcap, jnp.float32)
+    vcap = jnp.asarray(vcap, jnp.float32)
+    if phantom:
+        ecn_lo, ecn_hi = min_frac * vcap, max_frac * vcap
+        drain = drain_frac * cap
+        use_phantom = jnp.ones(n_links, bool)
+    else:
+        ecn_lo, ecn_hi = red_lo_frac * qcap_a, red_hi_frac * qcap_a
+        drain = cap
+        use_phantom = jnp.zeros(n_links, bool)
+    net = FluidNet(cap=cap, qcap=qcap_a, ecn_lo=ecn_lo, ecn_hi=ecn_hi,
+                   drain=drain, vcap=jnp.where(use_phantom, vcap, qcap_a),
+                   use_phantom=use_phantom,
+                   routes=jnp.asarray(routes, jnp.int32),
+                   dt=jnp.float32(epoch_period_frac * intra_rtt))
+    return (net, jnp.asarray(bdp, jnp.float32), jnp.asarray(rtt, jnp.float32))

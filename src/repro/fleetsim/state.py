@@ -1,0 +1,121 @@
+"""Array-of-flows parameters and state for the fluid-model fleet simulator.
+
+Everything is a flat NamedTuple of `(n_flows,)` (or `(n_links,)`) jnp arrays
+so the whole carry is a pytree: `jax.lax.scan` threads it through epochs,
+`jax.jit` compiles one fused step, and `jax.vmap` stacks entire scenarios
+along a leading grid axis (repro.fleetsim.sweeps).
+
+The parameter derivations (alpha, K, epoch period) are the SAME functions the
+scalar per-flow controller uses (repro.core.unocc.derived_params) — fleetsim
+never re-implements the control constants, it only vectorizes them.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.core.unocc import UnoParams, derived_params
+
+_DEFAULT = UnoParams(bdp=1.0, intra_bdp=1.0, intra_rtt=1.0)  # default fracs
+
+
+class FleetParams(NamedTuple):
+    """Per-flow constants, all (n_flows,) float32 unless noted."""
+    bdp: jnp.ndarray            # path BDP (bytes)
+    rtt: jnp.ndarray            # base (uncongested) flow RTT (ns)
+    mtu: jnp.ndarray            # bytes
+    alpha: jnp.ndarray          # AI step per clean RTT (bytes)
+    k_md: jnp.ndarray           # MD gain knee K (bytes)
+    beta: jnp.ndarray           # QA ratio
+    ewma_g: jnp.ndarray         # EWMA gain for the ECN fraction E
+    gentle_scale: jnp.ndarray
+    gentle_floor: jnp.ndarray
+    md_cap: jnp.ndarray
+    delay_thresh: jnp.ndarray   # "zero delay" bound (ns)
+    min_cwnd: jnp.ndarray
+    max_cwnd: jnp.ndarray
+    cc_period: jnp.ndarray      # int32: epochs between CC window reactions
+    qa_period: jnp.ndarray      # int32: epochs between QA evaluations
+
+
+class FleetState(NamedTuple):
+    """Dynamic state threaded through `lax.scan`."""
+    cwnd: jnp.ndarray           # (n_flows,)
+    ecn_ewma: jnp.ndarray       # E — EWMA of per-window mark fraction
+    md_scale: jnp.ndarray       # gentle-reduction scale
+    q_phys: jnp.ndarray         # (n_links,) physical queue occupancy (bytes)
+    q_phantom: jnp.ndarray      # (n_links,) phantom queue occupancy (bytes)
+    obs_frac: jnp.ndarray       # feedback-lagged mark fraction seen by flow
+    obs_delay: jnp.ndarray      # feedback-lagged rel. queueing delay (ns)
+    win_acked: jnp.ndarray      # bytes acked in the open CC window
+    win_marked: jnp.ndarray     # marked bytes in the open CC window
+    win_delay_min: jnp.ndarray  # min rel. queueing delay seen in the window
+    win_delay_max: jnp.ndarray  # max rel. queueing delay (Gemini WAN signal)
+    cc_countdown: jnp.ndarray   # int32 epochs until the window closes
+    qa_acked: jnp.ndarray       # bytes acked since the last QA tick
+    qa_prev_acked: jnp.ndarray
+    qa_deficits: jnp.ndarray    # int32 consecutive deficient QA windows
+    qa_countdown: jnp.ndarray   # int32 epochs until the next QA tick
+    skip: jnp.ndarray           # int32 epochs of MD/QA skip left (post-QA)
+
+
+def make_params(bdp, rtt, intra_bdp: float, intra_rtt: float, *,
+                mtu: float = 4096.0,
+                alpha_frac: float = _DEFAULT.alpha_frac,
+                beta: float = _DEFAULT.beta,
+                k_frac: float = _DEFAULT.k_frac,
+                ewma_g: float = _DEFAULT.ewma_g,
+                delay_thresh_frac: float = _DEFAULT.delay_thresh_frac,
+                epoch_period_frac: float = _DEFAULT.epoch_period_frac,
+                gentle_scale: float = _DEFAULT.gentle_scale,
+                gentle_floor: float = _DEFAULT.gentle_floor,
+                md_cap: float = _DEFAULT.md_cap,
+                max_cwnd_bdps: float = _DEFAULT.max_cwnd_bdps,
+                cc_period_rtts: float = 0.0) -> FleetParams:
+    """Vectorized UnoParams. `bdp`/`rtt` are (n_flows,) arrays.
+
+    `cc_period_rtts == 0` gives the Uno cadence: every flow reacts once per
+    *epoch* (intra-DC-RTT-derived, identical for all flows — the paper's
+    fairness mechanism).  `cc_period_rtts > 0` reacts once per that many OWN
+    RTTs instead (Gemini / DCTCP granularity, the baseline mismatch).
+    """
+    bdp = jnp.asarray(bdp, jnp.float32)
+    rtt = jnp.asarray(rtt, jnp.float32)
+    alpha, k_md, epoch = derived_params(
+        bdp, jnp.float32(intra_bdp), jnp.float32(intra_rtt),
+        alpha_frac=alpha_frac, k_frac=k_frac,
+        epoch_period_frac=epoch_period_frac)
+    ones = jnp.ones_like(bdp)
+    if cc_period_rtts > 0:
+        cc_period = jnp.maximum(
+            jnp.round(cc_period_rtts * rtt / epoch), 1.0).astype(jnp.int32)
+    else:
+        cc_period = jnp.ones_like(bdp, jnp.int32)
+    qa_period = jnp.maximum(jnp.round(rtt / epoch), 1.0).astype(jnp.int32)
+    return FleetParams(
+        bdp=bdp, rtt=rtt, mtu=mtu * ones, alpha=alpha, k_md=k_md * ones,
+        beta=beta * ones, ewma_g=ewma_g * ones,
+        gentle_scale=gentle_scale * ones, gentle_floor=gentle_floor * ones,
+        md_cap=md_cap * ones,
+        delay_thresh=delay_thresh_frac * intra_rtt * ones,
+        min_cwnd=mtu * ones, max_cwnd=max_cwnd_bdps * bdp,
+        cc_period=cc_period, qa_period=qa_period)
+
+
+def init_state(params: FleetParams, n_links: int,
+               cwnd0: Optional[jnp.ndarray] = None) -> FleetState:
+    """Line-rate start (cwnd = BDP), empty queues — matches UnoCC.__init__."""
+    n = params.bdp.shape[0]
+    f0 = jnp.zeros(n, jnp.float32)
+    i0 = jnp.zeros(n, jnp.int32)
+    lk0 = jnp.zeros(n_links, jnp.float32)
+    cwnd = params.bdp if cwnd0 is None else jnp.asarray(cwnd0, jnp.float32)
+    return FleetState(
+        cwnd=cwnd, ecn_ewma=f0, md_scale=jnp.ones_like(f0),
+        q_phys=lk0, q_phantom=lk0, obs_frac=f0, obs_delay=f0,
+        win_acked=f0, win_marked=f0,
+        win_delay_min=jnp.full_like(f0, jnp.inf), win_delay_max=f0,
+        cc_countdown=params.cc_period,
+        qa_acked=f0, qa_prev_acked=f0, qa_deficits=i0,
+        qa_countdown=params.qa_period, skip=i0)

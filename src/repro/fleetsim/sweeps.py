@@ -1,0 +1,146 @@
+"""Scenario sweeps: `vmap` whole fluid simulations across parameter grids.
+
+A "scenario" is (FluidNet, FleetParams, is_inter) — pure pytrees of arrays.
+Scenarios that share shapes (same n_flows / n_links / max_hops) stack along
+a leading axis and one `jit(vmap(steady_state_core))` call sweeps the whole
+grid: RTT ratios x phantom drain fractions, flow-count mixes, load levels —
+heatmaps the per-packet simulator cannot reach (its wall-clock per cell is
+minutes; a fluid cell is milliseconds).
+
+Numeric knobs (RTT, drain, caps, even route link-ids) may vary freely across
+the grid; only array *shapes* must match.  Flow-count mixes therefore keep
+the total flow count fixed and flip flows between intra and inter profiles.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.fleetsim import links as fl
+from repro.fleetsim.cc import steady_state_core
+from repro.fleetsim.state import init_state, make_params
+
+US = fl.US
+
+
+def jain(rates: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Jain fairness index along `axis` (1.0 = perfectly fair)."""
+    s = jnp.sum(rates, axis=axis)
+    s2 = jnp.sum(rates * rates, axis=axis)
+    n = rates.shape[axis]
+    return s * s / jnp.maximum(n * s2, 1e-12)
+
+
+def stack_scenarios(scenarios: Sequence[tuple]):
+    """Stack same-shape (net, params, is_inter) pytrees on a leading axis."""
+    nets, params, inters = zip(*scenarios)
+    stk = lambda *xs: jnp.stack(xs)
+    return (jax.tree.map(stk, *nets), jax.tree.map(stk, *params),
+            jnp.stack(inters))
+
+
+def run_grid(scenarios: Sequence[tuple], *, scheme: str = "uno",
+             n_warm: int = 50_000, n_meas: int = 10_000):
+    """Sweep all scenarios in one vmapped call.
+
+    Returns (final_states, rates): each leaf carries a leading scenario
+    axis; `rates` is (n_scenarios, n_flows) mean steady goodput in bytes/ns.
+    """
+    nets, params, inters = stack_scenarios(scenarios)
+    n_links = nets.cap.shape[1]
+    state0 = jax.vmap(lambda p: init_state(p, n_links))(params)
+
+    def one(net, p, s0, ii):
+        return steady_state_core(net, p, s0, ii, scheme, n_warm, n_meas)
+
+    return jax.jit(jax.vmap(one))(nets, params, state0, inters)
+
+
+# ------------------------------------------------------------ concrete sweeps
+
+def fairness_sweep(rtt_ratios: Sequence[float],
+                   drain_fracs: Sequence[float], *,
+                   n_intra: int = 4, n_inter: int = 4,
+                   rate: float = fl.RATE_100G, intra_rtt: float = 14 * US,
+                   scheme: str = "uno", n_warm: int = 50_000,
+                   n_meas: int = 10_000) -> dict:
+    """Inter/intra fairness heatmap over (RTT ratio x phantom drain frac).
+
+    The paper's Fig 11 question at grid scale: does fairness survive as the
+    inter-DC RTT grows and as the phantom drain (the utilization target)
+    moves?  Returns 2D (len(rtt_ratios), len(drain_fracs)) arrays:
+    'jain', 'class_ratio' (mean inter / mean intra rate), 'util'.
+    """
+    scen, shape = [], (len(rtt_ratios), len(drain_fracs))
+    for ratio in rtt_ratios:
+        for drain in drain_fracs:
+            inter_rtt = ratio * intra_rtt
+            net, bdp, rtt = fl.dumbbell(n_intra, n_inter, rate=rate,
+                                        intra_rtt=intra_rtt,
+                                        inter_rtt=inter_rtt,
+                                        drain_frac=drain)
+            p = make_params(bdp, rtt, rate * intra_rtt, intra_rtt)
+            ii = jnp.arange(n_intra + n_inter) >= n_intra
+            scen.append((net, p, ii))
+    _, rates = run_grid(scen, scheme=scheme, n_warm=n_warm, n_meas=n_meas)
+    ii = jnp.arange(n_intra + n_inter) >= n_intra
+    mean_inter = jnp.mean(rates[:, ii], axis=1) if n_inter else \
+        jnp.zeros(rates.shape[0])
+    mean_intra = jnp.mean(rates[:, ~ii], axis=1) if n_intra else \
+        jnp.ones(rates.shape[0])
+    return {
+        "rtt_ratios": jnp.asarray(rtt_ratios),
+        "drain_fracs": jnp.asarray(drain_fracs),
+        "rates": rates.reshape(shape + (n_intra + n_inter,)),
+        "jain": jain(rates).reshape(shape),
+        "class_ratio": (mean_inter / jnp.maximum(mean_intra, 1e-9))
+        .reshape(shape),
+        "util": (rates.sum(axis=1) / rate).reshape(shape),
+    }
+
+
+def load_mix_sweep(inter_counts: Sequence[int],
+                   loads: Sequence[float], *, n_total: int = 16,
+                   rate: float = fl.RATE_100G, intra_rtt: float = 14 * US,
+                   inter_rtt: float = 2 * fl.MS, scheme: str = "uno",
+                   n_warm: int = 50_000, n_meas: int = 10_000) -> dict:
+    """Heatmap over (flow-count mix x bottleneck load).
+
+    `loads` scales the bottleneck capacity relative to the flows' access
+    rate (load 1.0 = the incast exactly fills the receiver link; >1
+    oversubscribed).  Total flow count stays `n_total` so shapes match;
+    scenario (m, l) runs m inter + (n_total - m) intra flows into a
+    bottleneck of capacity rate / load.
+    """
+    scen, shape = [], (len(inter_counts), len(loads))
+    for m in inter_counts:
+        if not 0 <= m <= n_total:
+            raise ValueError(f"inter count {m} not in [0, {n_total}]")
+        for load in loads:
+            # fixed link layout (n_total uplinks + wan + bottleneck) so all
+            # grid cells stack; the m inter flows repoint hop 0 at the WAN
+            # pipe and take the inter-DC BDP/RTT profile.
+            net, bdp, rtt = fl.dumbbell(n_total, 0, rate=rate,
+                                        intra_rtt=intra_rtt,
+                                        inter_rtt=inter_rtt)
+            ii = jnp.arange(n_total) >= (n_total - m)
+            wan, down = n_total, net.cap.shape[0] - 1
+            net = net._replace(
+                routes=jnp.where(ii[:, None] & (jnp.arange(2) == 0),
+                                 wan, net.routes).astype(jnp.int32),
+                cap=net.cap.at[down].mul(1.0 / load),
+                drain=net.drain.at[down].mul(1.0 / load))
+            bdp = jnp.where(ii, rate * inter_rtt, bdp)
+            rtt = jnp.where(ii, inter_rtt, rtt)
+            p = make_params(bdp, rtt, rate * intra_rtt, intra_rtt)
+            scen.append((net, p, ii))
+    _, rates = run_grid(scen, scheme=scheme, n_warm=n_warm, n_meas=n_meas)
+    return {
+        "inter_counts": jnp.asarray(inter_counts),
+        "loads": jnp.asarray(loads),
+        "rates": rates.reshape(shape + (n_total,)),
+        "jain": jain(rates).reshape(shape),
+        "util": (rates.sum(axis=1) / rate).reshape(shape),
+    }

@@ -1,0 +1,97 @@
+"""Cross-validation of the fluid model against the packet simulator.
+
+The fluid model trades packet fidelity for scale; this module quantifies the
+trade on scenarios small enough for repro.netsim: the same dumbbell is built
+in both simulators, both run UnoCC with phantom queues, and the steady-state
+per-flow throughputs are compared.
+
+Two cadences differ by design and are normalized here:
+
+  * netsim rates are time-window averages of the ACK trace (the packet
+    system reaches steady state in a few ms of simulated time but carries
+    per-packet randomness, so the window must be long);
+  * fluid rates come from `steady_state` after a long warmup (the
+    deterministic RED expectation marks in sparser bursts than per-packet
+    RED, so the fluid limit cycle approaches the same equilibrium more
+    slowly — epochs are ~10,000x cheaper, so we simply run more of them).
+"""
+from __future__ import annotations
+
+import random
+
+import numpy as np
+
+from repro.fleetsim import cc as fleet_cc
+from repro.fleetsim import links as fl
+from repro.fleetsim.state import make_params
+from repro.netsim import workloads as W
+from repro.netsim.topology import Dumbbell, MIB, MS, US
+
+
+def netsim_dumbbell_rates(n_intra: int, n_inter: int, *,
+                          rate: float = fl.RATE_100G,
+                          intra_rtt: float = 14 * US,
+                          inter_rtt: float = 2 * MS,
+                          horizon: float = 45 * MS,
+                          t0: float = 15 * MS,
+                          size: int = 512 * MIB,
+                          seed: int = 1) -> np.ndarray:
+    """Per-flow mean goodput (bytes/ns) over [t0, horizon), intra flows
+    first — the packet-simulator ground truth."""
+    net = Dumbbell(n_left=n_intra + 1, n_right=1, rate=rate,
+                   intra_rtt=intra_rtt, inter_rtt=inter_rtt, seed=seed)
+    net.attach_phantoms()
+    rng = random.Random(seed)
+    flows = [W.spawn(net, 1 + i, 0, size, cc_scheme="uno", lb="ecmp",
+                     rng=rng, trace_rate=True) for i in range(n_intra)]
+    flows += [W.spawn(net, n_intra + 1 + j, 0, size, cc_scheme="uno",
+                      lb="rps", rng=rng, trace_rate=True)
+              for j in range(n_inter)]
+    net.sim.run(until=horizon)
+    span = horizon - t0
+    return np.array([sum(b for (t, b) in f.rate_trace if t0 <= t < horizon)
+                     / span for f in flows])
+
+
+def fluid_dumbbell_rates(n_intra: int, n_inter: int, *,
+                         rate: float = fl.RATE_100G,
+                         intra_rtt: float = 14 * US,
+                         inter_rtt: float = 2 * MS,
+                         n_warm: int = 200_000,
+                         n_meas: int = 20_000) -> np.ndarray:
+    """Fluid steady-state per-flow goodput (bytes/ns), intra flows first."""
+    net, bdp, rtt = fl.dumbbell(n_intra, n_inter, rate=rate,
+                                intra_rtt=intra_rtt, inter_rtt=inter_rtt)
+    params = make_params(bdp, rtt, rate * intra_rtt, intra_rtt)
+    _, rates = fleet_cc.steady_state(net, params, n_warm=n_warm,
+                                     n_meas=n_meas)
+    return np.asarray(rates)
+
+
+def compare_steady_state(n_intra: int, n_inter: int, *,
+                         rate: float = fl.RATE_100G,
+                         intra_rtt: float = 14 * US,
+                         inter_rtt: float = 2 * MS,
+                         horizon: float = 45 * MS,
+                         t0: float = 15 * MS,
+                         n_warm: int = 200_000,
+                         n_meas: int = 20_000,
+                         seed: int = 1) -> dict:
+    """Run both simulators on the same dumbbell; report per-flow agreement.
+
+    Returns {"netsim", "fluid", "rel_err", "max_rel_err", "util_netsim",
+    "util_fluid"} with rates in bytes/ns, intra flows first.
+    """
+    ns = netsim_dumbbell_rates(n_intra, n_inter, rate=rate,
+                               intra_rtt=intra_rtt, inter_rtt=inter_rtt,
+                               horizon=horizon, t0=t0, seed=seed)
+    fm = fluid_dumbbell_rates(n_intra, n_inter, rate=rate,
+                              intra_rtt=intra_rtt, inter_rtt=inter_rtt,
+                              n_warm=n_warm, n_meas=n_meas)
+    rel = np.abs(fm - ns) / np.maximum(ns, 1e-9)
+    return {
+        "netsim": ns, "fluid": fm, "rel_err": rel,
+        "max_rel_err": float(rel.max()),
+        "util_netsim": float(ns.sum() / rate),
+        "util_fluid": float(fm.sum() / rate),
+    }

@@ -19,11 +19,24 @@ import random
 from typing import Sequence
 
 
+def fmix32(h: int) -> int:
+    """MurmurHash3 finalizer: deterministic 32-bit avalanche mix.  Unlike
+    Python's `hash`, this is independent of PYTHONHASHSEED, so ECMP
+    collision patterns reproduce across runs."""
+    h &= 0xFFFFFFFF
+    h ^= h >> 16
+    h = (h * 0x85EBCA6B) & 0xFFFFFFFF
+    h ^= h >> 13
+    h = (h * 0xC2B2AE35) & 0xFFFFFFFF
+    h ^= h >> 16
+    return h
+
+
 class EcmpRouter:
     name = "ecmp"
 
     def __init__(self, paths: Sequence, flow_id: int, rng=None):
-        self.path = paths[hash((flow_id, 0x9E3779B9)) % len(paths)]
+        self.path = paths[fmix32(flow_id ^ 0x9E3779B9) % len(paths)]
 
     def path_for(self, pkt_idx, block):
         return self.path, 0

@@ -31,6 +31,35 @@ DEFAULT_RULES: dict[str, tuple[str, ...]] = {
 }
 
 
+def shard_map(f, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = True):
+    """`jax.shard_map` with the post-0.6 signature on any installed jax.
+
+    Newer releases expose `jax.shard_map(..., axis_names=..., check_vma=...)`
+    directly; on older ones this translates to the experimental API, where
+    `auto` is the complement of `axis_names` over the mesh and `check_rep`
+    plays the role of `check_vma`.
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {} if axis_names is None else {"axis_names": axis_names}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kw)
+    from jax.experimental.shard_map import shard_map as _esm
+    auto = frozenset()
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+    return _esm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                check_rep=check_vma, auto=auto)
+
+
+def set_mesh(mesh):
+    """Context manager activating `mesh`: `jax.set_mesh` where available,
+    else the Mesh object's own context manager (pre-0.6 equivalent)."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 class _State(threading.local):
     def __init__(self):
         self.mesh: Optional[Mesh] = None

@@ -1,0 +1,15 @@
+"""Shared test setup.
+
+The pyproject `pythonpath = ["src"]` option patches only THIS interpreter's
+sys.path; the multi-device tests re-exec `python -c` subprocesses (device
+count must be fixed before jax initializes), and those children find repro/
+through the inherited environment — so export src/ on PYTHONPATH here.
+Do NOT set XLA device counts globally (see tests/test_collectives.py).
+"""
+import os
+import pathlib
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+_pp = os.environ.get("PYTHONPATH", "")
+if SRC not in _pp.split(os.pathsep):
+    os.environ["PYTHONPATH"] = SRC + (os.pathsep + _pp if _pp else "")

@@ -1,0 +1,44 @@
+"""Optional-dependency shim for `hypothesis`.
+
+The property tests are a bonus layer: when hypothesis is installed (CI
+installs it) they run for real; when it is absent the property tests SKIP
+while every example-based test in the same module still collects and runs.
+Usage in a test module:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from hypostub import given, settings, st
+"""
+import pytest
+
+
+def given(*_args, **_kw):
+    def deco(fn):
+        return pytest.mark.skip(reason="hypothesis not installed")(fn)
+    return deco
+
+
+def settings(*_args, **_kw):
+    def deco(fn):
+        return fn
+    return deco
+
+
+class _Strategy:
+    """Inert stand-in: strategy constructors are called at decoration time,
+    so they must exist and compose; they never generate values."""
+
+    def __call__(self, *a, **k):
+        return self
+
+    def __getattr__(self, _name):
+        return self
+
+
+class _Strategies:
+    def __getattr__(self, _name):
+        return _Strategy()
+
+
+st = _Strategies()

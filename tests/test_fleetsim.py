@@ -1,0 +1,170 @@
+"""fleetsim fluid model: link-math units, control-loop behavior, vmapped
+sweeps, and cross-validation against the packet simulator (repro.netsim)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fleetsim import (dumbbell, init_state, make_params, simulate,
+                            steady_state)
+from repro.fleetsim import links as L
+from repro.fleetsim.links import MS, RATE_100G, US
+from repro.fleetsim.sweeps import fairness_sweep, jain, load_mix_sweep
+from repro.fleetsim.validate import compare_steady_state
+
+INTRA_RTT = 14 * US
+INTRA_BDP = RATE_100G * INTRA_RTT
+
+
+def _mini_net():
+    """3 links, 2 flows: flow0 over links [0, 2], flow1 over [1, 2]."""
+    cap = jnp.asarray([10.0, 10.0, 5.0])
+    qcap = jnp.full(3, 1000.0)
+    return L.FluidNet(cap=cap, qcap=qcap, ecn_lo=0.25 * qcap,
+                      ecn_hi=0.75 * qcap, drain=cap, vcap=qcap,
+                      use_phantom=jnp.zeros(3, bool),
+                      routes=jnp.asarray([[0, 2], [1, 2]], jnp.int32),
+                      dt=jnp.float32(1.0))
+
+
+# ----------------------------------------------------------------- link math
+
+def test_offered_load_scatter():
+    net = _mini_net()
+    load = L.offered_load(net, jnp.asarray([3.0, 4.0]))
+    assert np.allclose(load, [3.0, 4.0, 7.0])
+
+
+def test_bottleneck_scale_min_over_path():
+    net = _mini_net()
+    load = jnp.asarray([3.0, 4.0, 10.0])          # shared link 2x overloaded
+    scale = L.bottleneck_scale(net, load)
+    assert np.allclose(scale, [0.5, 0.5])
+    assert np.allclose(L.bottleneck_scale(net, jnp.asarray([1., 1., 1.])),
+                       [1.0, 1.0])
+
+
+def test_queue_step_matches_engine_semantics():
+    """Forward-Euler queues: grow by (load-rate)*dt, clip at capacity,
+    drain to zero — the fluid analogue of netsim.engine.PhantomQueue."""
+    net = _mini_net()._replace(drain=jnp.asarray([1.0, 1.0, 1.0]),
+                               vcap=jnp.full(3, 100.0))
+    q_phys, q_phantom = L.step_queues(
+        net, jnp.zeros(3), jnp.asarray([50.0, 100.0, 0.0]),
+        jnp.asarray([2.0, 3.0, 0.5]))
+    assert np.allclose(q_phys, [0.0, 0.0, 0.0])   # under physical capacity
+    assert np.allclose(q_phantom, [51.0, 100.0, 0.0])  # +1*dt, clip, drain
+
+
+def test_path_mark_frac_composes_hops():
+    net = _mini_net()
+    p_link = jnp.asarray([0.5, 0.0, 0.5])
+    frac = L.path_mark_frac(net, p_link)
+    assert np.allclose(frac, [0.75, 0.5])
+
+
+# ------------------------------------------------------------- control loop
+
+def test_ai_matches_scalar_alpha_per_epoch():
+    """Clean network: cwnd grows by ~alpha per epoch, exactly like the
+    scalar UnoCC AI invariant (tests/test_unocc.py::test_ai_per_rtt...)."""
+    net, bdp, rtt = dumbbell(1, 0, drain_frac=10.0)   # marks unreachable
+    p = make_params(bdp, rtt, INTRA_BDP, INTRA_RTT)
+    s0 = init_state(p, net.n_links, cwnd0=0.5 * bdp)
+    n = 100
+    final, _ = simulate(net, p, n_epochs=n, state0=s0)
+    grown = float(final.cwnd[0] - s0.cwnd[0])
+    assert grown == pytest.approx(n * float(p.alpha[0]), rel=0.05)
+
+
+def test_single_flow_tracks_phantom_drain():
+    for drain in (0.7, 0.9):
+        net, bdp, rtt = dumbbell(1, 0, drain_frac=drain)
+        p = make_params(bdp, rtt, INTRA_BDP, INTRA_RTT)
+        _, rates = steady_state(net, p, n_warm=20_000, n_meas=5_000)
+        assert float(rates[0]) / RATE_100G == pytest.approx(drain, rel=0.05)
+
+
+def test_qa_collapses_under_sudden_overload():
+    """Capacity drops 10x under a converged flow -> Quick-Adapt collapses
+    cwnd to the measured delivery within a few QA windows (Alg 1 OnQA)."""
+    net, bdp, rtt = dumbbell(1, 0)
+    p = make_params(bdp, rtt, INTRA_BDP, INTRA_RTT)
+    st, _ = steady_state(net, p, n_warm=20_000, n_meas=100)
+    c0 = float(st.cwnd[0])
+    slow = net._replace(cap=net.cap / 10.0, drain=net.drain / 10.0)
+    final, _ = simulate(slow, p, n_epochs=6, state0=st)
+    assert float(final.cwnd[0]) < 0.25 * c0
+
+
+def test_inter_intra_fairness_uno_beats_gemini():
+    """Same 1+1 dumbbell, same horizon: Uno's single-granularity epochs get
+    the class ratio far closer to 1 than Gemini's per-own-RTT reactions
+    (paper Fig 3)."""
+    net, bdp, rtt = dumbbell(1, 1)
+    is_inter = jnp.asarray([False, True])
+
+    def ratio(scheme, **kw):
+        p = make_params(bdp, rtt, INTRA_BDP, INTRA_RTT, **kw)
+        _, r = steady_state(net, p, n_warm=150_000, n_meas=20_000,
+                            scheme=scheme, is_inter=is_inter)
+        return float(r[1] / r[0])
+
+    uno = ratio("uno")
+    gemini = ratio("gemini", cc_period_rtts=1.0, delay_thresh_frac=0.5)
+    # Uno holds the classes within ~30% of each other (netsim agrees, see
+    # cross-validation below); Gemini's inter flow reacts 143x less often
+    # and starves the intra flow outright.
+    assert 0.55 < uno < 1.5, uno
+    assert gemini > 5.0, (uno, gemini)
+
+
+def test_dctcp_intra_incast_fair_and_utilized():
+    net, bdp, rtt = dumbbell(8, 0, phantom=False)
+    p = make_params(bdp, rtt, INTRA_BDP, INTRA_RTT, cc_period_rtts=1.0,
+                    ewma_g=1.0 / 16.0)
+    _, rates = steady_state(net, p, n_warm=30_000, n_meas=5_000,
+                            scheme="dctcp")
+    r = np.asarray(rates)
+    assert float(jain(jnp.asarray(r))) > 0.97
+    assert 0.85 < r.sum() / RATE_100G <= 1.01
+
+
+# ------------------------------------------------------------------- sweeps
+
+def test_fairness_sweep_grid():
+    out = fairness_sweep([2, 50], [0.8, 0.95], n_warm=30_000, n_meas=5_000)
+    assert out["jain"].shape == (2, 2)
+    assert float(out["jain"].min()) > 0.93
+    # utilization tracks the phantom drain fraction on every row
+    assert np.all(np.asarray(out["util"][:, 1]) >
+                  np.asarray(out["util"][:, 0]))
+    assert np.asarray(out["util"]) == pytest.approx(
+        np.asarray([[0.8, 0.95]] * 2), rel=0.05)
+
+
+def test_load_mix_sweep_shapes_and_sanity():
+    out = load_mix_sweep([0, 4], [1.0, 2.0], n_total=4,
+                         n_warm=20_000, n_meas=4_000)
+    assert out["rates"].shape == (2, 2, 4)
+    assert np.all(np.isfinite(np.asarray(out["rates"])))
+    assert float(out["jain"].min()) > 0.95
+    # doubling the load halves the achievable normalized throughput
+    assert np.asarray(out["util"][:, 1]) == pytest.approx(
+        np.asarray(out["util"][:, 0]) / 2.0, rel=0.1)
+
+
+# ------------------------------------------- cross-validation vs repro.netsim
+
+def test_cross_validation_2flow_inter_intra():
+    """Acceptance: fluid steady-state per-flow throughput within 15% of the
+    packet simulator on the 2-flow inter/intra-DC fairness scenario."""
+    res = compare_steady_state(1, 1, horizon=45 * MS, t0=15 * MS)
+    assert res["max_rel_err"] < 0.15, res
+    assert res["util_fluid"] == pytest.approx(res["util_netsim"], abs=0.06)
+
+
+def test_cross_validation_8flow_load():
+    """Acceptance: same bound on an 8-flow intra-DC incast-load scenario."""
+    res = compare_steady_state(8, 0, horizon=80 * MS, t0=10 * MS)
+    assert res["max_rel_err"] < 0.15, res
+    assert res["util_fluid"] == pytest.approx(res["util_netsim"], abs=0.06)

@@ -1,7 +1,10 @@
 """UnoCC / baseline controller invariants (unit + hypothesis property)."""
 import math
 
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:            # optional dep: property tests skip, rest run
+    from hypostub import given, settings, st
 
 from repro.core.baselines import BBRLite, Gemini, GeminiParams, MPRDMA, make_cc
 from repro.core.unocc import UnoCC, UnoParams
@@ -80,6 +83,44 @@ def test_qa_respects_small_window_guard():
     fired = any(cc.on_qa_tick(t * 14 * US, inflight=cc.cwnd)
                 for t in range(1, 6))
     assert not fired
+
+
+def test_qa_app_limited_no_collapse():
+    """Application-limited pipe: inflight + acked below beta*cwnd means the
+    window was never exercised this RTT — QA must not read the quiet ACK
+    stream as a blackout."""
+    cc = mk()
+    t = 14 * US
+    cc.on_ack(4096, False, 14 * US, 0.0, t)
+    c0 = cc.cwnd
+    for _ in range(6):
+        t += 14 * US
+        assert not cc.on_qa_tick(t, inflight=0.05 * cc.cwnd)
+    assert cc.n_qa == 0
+    assert cc.cwnd >= c0                      # never collapsed
+
+
+def test_qa_needs_two_consecutive_deficits():
+    """One deficient window can be ACK-clumping aliasing: no trigger.  A
+    healthy window resets the streak; two consecutive deficits collapse."""
+    cc = mk()
+    t = 14 * US
+    cc.on_ack(4096, False, 14 * US, 0.0, t)
+    t += 14 * US
+    assert not cc.on_qa_tick(t, inflight=cc.cwnd)     # deficit #1
+    acked = 0.0
+    while acked < 0.8 * cc.cwnd:                      # healthy window
+        t += 200.0
+        cc.on_ack(4096, False, 14 * US, t - 14 * US, t)
+        acked += 4096
+    assert not cc.on_qa_tick(t, inflight=cc.cwnd)     # resets the streak
+    t += 14 * US
+    assert not cc.on_qa_tick(t, inflight=cc.cwnd)     # deficit #1 again
+    assert cc.n_qa == 0
+    t += 14 * US
+    assert cc.on_qa_tick(t, inflight=cc.cwnd)         # deficit #2: collapse
+    assert cc.n_qa == 1
+    assert cc.cwnd == cc.min_cwnd                     # no recent delivery
 
 
 def test_qa_skip_after_trigger():
