@@ -60,15 +60,29 @@ class Timer:
 
 
 def new_net(scheme: str, *, kind: str = "fattree", seed: int = 0, **kw):
-    """Build the paper topology; Uno runs get phantom queues (§4.1.3)."""
-    from repro.netsim.topology import Dumbbell, TwoDCFatTree
+    """Build the paper topology; Uno runs get phantom queues (§4.1.3).
+
+    Dumbbells go through the shared scenario layer (repro.scenarios) — the
+    same spec repro.fleetsim compiles — so netsim and fleetsim agree on
+    link layout and flow->bottleneck assignment.  `kw` forwards to
+    `dumbbell_scenario` (n_intra/n_inter/...) for dumbbells (defaulting to
+    the paper's 4+4 incast with the WAN as separate sprayable border
+    links — the aggregated-pipe view is a fluid-only approximation) and to
+    TwoDCFatTree otherwise.
+    """
     if kind == "fattree":
+        from repro.netsim.topology import TwoDCFatTree
         net = TwoDCFatTree(seed=seed, **kw)
-    else:
-        net = Dumbbell(seed=seed, **kw)
-    if scheme.startswith("uno"):
-        net.attach_phantoms()
-    return net
+        if scheme.startswith("uno"):
+            net.attach_phantoms()
+        return net
+    from repro.scenarios import dumbbell_scenario, to_netsim
+    kw.setdefault("n_intra", 4)
+    kw.setdefault("n_inter", 4)
+    kw.setdefault("multipath", True)
+    spec = dumbbell_scenario(seed=seed, phantom=scheme.startswith("uno"),
+                             **kw)
+    return to_netsim(spec)
 
 
 def scheme_lb(scheme: str, default_uno_lb: str = "unolb") -> tuple[str, str]:

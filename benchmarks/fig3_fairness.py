@@ -4,32 +4,28 @@ The paper's setup: two fat-tree DCs, 4 intra-DC + 4 inter-DC flows incast to
 one destination, sending rates recorded; Gemini converges so slowly it
 "outlives the flows"; MPRDMA+BBR never converges (two control loops); Uno
 converges quickly.  We run the dumbbell abstraction (paper Fig 3 A shows the
-same simplified model), record per-flow rate curves, and report Jain's index
-over sliding windows + time-to-fairness (first window with Jain >= 0.9).
+same simplified model) through the shared scenario layer — the SAME spec
+repro.fleetsim compiles for its sweeps — record per-flow rate curves, and
+report Jain's index over sliding windows + time-to-fairness (first window
+with Jain >= 0.9).
 """
 from __future__ import annotations
 
-import random
-
 from benchmarks import common
-from benchmarks.common import MIB, MS, US
+from benchmarks.common import MIB, MS
 from repro.netsim import workloads as W
-from repro.netsim.topology import Dumbbell
+from repro.scenarios import LbSpec, dumbbell_scenario, spawn_backlogged, \
+    to_netsim
 
 
 def _one(scheme: str, size: int, horizon: float, seed: int = 1) -> dict:
-    cc, lb = common.scheme_lb(scheme, default_uno_lb="rps")
-    net = Dumbbell(n_left=8, n_right=1, seed=seed)
-    if cc == "uno":
-        net.attach_phantoms()
-    rng = random.Random(seed)
-    flows = []
-    for i in range(1, 5):
-        flows.append(W.spawn(net, i, 0, size, cc_scheme=cc, lb="rps",
-                             rng=rng, trace_rate=True))
-    for i in range(4):
-        flows.append(W.spawn(net, 8 + i, 0, size, cc_scheme=cc, lb="rps",
-                             rng=rng, trace_rate=True))
+    cc, _ = common.scheme_lb(scheme, default_uno_lb="rps")
+    spec = dumbbell_scenario(
+        4, 4, multipath=True, seed=seed, phantom=(cc == "uno"),
+        intra_lb=LbSpec(kind="rps"), inter_lb=LbSpec(kind="rps"),
+        name="fig3")
+    net = to_netsim(spec)
+    flows = spawn_backlogged(net, cc_scheme=cc, size=size, trace_rate=True)
     net.sim.run(until=horizon)
     rates = W.bin_rates(flows, 1 * MS, horizon)
     windows = []

@@ -1,12 +1,17 @@
-"""fleetsim throughput benchmark: flows x epochs per second, plus a sweep.
+"""fleetsim throughput benchmark + the sweep heatmaps for the figure set.
 
-Acceptance target (ISSUE 1): >= 1,000 flows x 10,000 epochs simulated in
-under 30 s on CPU — the scale gap the fluid model exists to close (the
-packet simulator needs minutes for a few dozen flows).
+Acceptance targets:
+  * ISSUE 1: >= 1,000 flows x 10,000 epochs simulated in under 30 s on CPU
+    — the scale gap the fluid model exists to close (the packet simulator
+    needs minutes for a few dozen flows).
+  * ISSUE 2: >= 1M flow-epochs/s with n_paths = 4 multipath (adaptive
+    UnoLB-style splits) on one CPU core.
 
 Reports: jitted single-scenario rate (compile time separated out), the same
-1k-flow scenario's steady utilization/fairness as a sanity check, and a
-vmapped fairness grid to show whole-sweep cost.
+1k-flow scenario's steady utilization/fairness as a sanity check, the
+multipath rate, and the vmapped heatmap grids (fairness x drain, churn duty
+x burst length) whose full arrays land in results/paper/fleetsim_sweep.json
+for the figure registry (benchmarks.run).
 """
 from __future__ import annotations
 
@@ -18,7 +23,8 @@ import numpy as np
 from benchmarks import common
 from repro.fleetsim import dumbbell, make_params, simulate
 from repro.fleetsim.links import RATE_100G, US
-from repro.fleetsim.sweeps import fairness_sweep, jain
+from repro.fleetsim.sweeps import churn_sweep, fairness_sweep, jain
+from repro.scenarios import dumbbell_scenario, to_fleetsim
 
 
 def _timed_sim(n_flows: int, n_epochs: int) -> dict:
@@ -46,25 +52,77 @@ def _timed_sim(n_flows: int, n_epochs: int) -> dict:
     }
 
 
+def _timed_multipath(n_flows: int, n_epochs: int, n_paths: int = 4) -> dict:
+    """Multipath acceptance: adaptive-split fluid LB at n_paths paths."""
+    fs = to_fleetsim(dumbbell_scenario(
+        n_flows // 2, n_flows - n_flows // 2, multipath=True,
+        n_wan=n_paths, n_bottleneck=max(1, n_flows // 64)))
+
+    def run_once():
+        t0 = time.time()
+        final, _ = simulate(fs.net, fs.params, n_epochs=n_epochs,
+                            is_inter=fs.is_inter, lb=fs.lb)
+        jax.block_until_ready(final.cwnd)
+        return time.time() - t0, final
+
+    cold_s, _ = run_once()
+    warm_s, final = run_once()
+    split = np.asarray(final.split)
+    return {
+        "n_flows": n_flows, "n_epochs": n_epochs, "n_paths": n_paths,
+        "cold_s": round(cold_s, 2), "warm_s": round(warm_s, 3),
+        "flow_epochs_per_s": round(n_flows * n_epochs / warm_s),
+        "over_1m_per_s": n_flows * n_epochs / warm_s >= 1e6,
+        "split_rows_sum_to_1": bool(
+            np.allclose(split.sum(axis=1), 1.0, atol=1e-5)),
+    }
+
+
+def _grid_payload(grid: dict, keys=("jain", "class_ratio", "util")) -> dict:
+    """Full heatmap arrays (figure data) + compact summary stats."""
+    out = {}
+    for k, v in grid.items():
+        a = np.asarray(v)
+        if k == "rates":
+            continue                   # per-flow detail; too big for JSON
+        out[k] = np.round(a, 5).tolist()
+    for k in keys:
+        if k in grid:
+            a = np.asarray(grid[k])
+            out[f"{k}_min"] = round(float(a.min()), 4)
+            out[f"{k}_max"] = round(float(a.max()), 4)
+    return out
+
+
 def run(quick: bool = True) -> dict:
-    out = {"acceptance": _timed_sim(1000, 10_000)}
+    out = {"acceptance": _timed_sim(1000, 10_000),
+           "acceptance_multipath": _timed_multipath(1000, 10_000)}
     if not quick:
         out["10k_flows"] = _timed_sim(10_000, 10_000)
         out["100k_epochs"] = _timed_sim(1000, 100_000)
 
-    t0 = time.time()
-    grid = fairness_sweep([2, 10, 50, 140], [0.8, 0.9, 0.95],
-                          n_warm=50_000 if not quick else 20_000,
-                          n_meas=10_000 if not quick else 5_000)
-    out["fairness_grid"] = {
-        "wall_s": round(time.time() - t0, 1),
-        "cells": int(grid["jain"].size),
-        "min_jain": round(float(grid["jain"].min()), 4),
-        "class_ratio_range": [round(float(grid["class_ratio"].min()), 3),
-                              round(float(grid["class_ratio"].max()), 3)],
-        "util_range": [round(float(grid["util"].min()), 3),
-                       round(float(grid["util"].max()), 3)],
-    }
+    n_warm = 50_000 if not quick else 20_000
+    n_meas = 10_000 if not quick else 5_000
+    with common.Timer() as t:
+        grid = fairness_sweep([2, 10, 50, 140], [0.8, 0.9, 0.95],
+                              n_warm=n_warm, n_meas=n_meas)
+    out["fairness_grid"] = dict(_grid_payload(grid), wall_s=t.wall_s,
+                                cells=int(grid["jain"].size))
+
+    with common.Timer() as t:
+        mp = fairness_sweep([2, 10, 50, 140], [0.8, 0.9, 0.95],
+                            multipath=True, n_wan=4,
+                            n_warm=n_warm, n_meas=n_meas)
+    out["fairness_grid_multipath"] = dict(_grid_payload(mp), wall_s=t.wall_s,
+                                          cells=int(mp["jain"].size))
+
+    with common.Timer() as t:
+        ch = churn_sweep([0.1, 0.3, 0.6, 1.0], [50.0, 200.0, 1000.0],
+                         n_flows=16, n_warm=10_000,
+                         n_meas=40_000 if not quick else 20_000)
+    out["churn_grid"] = dict(_grid_payload(ch, keys=("jain", "util")),
+                             wall_s=t.wall_s, cells=int(ch["util"].size))
+
     common.save("fleetsim_sweep", out)
     return out
 

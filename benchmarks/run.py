@@ -56,12 +56,17 @@ def _summ(name: str, res: dict) -> str:
             return " | ".join(parts)
         if name == "fleetsim_sweep":
             a = res["acceptance"]
+            mp = res["acceptance_multipath"]
             g = res["fairness_grid"]
-            return (f"{a['n_flows']}x{a['n_epochs']}ep cold={a['cold_s']}s "
-                    f"warm={a['warm_s']}s "
-                    f"({a['flow_epochs_per_s']:.2e} flow-epochs/s); "
-                    f"grid {g['cells']} cells {g['wall_s']}s "
-                    f"min_jain={g['min_jain']}")
+            ch = res["churn_grid"]
+            return (f"{a['n_flows']}x{a['n_epochs']}ep "
+                    f"{a['flow_epochs_per_s']:.2e} flow-epochs/s; "
+                    f"multipath(P={mp['n_paths']}) "
+                    f"{mp['flow_epochs_per_s']:.2e}/s "
+                    f"(>=1M: {mp['over_1m_per_s']}); "
+                    f"fairness grid {g['cells']} cells {g['wall_s']}s "
+                    f"min_jain={g['jain_min']}; churn grid {ch['cells']} "
+                    f"cells util {ch['util_min']}..{ch['util_max']}")
         if name == "fig13_failures":
             a = res["A_border_link_fail"]
             return (f"A mean-fct: uno+EC={a['unolb+EC']['mean_fct_ms']}ms "
@@ -75,7 +80,8 @@ def _summ(name: str, res: dict) -> str:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--full", "--all", action="store_true", dest="full",
+                    help="paper-scale runs of every registered figure")
     ap.add_argument("--only", nargs="*", default=None)
     args = ap.parse_args()
     mods = args.only if args.only else MODULES

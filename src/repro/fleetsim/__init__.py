@@ -3,18 +3,26 @@
 The packet simulator (repro.netsim) is per-packet-faithful but pure Python:
 it tops out at a few dozen flows.  fleetsim trades packet fidelity for a
 flow-level fluid model stepped on the UnoCC epoch clock — (n_flows,) state
-arrays, one jitted `lax.scan` step, scenario grids via `vmap` — so 10k+
+arrays, a (n_flows, n_paths, max_hops) route tensor with per-subflow rate
+splits, one jitted `lax.scan` step, scenario grids via `vmap` — so 10k+
 flows x 100k epochs run in seconds and parameter heatmaps (RTT ratio, load,
-phantom drain) become cheap.  repro.fleetsim.validate cross-checks the fluid
-steady state against netsim on small scenarios.
+phantom drain, churn duty) become cheap.  The `lb` axis (LbParams) models
+UnoLB-style adaptive path weights + static-EC overhead; ChurnParams adds
+open-loop Poisson on/off flow churn.  Topologies come from the shared
+scenario layer (repro.scenarios) — one spec compiles to this simulator AND
+to repro.netsim, and repro.fleetsim.validate cross-checks the fluid steady
+state against the packet simulator on small scenarios.
 """
-from repro.fleetsim.cc import SCHEMES, make_step, simulate, steady_state
-from repro.fleetsim.links import FluidNet, dumbbell
-from repro.fleetsim.state import (FleetParams, FleetState, init_state,
-                                  make_params)
+from repro.fleetsim.cc import (SCHEMES, make_step, simulate, steady_state,
+                               update_split)
+from repro.fleetsim.links import FluidNet, dumbbell, uniform_split
+from repro.fleetsim.state import (ChurnParams, FleetParams, FleetState,
+                                  LbParams, init_state, make_churn_params,
+                                  make_lb_params, make_params)
 
 __all__ = [
-    "SCHEMES", "make_step", "simulate", "steady_state",
-    "FluidNet", "dumbbell",
-    "FleetParams", "FleetState", "init_state", "make_params",
+    "SCHEMES", "make_step", "simulate", "steady_state", "update_split",
+    "FluidNet", "dumbbell", "uniform_split",
+    "ChurnParams", "FleetParams", "FleetState", "LbParams",
+    "init_state", "make_churn_params", "make_lb_params", "make_params",
 ]

@@ -3,23 +3,44 @@
 One `step` = one epoch (intra-DC-RTT-derived period, the paper's single
 granularity).  Per epoch, for all flows at once:
 
-  send rates -> per-link offered load -> queue occupancies (physical +
-  phantom) -> expected ECN mark fractions -> window accumulators -> the
+  send rates (split across paths) -> per-link offered load -> queue
+  occupancies (physical + phantom) -> expected ECN mark fractions (per
+  subflow and split-weighted per flow) -> window accumulators -> the
   scheme's window reaction (Alg 1 for UnoCC; per-own-RTT reactions for the
-  DCTCP / Gemini baselines) -> Quick-Adapt (UnoCC only).
+  DCTCP / Gemini baselines) -> Quick-Adapt (UnoCC only) -> the `lb` axis
+  (UnoLB-style adaptive subflow weights) -> open-loop churn transitions.
 
 The MD arithmetic is imported from repro.core.unocc — the scalar per-flow
 controller and this fleet model share the formulas, they differ only in
 plumbing.  Everything here is jit-compiled via `jax.lax.scan` and carries
-pure (n_flows,)/(n_links,) arrays, so 10k flows x 100k epochs run in seconds
-and whole scenarios `vmap` across parameter grids (repro.fleetsim.sweeps).
+pure (n_flows,)/(n_links,)/(n_flows, n_paths) arrays, so 10k flows x 100k
+epochs run in seconds and whole scenarios `vmap` across parameter grids
+(repro.fleetsim.sweeps).
 
-Fluid-model fidelity limits (vs repro.netsim, recorded in ROADMAP.md): flows
-are backlogged (no flow sizes / FCTs / app-limited senders), marking is the
-RED expectation (no per-packet randomness), feedback is one epoch rather
-than one RTT delayed, queues see *offered* load (upstream bottlenecks do not
-thin downstream arrivals), and the scalar controller's fast-increase /
-slow-start transients are omitted.
+The `lb` axis (LbParams; fluid analogue of netsim.routing.UnoLBRouter /
+Algorithm 2): each flow's split weights shift multiplicatively toward
+less-marked paths (w *= exp(-eta * path_mark_frac), renormalized), and a
+path whose lagged mark fraction stays above `repath_thresh` for
+`repath_patience` consecutive epochs is repathed REPS/PLB-style — its
+weight is redistributed to the other paths (a floor weight keeps probing
+it so it can recover).  Static-EC overhead mode scales *useful* goodput by
+k/(k+r) while the wire rate (what congests links) is unscaled.
+
+Open-loop churn (ChurnParams): per-flow on/off masks with geometric
+per-epoch transitions (exponential holding times in the fluid limit),
+deterministically seeded via the PRNG key in FleetState.  An OFF flow
+sends nothing and its controller state is frozen; turning ON restarts it
+like a fresh flow (cwnd = BDP, clean accumulators) — this makes
+app-limited senders and approximate FCT questions expressible.
+
+Fluid-model fidelity limits (vs repro.netsim, recorded in ROADMAP.md):
+marking is the RED expectation (no per-packet randomness), feedback is a
+first-order lag rather than an exact delay line, queues see *offered* load
+(upstream bottlenecks do not thin downstream arrivals), the scalar
+controller's fast-increase / slow-start transients are omitted, churned
+flows restart instantaneously (no slow-start ramp) with exponential rather
+than empirical size/holding distributions, and repathing moves rate weight
+without packet reordering or NACK/timeout signalling.
 """
 from __future__ import annotations
 
@@ -31,30 +52,93 @@ import jax.numpy as jnp
 
 from repro.core.unocc import gentle_md_scale, md_ecn_gain, md_factor
 from repro.fleetsim import links as L
-from repro.fleetsim.state import FleetParams, FleetState, init_state
+from repro.fleetsim.state import (ChurnParams, FleetParams, FleetState,
+                                  LbParams, init_state)
 
 SCHEMES = ("uno", "gemini", "dctcp")
 _FRAC_EPS = 1e-6
+# state NOT selected per flow by the churn merge: shared link occupancies,
+# the PRNG key, and the active mask itself (set explicitly each epoch)
+_NON_FLOW_FIELDS = ("q_phys", "q_phantom", "key", "active")
+
+
+def _merge_flow_state(cond: jnp.ndarray, a: FleetState,
+                      b: FleetState) -> FleetState:
+    """Per-flow fields from `a` where `cond` (a (n_flows,) bool) else `b`;
+    link-level fields and the PRNG key pass through from `a`.
+
+    Iterating FleetState._fields makes the churn freeze/restart exhaustive
+    by construction — a field added to FleetState is covered automatically
+    instead of silently escaping a hand-written list.
+    """
+    out = {}
+    for f in FleetState._fields:
+        av = getattr(a, f)
+        if f in _NON_FLOW_FIELDS:
+            out[f] = av
+            continue
+        c = cond if av.ndim == 1 else cond[:, None]
+        out[f] = jnp.where(c, av, getattr(b, f))
+    return FleetState(**out)
+
+
+def update_split(split: jnp.ndarray, path_frac: jnp.ndarray,
+                 bad_count: jnp.ndarray, mask: jnp.ndarray, lb: LbParams):
+    """One epoch of the UnoLB-style weight adaptation.
+
+    Returns (split', bad_count').  Multiplicative weights on the lagged
+    per-path mark fractions shift rate toward cleaner paths; a path that
+    stays above `repath_thresh` for `repath_patience` epochs is zeroed
+    (repath) and its weight redistributes through renormalization, with
+    `w_floor` keeping a probe trickle on every valid path.
+    """
+    bad = mask & (path_frac > lb.repath_thresh[:, None])
+    bad_count = jnp.where(bad, bad_count + 1, 0)
+    repath = bad_count >= lb.repath_patience[:, None]
+    w = split * jnp.exp(-lb.eta[:, None] * path_frac)
+    w = jnp.where(repath, 0.0, w)
+    bad_count = jnp.where(repath, 0, bad_count)
+    return L.normalize_split(w, mask, lb.w_floor), bad_count
 
 
 def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
-              is_inter: Optional[jnp.ndarray] = None):
-    """Build the per-epoch transition: state -> (state', goodput)."""
+              is_inter: Optional[jnp.ndarray] = None,
+              lb: Optional[LbParams] = None,
+              churn: Optional[ChurnParams] = None):
+    """Build the per-epoch transition: state -> (state', goodput).
+
+    `lb=None` freezes the split at its initial value (static spraying) and
+    reports raw goodput; `churn=None` keeps every flow backlogged.
+    """
     if scheme not in SCHEMES:
         raise ValueError(f"unknown fleetsim scheme {scheme!r}")
     if is_inter is None:
         is_inter = jnp.zeros_like(params.bdp, bool)
+    pmask = L.path_mask(net)
+    # restart target for OFF->ON churn transitions: a fresh flow exactly as
+    # init_state would start it (line-rate cwnd, clean accumulators,
+    # uniform split); constant, so hoisted out of the scanned step
+    fresh = None
+    if churn is not None:
+        fresh = init_state(params, net.n_links, n_paths=net.n_paths,
+                           split0=L.uniform_split(net))
 
     def step(state: FleetState, _):
         p = params
+        act = state.active
+        actf = act.astype(jnp.float32)
         # ---- network: loads, queues, marks, delays ----------------------
-        rate = state.cwnd / p.rtt
-        load = L.offered_load(net, rate)
-        goodput = rate * L.bottleneck_scale(net, load)
+        rate = actf * state.cwnd / p.rtt
+        split = state.split
+        load = L.offered_load(net, rate, split)
+        sub_scale = L.subflow_scale(net, load)
+        goodput = rate * jnp.sum(split * sub_scale, axis=1)
         q_phys, q_phantom = L.step_queues(net, state.q_phys,
                                           state.q_phantom, load)
-        inst_frac = L.path_mark_frac(net, L.mark_prob(net, q_phys, q_phantom))
-        inst_delay = L.path_delay(net, q_phys)
+        p_link = L.mark_prob(net, q_phys, q_phantom)
+        sub_frac = L.subflow_mark_frac(net, p_link)
+        inst_frac = jnp.sum(split * sub_frac, axis=1)
+        inst_delay = L.path_delay(net, q_phys, split)
         # Feedback lag: a sender observes congestion one flow-RTT late (marks
         # ride the data+ACK round trip).  First-order filter with time
         # constant = flow RTT — exact for intra flows (rtt == dt), and for
@@ -64,6 +148,8 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
         fb = jnp.minimum(net.dt / p.rtt, 1.0)
         frac = state.obs_frac + fb * (inst_frac - state.obs_frac)
         delay = state.obs_delay + fb * (inst_delay - state.obs_delay)
+        path_frac = state.path_frac + fb[:, None] * (sub_frac
+                                                     - state.path_frac)
         acked = goodput * net.dt
 
         # ---- window accumulators ----------------------------------------
@@ -129,8 +215,8 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
         qa_countdown = state.qa_countdown - 1
         if scheme == "uno":
             tick = state.qa_countdown <= 1
-            # fluid flows are backlogged, so the "window exercised" guard
-            # (inflight + acked >= beta*cwnd) always holds; the 4-MTU
+            # fluid flows are backlogged while ON, so the "window exercised"
+            # guard (inflight + acked >= beta*cwnd) always holds; the 4-MTU
             # quantization guard still applies.
             deficit = (tick & (state.cwnd >= 4.0 * p.mtu)
                        & (qa_acked < p.beta * state.cwnd))
@@ -148,6 +234,14 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
             qa_countdown = jnp.where(tick, p.qa_period, qa_countdown)
 
         cwnd = jnp.clip(cwnd, p.min_cwnd, p.max_cwnd)
+
+        # ---- lb axis: adaptive subflow weights --------------------------
+        split_new, bad_count = split, state.bad_count
+        if lb is not None:
+            split_new, bad_count = update_split(split, path_frac, bad_count,
+                                                pmask, lb)
+            goodput = goodput * lb.ec_eff       # parity bytes carry no payload
+
         new = FleetState(
             cwnd=cwnd, ecn_ewma=ecn_ewma, md_scale=md_scale,
             q_phys=q_phys, q_phantom=q_phantom,
@@ -156,16 +250,38 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
             win_delay_min=win_dmin, win_delay_max=win_dmax,
             cc_countdown=cc_countdown,
             qa_acked=qa_acked, qa_prev_acked=qa_prev,
-            qa_deficits=qa_deficits, qa_countdown=qa_countdown, skip=skip)
+            qa_deficits=qa_deficits, qa_countdown=qa_countdown, skip=skip,
+            split=split_new, path_frac=path_frac, bad_count=bad_count,
+            active=act, key=state.key)
+
+        # ---- churn: freeze OFF flows, restart fresh on OFF->ON ----------
+        if churn is not None:
+            key, sub = jax.random.split(state.key)
+            u = jax.random.uniform(sub, p.bdp.shape)
+            p_off = jnp.clip(net.dt / jnp.maximum(churn.mean_on, 1.0),
+                             0.0, 1.0)
+            p_on = jnp.clip(net.dt / jnp.maximum(churn.mean_off, 1.0),
+                            0.0, 1.0)
+            turn_off = act & churn.churned & (u < p_off)
+            turn_on = ~act & churn.churned & (u < p_on)
+            new = _merge_flow_state(act, new, state)       # OFF: frozen
+            new = _merge_flow_state(~turn_on, new, fresh)  # OFF->ON: fresh
+            new = new._replace(active=(act & ~turn_off) | turn_on, key=key)
         return new, goodput
 
     return step
 
 
+def _default_state(net: L.FluidNet, params: FleetParams, seed: int = 0):
+    return init_state(params, net.n_links, n_paths=net.n_paths,
+                      split0=L.uniform_split(net), seed=seed)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("scheme", "n_epochs", "record"))
-def _simulate(net, params, state0, is_inter, scheme, n_epochs, record):
-    step = make_step(net, params, scheme, is_inter)
+def _simulate(net, params, state0, is_inter, lb, churn, scheme, n_epochs,
+              record):
+    step = make_step(net, params, scheme, is_inter, lb=lb, churn=churn)
     if record:
         return jax.lax.scan(step, state0, None, length=n_epochs)
     final, _ = jax.lax.scan(lambda s, x: (step(s, x)[0], None),
@@ -175,30 +291,35 @@ def _simulate(net, params, state0, is_inter, scheme, n_epochs, record):
 
 def simulate(net: L.FluidNet, params: FleetParams, *, n_epochs: int,
              scheme: str = "uno", state0: Optional[FleetState] = None,
-             is_inter: Optional[jnp.ndarray] = None, record: bool = False):
+             is_inter: Optional[jnp.ndarray] = None,
+             lb: Optional[LbParams] = None,
+             churn: Optional[ChurnParams] = None,
+             seed: int = 0, record: bool = False):
     """Run `n_epochs` epochs; returns (final_state, goodput_trajectory).
 
     `goodput_trajectory` is (n_epochs, n_flows) bytes/ns when `record`,
     else None.  Jit-compiled; recompiles only on new (scheme, n_epochs,
-    record, shapes).
+    record, shapes, lb/churn presence).  `seed` fixes the churn PRNG.
     """
     if state0 is None:
-        state0 = init_state(params, net.n_links)
+        state0 = _default_state(net, params, seed)
     if is_inter is None:
         is_inter = jnp.zeros_like(params.bdp, bool)
-    return _simulate(net, params, state0, is_inter, scheme, n_epochs, record)
+    return _simulate(net, params, state0, is_inter, lb, churn, scheme,
+                     n_epochs, record)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("scheme", "n_warm", "n_meas"))
-def steady_state_core(net, params, state0, is_inter, scheme, n_warm, n_meas):
+def steady_state_core(net, params, state0, is_inter, scheme, n_warm, n_meas,
+                      lb=None, churn=None):
     """Warm up, then return (final_state, mean goodput over n_meas epochs).
 
     The measurement pass accumulates a running sum in the carry instead of
     materializing the (n_meas, n_flows) trajectory — this is the vmap-safe
     entry point sweeps fan out over (a stacked trajectory for a whole grid
     would not fit memory)."""
-    step = make_step(net, params, scheme, is_inter)
+    step = make_step(net, params, scheme, is_inter, lb=lb, churn=churn)
     state, _ = jax.lax.scan(lambda s, x: (step(s, x)[0], None),
                             state0, None, length=n_warm)
 
@@ -215,10 +336,12 @@ def steady_state_core(net, params, state0, is_inter, scheme, n_warm, n_meas):
 def steady_state(net: L.FluidNet, params: FleetParams, *, n_warm: int,
                  n_meas: int, scheme: str = "uno",
                  state0: Optional[FleetState] = None,
-                 is_inter: Optional[jnp.ndarray] = None):
+                 is_inter: Optional[jnp.ndarray] = None,
+                 lb: Optional[LbParams] = None,
+                 churn: Optional[ChurnParams] = None, seed: int = 0):
     if state0 is None:
-        state0 = init_state(params, net.n_links)
+        state0 = _default_state(net, params, seed)
     if is_inter is None:
         is_inter = jnp.zeros_like(params.bdp, bool)
     return steady_state_core(net, params, state0, is_inter, scheme,
-                             n_warm, n_meas)
+                             n_warm, n_meas, lb, churn)

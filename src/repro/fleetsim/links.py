@@ -1,10 +1,19 @@
 """Fluid-model topology: links as (n_links,) arrays, routes as a padded
-flow→link hop table.
+flow -> path -> link hop tensor.
 
-The flow→link incidence is sparse: `routes[i, h]` is the h-th link on flow
-i's path (-1 padding past the last hop).  Per-link aggregates are scatter-adds
-into an `n_links + 1` buffer (the pad slot absorbs the -1s) and per-flow path
-reductions are gathers — both O(n_flows * max_hops) and fully jit/vmap-able.
+The flow->link incidence is sparse: `routes[i, p, h]` is the h-th link on
+flow i's p-th path (-1 padding past the last hop, all-(-1) rows padding past
+the last path).  Per-link aggregates are scatter-adds into an `n_links + 1`
+buffer (the pad slot absorbs the -1s) and per-flow path reductions are
+gathers — both O(n_flows * n_paths * max_hops) and fully jit/vmap-able.
+
+Multipath: each flow carries an (n_paths,) `split` weight vector (rows sum
+to 1 over valid paths) and its send rate is divided across its paths — the
+fluid analogue of packet spraying / UnoLB subflows.  Every per-flow quantity
+(bottleneck scale, mark fraction, queueing delay) exists in a per-subflow
+form (`subflow_*`, shape (n_flows, n_paths)) and a split-weighted per-flow
+form.  Single-path (n_flows, max_hops) route tables are still accepted and
+treated as n_paths == 1.
 
 Queue model per epoch `dt` (forward-Euler on the htsim analogue in
 repro.netsim.engine):
@@ -14,12 +23,12 @@ repro.netsim.engine):
 
 ECN is the *expectation* of the engine's RED: linear ramp between the
 lo/hi thresholds of the marking queue (phantom where attached, else
-physical).  A flow's mark fraction composes independently across hops:
+physical).  A subflow's mark fraction composes independently across hops:
 frac = 1 - prod(1 - p_link).
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
 
@@ -40,37 +49,96 @@ class FluidNet(NamedTuple):
     drain: jnp.ndarray          # phantom drain rate; == cap where no phantom
     vcap: jnp.ndarray           # phantom capacity; == qcap where no phantom
     use_phantom: jnp.ndarray    # bool: mark on phantom (Uno) vs physical RED
-    routes: jnp.ndarray         # (n_flows, max_hops) int32, -1 padded
+    routes: jnp.ndarray         # (n_flows, n_paths, max_hops) int32, -1 pad
     dt: jnp.ndarray             # scalar epoch period (ns)
 
     @property
     def n_links(self) -> int:
         return self.cap.shape[0]
 
+    @property
+    def n_paths(self) -> int:
+        return self.routes.shape[1] if self.routes.ndim == 3 else 1
+
+
+def _routes3(net: FluidNet) -> jnp.ndarray:
+    """Route tensor normalized to (n_flows, n_paths, max_hops)."""
+    r = net.routes
+    return r if r.ndim == 3 else r[:, None, :]
+
 
 def _pad_idx(net: FluidNet) -> jnp.ndarray:
     """Hop indices with -1 redirected to the scratch slot n_links."""
-    return jnp.where(net.routes >= 0, net.routes, net.n_links)
+    r = _routes3(net)
+    return jnp.where(r >= 0, r, net.n_links)
 
 
-def offered_load(net: FluidNet, rates: jnp.ndarray) -> jnp.ndarray:
-    """(n_links,) aggregate arrival rate from per-flow send rates."""
-    hop_mask = (net.routes >= 0).astype(rates.dtype)
-    per_hop = rates[:, None] * hop_mask              # (n_flows, max_hops)
+def path_mask(net: FluidNet) -> jnp.ndarray:
+    """(n_flows, n_paths) bool: True where the path slot holds a real path."""
+    return jnp.any(_routes3(net) >= 0, axis=2)
+
+
+def uniform_split(net: FluidNet) -> jnp.ndarray:
+    """(n_flows, n_paths) equal weights over each flow's valid paths."""
+    m = path_mask(net).astype(jnp.float32)
+    return m / jnp.maximum(jnp.sum(m, axis=1, keepdims=True), 1.0)
+
+
+def normalize_split(w: jnp.ndarray, mask: jnp.ndarray,
+                    w_floor: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Project weights back onto the simplex over valid paths.
+
+    `w_floor` (per-flow, fraction of the uniform weight) keeps a probe
+    trickle on every valid path so a repathed/zeroed path can recover —
+    the fluid analogue of UnoLB keeping subflows alive on proven paths
+    while occasionally re-testing the rest.
+    """
+    m = mask.astype(w.dtype)
+    w = jnp.maximum(w, 0.0) * m
+    if w_floor is not None:
+        n_valid = jnp.maximum(jnp.sum(m, axis=1, keepdims=True), 1.0)
+        w = jnp.maximum(w, (w_floor[:, None] / n_valid) * m)
+    s = jnp.sum(w, axis=1, keepdims=True)
+    uni = m / jnp.maximum(jnp.sum(m, axis=1, keepdims=True), 1.0)
+    return jnp.where(s > _EPS, w / jnp.maximum(s, _EPS), uni)
+
+
+def _split_or_uniform(net: FluidNet, split) -> jnp.ndarray:
+    return uniform_split(net) if split is None else split
+
+
+def offered_load(net: FluidNet, rates: jnp.ndarray,
+                 split: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """(n_links,) aggregate arrival rate from per-flow send rates.
+
+    With a split matrix, flow i contributes rates[i] * split[i, p] to every
+    hop of its p-th path; total scatter mass (links + pad slot) is conserved.
+    """
+    split = _split_or_uniform(net, split)
+    hop_mask = (_routes3(net) >= 0).astype(rates.dtype)
+    per_hop = (rates[:, None] * split)[:, :, None] * hop_mask
     buf = jnp.zeros(net.n_links + 1, rates.dtype)
     buf = buf.at[_pad_idx(net).ravel()].add(per_hop.ravel())
     return buf[:net.n_links]
 
 
-def bottleneck_scale(net: FluidNet, load: jnp.ndarray) -> jnp.ndarray:
-    """(n_flows,) goodput/offered ratio: min over the path of cap/load.
+def subflow_scale(net: FluidNet, load: jnp.ndarray) -> jnp.ndarray:
+    """(n_flows, n_paths) goodput/offered ratio: min over hops of cap/load.
 
     FIFO fluid approximation — an overloaded link serves flows
-    proportionally to their arrival rates.
+    proportionally to their arrival rates.  Padding paths report 1.0
+    (harmless: their split weight is 0).
     """
     s = jnp.minimum(1.0, net.cap / jnp.maximum(load, _EPS))
     s = jnp.concatenate([s, jnp.ones(1, s.dtype)])   # pad slot: no constraint
-    return jnp.min(s[_pad_idx(net)], axis=1)
+    return jnp.min(s[_pad_idx(net)], axis=2)
+
+
+def bottleneck_scale(net: FluidNet, load: jnp.ndarray,
+                     split: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """(n_flows,) goodput/offered ratio, split-weighted across paths."""
+    split = _split_or_uniform(net, split)
+    return jnp.sum(split * subflow_scale(net, load), axis=1)
 
 
 def step_queues(net: FluidNet, q_phys: jnp.ndarray, q_phantom: jnp.ndarray,
@@ -90,16 +158,30 @@ def mark_prob(net: FluidNet, q_phys: jnp.ndarray,
                     jnp.maximum(net.ecn_hi - net.ecn_lo, _EPS), 0.0, 1.0)
 
 
-def path_mark_frac(net: FluidNet, p_link: jnp.ndarray) -> jnp.ndarray:
-    """(n_flows,) mark fraction: 1 - prod over hops of (1 - p)."""
+def subflow_mark_frac(net: FluidNet, p_link: jnp.ndarray) -> jnp.ndarray:
+    """(n_flows, n_paths) mark fraction: 1 - prod over hops of (1 - p)."""
     clean = jnp.concatenate([1.0 - p_link, jnp.ones(1, p_link.dtype)])
-    return 1.0 - jnp.prod(clean[_pad_idx(net)], axis=1)
+    return 1.0 - jnp.prod(clean[_pad_idx(net)], axis=2)
 
 
-def path_delay(net: FluidNet, q_phys: jnp.ndarray) -> jnp.ndarray:
-    """(n_flows,) relative queueing delay: sum over hops of q/cap (ns)."""
+def path_mark_frac(net: FluidNet, p_link: jnp.ndarray,
+                   split: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """(n_flows,) mark fraction of the flow's bytes, split-weighted."""
+    split = _split_or_uniform(net, split)
+    return jnp.sum(split * subflow_mark_frac(net, p_link), axis=1)
+
+
+def subflow_delay(net: FluidNet, q_phys: jnp.ndarray) -> jnp.ndarray:
+    """(n_flows, n_paths) relative queueing delay: sum of q/cap (ns)."""
     d = jnp.concatenate([q_phys / net.cap, jnp.zeros(1, q_phys.dtype)])
-    return jnp.sum(d[_pad_idx(net)], axis=1)
+    return jnp.sum(d[_pad_idx(net)], axis=2)
+
+
+def path_delay(net: FluidNet, q_phys: jnp.ndarray,
+               split: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """(n_flows,) relative queueing delay, split-weighted across paths."""
+    split = _split_or_uniform(net, split)
+    return jnp.sum(split * subflow_delay(net, q_phys), axis=1)
 
 
 # -------------------------------------------------------------------- builders
@@ -110,51 +192,34 @@ def dumbbell(n_intra: int, n_inter: int, *, rate: float = RATE_100G,
              phantom: bool = True, drain_frac: float = 0.9,
              cap_bdps: float = 1.0, min_frac: float = 0.05,
              max_frac: float = 0.35, red_lo_frac: float = 0.25,
-             red_hi_frac: float = 0.75, epoch_period_frac: float = 1.0):
+             red_hi_frac: float = 0.75, epoch_period_frac: float = 1.0,
+             multipath: bool = False):
     """Fluid mirror of netsim.topology.Dumbbell (+ attach_phantoms defaults).
 
-    Links: one private uplink per intra sender, ONE aggregated WAN pipe
-    (n_wan parallel border links; packet-sprayed inter flows see their sum),
-    and `n_bottleneck` receiver downlinks.  Flow i goes to downlink
-    i % n_bottleneck; intra flows first, then inter flows.
+    Thin wrapper over the shared scenario layer: builds
+    `repro.scenarios.dumbbell_scenario` and compiles it with
+    `repro.scenarios.fleet_arrays` — netsim and fleetsim construct the same
+    dumbbell from one spec.
 
-    Returns (FluidNet, bdp (n_flows,), rtt (n_flows,)).
+    Flow -> downlink convention (standardized by the scenario layer, shared
+    with the netsim compiler): flows are numbered globally with intra flows
+    first, then inter flows, and flow i sends to downlink i % n_bottleneck.
+
+    `multipath=False` (default): the n_wan border links appear as ONE
+    aggregated WAN pipe (packet-sprayed inter flows see their sum) and every
+    flow has a single path.  `multipath=True`: the WAN stays n_wan separate
+    links and each inter flow gets one path per WAN link (UnoLB subflows).
+
+    Returns (FluidNet, bdp (n_flows,), rtt (n_flows,)); routes are
+    (n_flows, n_paths, 2) with n_paths == 1 unless `multipath`.
     """
-    intra_bdp = rate * intra_rtt
-    inter_bdp = rate * inter_rtt
-    n_flows = n_intra + n_inter
-    # link layout: [up_0..up_{n_intra-1}, wan, down_0..down_{n_bottleneck-1}]
-    wan = n_intra
-    down0 = n_intra + 1
-    n_links = n_intra + 1 + n_bottleneck
-
-    cap = [rate] * n_intra + [n_wan * rate] + [rate] * n_bottleneck
-    vcap = ([cap_bdps * intra_bdp] * n_intra + [n_wan * cap_bdps * inter_bdp]
-            + [cap_bdps * intra_bdp] * n_bottleneck)
-    routes, bdp, rtt = [], [], []
-    for i in range(n_intra):
-        routes.append([i, down0 + i % n_bottleneck])
-        bdp.append(intra_bdp)
-        rtt.append(intra_rtt)
-    for j in range(n_inter):
-        routes.append([wan, down0 + (n_intra + j) % n_bottleneck])
-        bdp.append(inter_bdp)
-        rtt.append(inter_rtt)
-
-    cap = jnp.asarray(cap, jnp.float32)
-    qcap_a = jnp.full(n_links, qcap, jnp.float32)
-    vcap = jnp.asarray(vcap, jnp.float32)
-    if phantom:
-        ecn_lo, ecn_hi = min_frac * vcap, max_frac * vcap
-        drain = drain_frac * cap
-        use_phantom = jnp.ones(n_links, bool)
-    else:
-        ecn_lo, ecn_hi = red_lo_frac * qcap_a, red_hi_frac * qcap_a
-        drain = cap
-        use_phantom = jnp.zeros(n_links, bool)
-    net = FluidNet(cap=cap, qcap=qcap_a, ecn_lo=ecn_lo, ecn_hi=ecn_hi,
-                   drain=drain, vcap=jnp.where(use_phantom, vcap, qcap_a),
-                   use_phantom=use_phantom,
-                   routes=jnp.asarray(routes, jnp.int32),
-                   dt=jnp.float32(epoch_period_frac * intra_rtt))
-    return (net, jnp.asarray(bdp, jnp.float32), jnp.asarray(rtt, jnp.float32))
+    from repro.scenarios import dumbbell_scenario, fleet_arrays
+    spec = dumbbell_scenario(
+        n_intra, n_inter, rate=rate, intra_rtt=intra_rtt,
+        inter_rtt=inter_rtt, qcap=qcap, n_wan=n_wan,
+        n_bottleneck=n_bottleneck, phantom=phantom, drain_frac=drain_frac,
+        cap_bdps=cap_bdps, min_frac=min_frac, max_frac=max_frac,
+        red_lo_frac=red_lo_frac, red_hi_frac=red_hi_frac,
+        epoch_period_frac=epoch_period_frac, multipath=multipath)
+    net, bdp, rtt, _ = fleet_arrays(spec)
+    return net, bdp, rtt

@@ -1,18 +1,28 @@
 """Array-of-flows parameters and state for the fluid-model fleet simulator.
 
-Everything is a flat NamedTuple of `(n_flows,)` (or `(n_links,)`) jnp arrays
-so the whole carry is a pytree: `jax.lax.scan` threads it through epochs,
-`jax.jit` compiles one fused step, and `jax.vmap` stacks entire scenarios
-along a leading grid axis (repro.fleetsim.sweeps).
+Everything is a flat NamedTuple of `(n_flows,)` (or `(n_links,)` /
+`(n_flows, n_paths)`) jnp arrays so the whole carry is a pytree:
+`jax.lax.scan` threads it through epochs, `jax.jit` compiles one fused step,
+and `jax.vmap` stacks entire scenarios along a leading grid axis
+(repro.fleetsim.sweeps).
 
 The parameter derivations (alpha, K, epoch period) are the SAME functions the
 scalar per-flow controller uses (repro.core.unocc.derived_params) — fleetsim
 never re-implements the control constants, it only vectorizes them.
+
+Two optional parameter families ride next to FleetParams:
+
+  * LbParams — the `lb` axis: UnoLB-style adaptive subflow weights
+    (multiplicative shift toward less-marked paths, REPS/PLB-style repath on
+    persistent marking) plus a static-EC goodput overhead (k/(k+r)).
+  * ChurnParams — open-loop Poisson on/off flow churn: per-flow active
+    masks with exponential on/off holding times, deterministically seeded.
 """
 from __future__ import annotations
 
 from typing import NamedTuple, Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.unocc import UnoParams, derived_params
@@ -39,6 +49,30 @@ class FleetParams(NamedTuple):
     qa_period: jnp.ndarray      # int32: epochs between QA evaluations
 
 
+class LbParams(NamedTuple):
+    """Per-flow load-balancing constants, all (n_flows,) float32/int32.
+
+    `eta == 0` freezes a flow's split at uniform (static spraying); `ec_eff`
+    scales *useful* goodput by the erasure-coding rate k/(k+r) (wire rate —
+    what congests links — is unscaled; parity is pure overhead)."""
+    eta: jnp.ndarray            # multiplicative-weights step on mark fracs
+    repath_thresh: jnp.ndarray  # per-path mark frac that counts as "bad"
+    repath_patience: jnp.ndarray  # int32: consecutive bad epochs before repath
+    w_floor: jnp.ndarray        # min weight as a fraction of uniform (probe)
+    ec_eff: jnp.ndarray         # goodput efficiency k/(k+r); 1.0 = no EC
+
+
+class ChurnParams(NamedTuple):
+    """Per-flow open-loop on/off churn, all (n_flows,).
+
+    Geometric per-epoch transitions approximate exponential holding times:
+    P(on->off) = dt/mean_on, P(off->on) = dt/mean_off.  `churned == False`
+    pins a flow permanently active (the backlogged default)."""
+    churned: jnp.ndarray        # bool: does this flow churn at all
+    mean_on: jnp.ndarray        # mean ON duration (ns)
+    mean_off: jnp.ndarray       # mean OFF duration (ns)
+
+
 class FleetState(NamedTuple):
     """Dynamic state threaded through `lax.scan`."""
     cwnd: jnp.ndarray           # (n_flows,)
@@ -58,6 +92,11 @@ class FleetState(NamedTuple):
     qa_deficits: jnp.ndarray    # int32 consecutive deficient QA windows
     qa_countdown: jnp.ndarray   # int32 epochs until the next QA tick
     skip: jnp.ndarray           # int32 epochs of MD/QA skip left (post-QA)
+    split: jnp.ndarray          # (n_flows, n_paths) subflow rate weights
+    path_frac: jnp.ndarray      # (n_flows, n_paths) lagged per-path marks
+    bad_count: jnp.ndarray      # (n_flows, n_paths) int32 bad-epoch streak
+    active: jnp.ndarray         # (n_flows,) bool churn mask (True = sending)
+    key: jnp.ndarray            # PRNG key driving the churn transitions
 
 
 def make_params(bdp, rtt, intra_bdp: float, intra_rtt: float, *,
@@ -103,14 +142,55 @@ def make_params(bdp, rtt, intra_bdp: float, intra_rtt: float, *,
         cc_period=cc_period, qa_period=qa_period)
 
 
+def make_lb_params(n_flows: int, *, eta=0.25, repath_thresh=0.7,
+                   repath_patience=8, w_floor=0.05,
+                   ec=None) -> LbParams:
+    """Broadcast scalar LB knobs to (n_flows,) arrays.
+
+    `ec=(k, r)` turns on the static-EC overhead mode: goodput is scaled by
+    k/(k+r) (parity bytes congest links but carry no payload)."""
+    ones = jnp.ones(n_flows, jnp.float32)
+    eff = 1.0 if ec is None else ec[0] / (ec[0] + ec[1])
+    return LbParams(
+        eta=eta * ones, repath_thresh=repath_thresh * ones,
+        repath_patience=jnp.full(n_flows, repath_patience, jnp.int32),
+        w_floor=w_floor * ones, ec_eff=eff * ones)
+
+
+def make_churn_params(n_flows: int, *, mean_on: float, mean_off: float,
+                      churned=None) -> ChurnParams:
+    """Broadcast churn knobs; `churned` defaults to every flow churning."""
+    ones = jnp.ones(n_flows, jnp.float32)
+    if churned is None:
+        churned = jnp.ones(n_flows, bool)
+    return ChurnParams(churned=jnp.asarray(churned, bool),
+                       mean_on=mean_on * ones, mean_off=mean_off * ones)
+
+
 def init_state(params: FleetParams, n_links: int,
-               cwnd0: Optional[jnp.ndarray] = None) -> FleetState:
-    """Line-rate start (cwnd = BDP), empty queues — matches UnoCC.__init__."""
+               cwnd0: Optional[jnp.ndarray] = None, *,
+               n_paths: int = 1, split0: Optional[jnp.ndarray] = None,
+               seed: int = 0) -> FleetState:
+    """Line-rate start (cwnd = BDP), empty queues — matches UnoCC.__init__.
+
+    `split0` is the initial (n_flows, n_paths) subflow weight matrix; it is
+    REQUIRED for multipath nets (pass `links.uniform_split(net)` — a
+    uniform default over all n_paths slots would put weight on padding
+    paths, which bypass every queue, for flows with fewer valid paths).
+    `seed` fixes the churn PRNG so identical specs reproduce exactly.
+    """
     n = params.bdp.shape[0]
     f0 = jnp.zeros(n, jnp.float32)
     i0 = jnp.zeros(n, jnp.int32)
     lk0 = jnp.zeros(n_links, jnp.float32)
     cwnd = params.bdp if cwnd0 is None else jnp.asarray(cwnd0, jnp.float32)
+    if split0 is None:
+        if n_paths != 1:
+            raise ValueError(
+                "init_state needs split0 (e.g. links.uniform_split(net)) "
+                "when n_paths > 1: a uniform default would load padding "
+                "path slots for flows with fewer valid paths")
+        split0 = jnp.ones((n, 1), jnp.float32)
     return FleetState(
         cwnd=cwnd, ecn_ewma=f0, md_scale=jnp.ones_like(f0),
         q_phys=lk0, q_phantom=lk0, obs_frac=f0, obs_delay=f0,
@@ -118,4 +198,9 @@ def init_state(params: FleetParams, n_links: int,
         win_delay_min=jnp.full_like(f0, jnp.inf), win_delay_max=f0,
         cc_countdown=params.cc_period,
         qa_acked=f0, qa_prev_acked=f0, qa_deficits=i0,
-        qa_countdown=params.qa_period, skip=i0)
+        qa_countdown=params.qa_period, skip=i0,
+        split=jnp.asarray(split0, jnp.float32),
+        path_frac=jnp.zeros((n, split0.shape[1]), jnp.float32),
+        bad_count=jnp.zeros((n, split0.shape[1]), jnp.int32),
+        active=jnp.ones(n, bool),
+        key=jax.random.PRNGKey(seed))

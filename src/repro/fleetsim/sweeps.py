@@ -1,15 +1,18 @@
 """Scenario sweeps: `vmap` whole fluid simulations across parameter grids.
 
-A "scenario" is (FluidNet, FleetParams, is_inter) — pure pytrees of arrays.
-Scenarios that share shapes (same n_flows / n_links / max_hops) stack along
-a leading axis and one `jit(vmap(steady_state_core))` call sweeps the whole
-grid: RTT ratios x phantom drain fractions, flow-count mixes, load levels —
-heatmaps the per-packet simulator cannot reach (its wall-clock per cell is
-minutes; a fluid cell is milliseconds).
+A "scenario" is (FluidNet, FleetParams, is_inter[, LbParams[, ChurnParams]])
+— pure pytrees of arrays (repro.scenarios.FleetScenario tuples work
+directly).  Scenarios that share shapes (same n_flows / n_paths / n_links /
+max_hops) stack along a leading axis and one `jit(vmap(steady_state_core))`
+call sweeps the whole grid: RTT ratios x phantom drain fractions, flow-count
+mixes, load levels, churn duty cycles — heatmaps the per-packet simulator
+cannot reach (its wall-clock per cell is minutes; a fluid cell is
+milliseconds).
 
 Numeric knobs (RTT, drain, caps, even route link-ids) may vary freely across
-the grid; only array *shapes* must match.  Flow-count mixes therefore keep
-the total flow count fixed and flip flows between intra and inter profiles.
+the grid; only array *shapes* must match, and the LB / churn axes must be
+present on all scenarios or none.  Flow-count mixes therefore keep the total
+flow count fixed and flip flows between intra and inter profiles.
 """
 from __future__ import annotations
 
@@ -33,29 +36,61 @@ def jain(rates: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
     return s * s / jnp.maximum(n * s2, 1e-12)
 
 
+def _norm_scenario(sc):
+    """(net, params, is_inter[, lb[, churn]]) -> 5-tuple with None padding."""
+    sc = tuple(sc)
+    if not 3 <= len(sc) <= 6:
+        raise ValueError(f"scenario tuple of length {len(sc)}")
+    net, params, ii = sc[:3]
+    lb = sc[3] if len(sc) > 3 else None
+    churn = sc[4] if len(sc) > 4 else None
+    return net, params, ii, lb, churn
+
+
 def stack_scenarios(scenarios: Sequence[tuple]):
-    """Stack same-shape (net, params, is_inter) pytrees on a leading axis."""
-    nets, params, inters = zip(*scenarios)
+    """Stack same-shape scenario pytrees on a leading axis.
+
+    Returns (nets, params, is_inter, lb, churn); the LB / churn slots are
+    None when absent (they must be present on all scenarios or none).
+    """
+    nets, params, inters, lbs, churns = zip(
+        *(_norm_scenario(s) for s in scenarios))
+    for tag, xs in (("lb", lbs), ("churn", churns)):
+        if any(x is None for x in xs) != all(x is None for x in xs):
+            raise ValueError(f"{tag} must be set on all scenarios or none")
     stk = lambda *xs: jnp.stack(xs)
     return (jax.tree.map(stk, *nets), jax.tree.map(stk, *params),
-            jnp.stack(inters))
+            jnp.stack(inters),
+            None if lbs[0] is None else jax.tree.map(stk, *lbs),
+            None if churns[0] is None else jax.tree.map(stk, *churns))
 
 
 def run_grid(scenarios: Sequence[tuple], *, scheme: str = "uno",
-             n_warm: int = 50_000, n_meas: int = 10_000):
+             n_warm: int = 50_000, n_meas: int = 10_000, seed: int = 0):
     """Sweep all scenarios in one vmapped call.
 
     Returns (final_states, rates): each leaf carries a leading scenario
     axis; `rates` is (n_scenarios, n_flows) mean steady goodput in bytes/ns.
+    Churn PRNGs are derived from `seed` + the scenario index, so a grid is
+    reproducible end to end.
     """
-    nets, params, inters = stack_scenarios(scenarios)
+    nets, params, inters, lb, churn = stack_scenarios(scenarios)
     n_links = nets.cap.shape[1]
-    state0 = jax.vmap(lambda p: init_state(p, n_links))(params)
+    n_paths = nets.routes.shape[2] if nets.routes.ndim == 4 else 1
+    state0 = [init_state(p, n_links, n_paths=n_paths,
+                         split0=fl.uniform_split(net), seed=seed + i)
+              for i, (net, p, *_rest)
+              in enumerate(_norm_scenario(s) for s in scenarios)]
+    state0 = jax.tree.map(lambda *xs: jnp.stack(xs), *state0)
 
-    def one(net, p, s0, ii):
-        return steady_state_core(net, p, s0, ii, scheme, n_warm, n_meas)
+    def one(net, p, s0, ii, lb_i, churn_i):
+        return steady_state_core(net, p, s0, ii, scheme, n_warm, n_meas,
+                                 lb_i, churn_i)
 
-    return jax.jit(jax.vmap(one))(nets, params, state0, inters)
+    axes = (0, 0, 0, 0, None if lb is None else 0,
+            None if churn is None else 0)
+    return jax.jit(jax.vmap(one, in_axes=axes))(nets, params, state0,
+                                                inters, lb, churn)
 
 
 # ------------------------------------------------------------ concrete sweeps
@@ -64,26 +99,27 @@ def fairness_sweep(rtt_ratios: Sequence[float],
                    drain_fracs: Sequence[float], *,
                    n_intra: int = 4, n_inter: int = 4,
                    rate: float = fl.RATE_100G, intra_rtt: float = 14 * US,
-                   scheme: str = "uno", n_warm: int = 50_000,
+                   scheme: str = "uno", multipath: bool = False,
+                   n_wan: int = 8, n_warm: int = 50_000,
                    n_meas: int = 10_000) -> dict:
     """Inter/intra fairness heatmap over (RTT ratio x phantom drain frac).
 
     The paper's Fig 11 question at grid scale: does fairness survive as the
     inter-DC RTT grows and as the phantom drain (the utilization target)
-    moves?  Returns 2D (len(rtt_ratios), len(drain_fracs)) arrays:
+    moves?  `multipath=True` gives inter flows UnoLB-style adaptive subflow
+    splits over `n_wan` separate border links instead of the aggregated
+    pipe.  Returns 2D (len(rtt_ratios), len(drain_fracs)) arrays:
     'jain', 'class_ratio' (mean inter / mean intra rate), 'util'.
     """
+    from repro.scenarios import dumbbell_scenario, to_fleetsim
     scen, shape = [], (len(rtt_ratios), len(drain_fracs))
     for ratio in rtt_ratios:
         for drain in drain_fracs:
-            inter_rtt = ratio * intra_rtt
-            net, bdp, rtt = fl.dumbbell(n_intra, n_inter, rate=rate,
-                                        intra_rtt=intra_rtt,
-                                        inter_rtt=inter_rtt,
-                                        drain_frac=drain)
-            p = make_params(bdp, rtt, rate * intra_rtt, intra_rtt)
-            ii = jnp.arange(n_intra + n_inter) >= n_intra
-            scen.append((net, p, ii))
+            fs = to_fleetsim(dumbbell_scenario(
+                n_intra, n_inter, rate=rate, intra_rtt=intra_rtt,
+                inter_rtt=ratio * intra_rtt, drain_frac=drain,
+                multipath=multipath, n_wan=n_wan))
+            scen.append((fs.net, fs.params, fs.is_inter, fs.lb, fs.churn))
     _, rates = run_grid(scen, scheme=scheme, n_warm=n_warm, n_meas=n_meas)
     ii = jnp.arange(n_intra + n_inter) >= n_intra
     mean_inter = jnp.mean(rates[:, ii], axis=1) if n_inter else \
@@ -128,8 +164,9 @@ def load_mix_sweep(inter_counts: Sequence[int],
             ii = jnp.arange(n_total) >= (n_total - m)
             wan, down = n_total, net.cap.shape[0] - 1
             net = net._replace(
-                routes=jnp.where(ii[:, None] & (jnp.arange(2) == 0),
-                                 wan, net.routes).astype(jnp.int32),
+                routes=jnp.where(
+                    ii[:, None, None] & (jnp.arange(2) == 0),
+                    wan, net.routes).astype(jnp.int32),
                 cap=net.cap.at[down].mul(1.0 / load),
                 drain=net.drain.at[down].mul(1.0 / load))
             bdp = jnp.where(ii, rate * inter_rtt, bdp)
@@ -143,4 +180,51 @@ def load_mix_sweep(inter_counts: Sequence[int],
         "rates": rates.reshape(shape + (n_total,)),
         "jain": jain(rates).reshape(shape),
         "util": (rates.sum(axis=1) / rate).reshape(shape),
+    }
+
+
+def churn_sweep(duty_fracs: Sequence[float],
+                mean_on_rtts: Sequence[float], *, n_flows: int = 16,
+                rate: float = fl.RATE_100G, intra_rtt: float = 14 * US,
+                scheme: str = "uno", n_warm: int = 20_000,
+                n_meas: int = 30_000, seed: int = 0) -> dict:
+    """Open-loop churn heatmap over (ON duty cycle x ON-period length).
+
+    Every flow is an on/off source: ON for ~`mean_on_rtts` intra-RTTs at a
+    time, ON a fraction `duty` of the time overall.  Sweeps how utilization
+    and fairness degrade as senders become app-limited (short, sparse
+    bursts) — the regime the backlogged fluid model could not previously
+    express.  `duty == 1.0` is the exact backlogged baseline (mean_on =
+    inf: flows never blink off, no restart resets).  Returns 2D arrays
+    'util' (mean goodput / line rate), 'jain' (across flows' time-averaged
+    goodput), and 'expected_on' (mean number of concurrently ON flows).
+    """
+    from repro.scenarios import ChurnSpec, dumbbell_scenario, to_fleetsim
+    scen, shape = [], (len(duty_fracs), len(mean_on_rtts))
+    for duty in duty_fracs:
+        if not 0.0 < duty <= 1.0:
+            raise ValueError(f"duty {duty} not in (0, 1]")
+        for on_rtts in mean_on_rtts:
+            if duty >= 1.0:
+                churn = ChurnSpec(mean_on=float("inf"), mean_off=1.0)
+            else:
+                mean_on = on_rtts * intra_rtt
+                churn = ChurnSpec(
+                    mean_on=mean_on,
+                    mean_off=mean_on * (1.0 - duty) / duty)
+            fs = to_fleetsim(dumbbell_scenario(
+                n_flows, 0, rate=rate, intra_rtt=intra_rtt,
+                intra_churn=churn, seed=seed))
+            scen.append((fs.net, fs.params, fs.is_inter,
+                         fs.lb, fs.churn))
+    _, rates = run_grid(scen, scheme=scheme, n_warm=n_warm, n_meas=n_meas,
+                        seed=seed)
+    return {
+        "duty_fracs": jnp.asarray(duty_fracs),
+        "mean_on_rtts": jnp.asarray(mean_on_rtts),
+        "rates": rates.reshape(shape + (n_flows,)),
+        "jain": jain(rates).reshape(shape),
+        "util": (rates.sum(axis=1) / rate).reshape(shape),
+        "expected_on": jnp.full(
+            shape, n_flows) * jnp.asarray(duty_fracs)[:, None],
     }

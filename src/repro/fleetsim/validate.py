@@ -1,9 +1,10 @@
 """Cross-validation of the fluid model against the packet simulator.
 
 The fluid model trades packet fidelity for scale; this module quantifies the
-trade on scenarios small enough for repro.netsim: the same dumbbell is built
-in both simulators, both run UnoCC with phantom queues, and the steady-state
-per-flow throughputs are compared.
+trade on scenarios small enough for repro.netsim: ONE scenario spec
+(repro.scenarios) compiles to both simulators, both run UnoCC with phantom
+queues, and the steady-state per-flow throughputs are compared positionally
+(the spec fixes the flow ordering and flow->bottleneck assignment for both).
 
 Two cadences differ by design and are normalized here:
 
@@ -14,58 +15,67 @@ Two cadences differ by design and are normalized here:
     deterministic RED expectation marks in sparser bursts than per-packet
     RED, so the fluid limit cycle approaches the same equilibrium more
     slowly — epochs are ~10,000x cheaper, so we simply run more of them).
+
+`compare_multipath_steady_state` is the multipath acceptance check: the
+same dumbbell with the WAN as separate border links, netsim routing inter
+flows with UnoLBRouter (Algorithm 2) and fleetsim with the LbParams weight
+dynamics — per-flow rates must agree within the same tolerance.
 """
 from __future__ import annotations
-
-import random
 
 import numpy as np
 
 from repro.fleetsim import cc as fleet_cc
 from repro.fleetsim import links as fl
-from repro.fleetsim.state import make_params
-from repro.netsim import workloads as W
-from repro.netsim.topology import Dumbbell, MIB, MS, US
+from repro.netsim.topology import MIB, MS, US
+from repro.scenarios import (Scenario, dumbbell_scenario, spawn_backlogged,
+                             to_fleetsim, to_netsim)
 
 
-def netsim_dumbbell_rates(n_intra: int, n_inter: int, *,
-                          rate: float = fl.RATE_100G,
-                          intra_rtt: float = 14 * US,
-                          inter_rtt: float = 2 * MS,
-                          horizon: float = 45 * MS,
-                          t0: float = 15 * MS,
-                          size: int = 512 * MIB,
-                          seed: int = 1) -> np.ndarray:
-    """Per-flow mean goodput (bytes/ns) over [t0, horizon), intra flows
-    first — the packet-simulator ground truth."""
-    net = Dumbbell(n_left=n_intra + 1, n_right=1, rate=rate,
-                   intra_rtt=intra_rtt, inter_rtt=inter_rtt, seed=seed)
-    net.attach_phantoms()
-    rng = random.Random(seed)
-    flows = [W.spawn(net, 1 + i, 0, size, cc_scheme="uno", lb="ecmp",
-                     rng=rng, trace_rate=True) for i in range(n_intra)]
-    flows += [W.spawn(net, n_intra + 1 + j, 0, size, cc_scheme="uno",
-                      lb="rps", rng=rng, trace_rate=True)
-              for j in range(n_inter)]
+def netsim_scenario_rates(spec: Scenario, *, horizon: float = 45 * MS,
+                          t0: float = 15 * MS, size: int = 512 * MIB,
+                          lb=None, cc_scheme: str = "uno") -> np.ndarray:
+    """Per-flow mean goodput (bytes/ns) over [t0, horizon), spec flow order
+    — the packet-simulator ground truth."""
+    net = to_netsim(spec)
+    flows = spawn_backlogged(net, cc_scheme=cc_scheme, size=size, lb=lb)
     net.sim.run(until=horizon)
     span = horizon - t0
     return np.array([sum(b for (t, b) in f.rate_trace if t0 <= t < horizon)
                      / span for f in flows])
 
 
-def fluid_dumbbell_rates(n_intra: int, n_inter: int, *,
-                         rate: float = fl.RATE_100G,
-                         intra_rtt: float = 14 * US,
-                         inter_rtt: float = 2 * MS,
-                         n_warm: int = 200_000,
-                         n_meas: int = 20_000) -> np.ndarray:
-    """Fluid steady-state per-flow goodput (bytes/ns), intra flows first."""
-    net, bdp, rtt = fl.dumbbell(n_intra, n_inter, rate=rate,
-                                intra_rtt=intra_rtt, inter_rtt=inter_rtt)
-    params = make_params(bdp, rtt, rate * intra_rtt, intra_rtt)
-    _, rates = fleet_cc.steady_state(net, params, n_warm=n_warm,
-                                     n_meas=n_meas)
+def fluid_scenario_rates(spec: Scenario, *, n_warm: int = 200_000,
+                         n_meas: int = 20_000,
+                         scheme: str = "uno") -> np.ndarray:
+    """Fluid steady-state per-flow goodput (bytes/ns), spec flow order."""
+    fs = to_fleetsim(spec)
+    _, rates = fleet_cc.steady_state(fs.net, fs.params, n_warm=n_warm,
+                                     n_meas=n_meas, scheme=scheme,
+                                     is_inter=fs.is_inter, lb=fs.lb,
+                                     churn=fs.churn, seed=fs.seed)
     return np.asarray(rates)
+
+
+def compare_scenario(spec: Scenario, *, horizon: float = 45 * MS,
+                     t0: float = 15 * MS, size: int = 512 * MIB,
+                     n_warm: int = 200_000, n_meas: int = 20_000,
+                     lb=None) -> dict:
+    """Run both compilations of one spec; report per-flow agreement.
+
+    Returns {"netsim", "fluid", "rel_err", "max_rel_err", "util_netsim",
+    "util_fluid"} with rates in bytes/ns, spec flow order.
+    """
+    ns = netsim_scenario_rates(spec, horizon=horizon, t0=t0, size=size,
+                               lb=lb)
+    fm = fluid_scenario_rates(spec, n_warm=n_warm, n_meas=n_meas)
+    rel = np.abs(fm - ns) / np.maximum(ns, 1e-9)
+    return {
+        "netsim": ns, "fluid": fm, "rel_err": rel,
+        "max_rel_err": float(rel.max()),
+        "util_netsim": float(ns.sum() / spec.rate),
+        "util_fluid": float(fm.sum() / spec.rate),
+    }
 
 
 def compare_steady_state(n_intra: int, n_inter: int, *,
@@ -77,21 +87,42 @@ def compare_steady_state(n_intra: int, n_inter: int, *,
                          n_warm: int = 200_000,
                          n_meas: int = 20_000,
                          seed: int = 1) -> dict:
-    """Run both simulators on the same dumbbell; report per-flow agreement.
+    """Spray-routing dumbbell agreement (the PR-1 acceptance scenario):
+    ONE spec with the WAN as separate border links; the packet side sprays
+    inter flows over them with RPS, the fluid side runs the equivalent
+    static uniform split."""
+    from repro.scenarios import LbSpec
+    spec = dumbbell_scenario(n_intra, n_inter, rate=rate,
+                             intra_rtt=intra_rtt, inter_rtt=inter_rtt,
+                             multipath=True, seed=seed,
+                             inter_lb=LbSpec(kind="rps", n_subflows=8))
+    return compare_scenario(spec, horizon=horizon, t0=t0,
+                            n_warm=n_warm, n_meas=n_meas)
 
-    Returns {"netsim", "fluid", "rel_err", "max_rel_err", "util_netsim",
-    "util_fluid"} with rates in bytes/ns, intra flows first.
+
+def compare_multipath_steady_state(n_intra: int, n_inter: int, *,
+                                   rate: float = fl.RATE_100G,
+                                   intra_rtt: float = 14 * US,
+                                   inter_rtt: float = 2 * MS,
+                                   n_wan: int = 8, n_bottleneck: int = 1,
+                                   horizon: float = 45 * MS,
+                                   t0: float = 15 * MS,
+                                   n_warm: int = 200_000,
+                                   n_meas: int = 20_000,
+                                   seed: int = 1) -> dict:
+    """Multipath acceptance: ONE spec, WAN as separate links; netsim routes
+    inter flows with UnoLBRouter, fleetsim runs the adaptive-split fluid
+    LB.  Same per-flow tolerance as the single-path comparison.
+
+    Mix note: per-flow agreement holds where each bottleneck carries a
+    1:1-ish intra:inter mix (the validated regime — with intra flows
+    outnumbering inter on one downlink, the packet simulator's inter share
+    drifts below the fluid prediction; see the fidelity-limit list in
+    ROADMAP.md).  Use `n_bottleneck` to keep the per-downlink mix balanced.
     """
-    ns = netsim_dumbbell_rates(n_intra, n_inter, rate=rate,
-                               intra_rtt=intra_rtt, inter_rtt=inter_rtt,
-                               horizon=horizon, t0=t0, seed=seed)
-    fm = fluid_dumbbell_rates(n_intra, n_inter, rate=rate,
-                              intra_rtt=intra_rtt, inter_rtt=inter_rtt,
-                              n_warm=n_warm, n_meas=n_meas)
-    rel = np.abs(fm - ns) / np.maximum(ns, 1e-9)
-    return {
-        "netsim": ns, "fluid": fm, "rel_err": rel,
-        "max_rel_err": float(rel.max()),
-        "util_netsim": float(ns.sum() / rate),
-        "util_fluid": float(fm.sum() / rate),
-    }
+    spec = dumbbell_scenario(n_intra, n_inter, rate=rate,
+                             intra_rtt=intra_rtt, inter_rtt=inter_rtt,
+                             multipath=True, n_wan=n_wan,
+                             n_bottleneck=n_bottleneck, seed=seed)
+    return compare_scenario(spec, horizon=horizon, t0=t0,
+                            n_warm=n_warm, n_meas=n_meas)

@@ -62,6 +62,17 @@ class Net:
     def paths(self, src: int, dst: int) -> list:
         raise NotImplementedError
 
+    def path_link_names(self, src: int, dst: int) -> tuple:
+        """Path-set metadata: the (src, dst) paths as link-name tuples.
+
+        This is the declarative view of a Net the scenario compiler
+        (repro.scenarios) consumes — a hand-built topology can be lifted
+        into a Scenario path-set (and from there into the fleetsim route
+        tensor) without touching Link objects.
+        """
+        return tuple(tuple(ln.name for ln in path)
+                     for path in self.paths(src, dst))
+
     def link(self, name: str) -> Link:
         return self.links[name]
 

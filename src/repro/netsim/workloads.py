@@ -68,7 +68,12 @@ def spawn(net: Net, src: int, dst: int, size: int, *, cc_scheme: str,
           lb: str = "ecmp", ec: Optional[tuple[int, int]] = None,
           start_t: float = 0.0, rng: Optional[random.Random] = None,
           n_subflows: int = 8, on_done=None, mtu: int = 4096,
-          trace_rate: bool = False, cc_kw: Optional[dict] = None) -> Flow:
+          trace_rate: bool = False, cc_kw: Optional[dict] = None,
+          router_salt: Optional[int] = None) -> Flow:
+    """`router_salt` pins the router's hash/PRNG identity.  The default is
+    the process-global Flow id, so ECMP/subflow choices differ between two
+    otherwise-identical runs in one process; workload generators that
+    promise seed-reproducibility pass an explicit per-flow salt instead."""
     paths = net.paths(src, dst)
     is_inter = net.is_inter(src, dst)
     bdp = net.bdp(src, dst)
@@ -76,8 +81,9 @@ def spawn(net: Net, src: int, dst: int, size: int, *, cc_scheme: str,
     cc = make_cc(cc_scheme, bdp=bdp, intra_bdp=net.intra_bdp,
                  intra_rtt=net.intra_rtt, is_inter=is_inter, mtu=mtu,
                  **(cc_kw or {}))
-    router = make_router(lb, paths, Flow._next_id, rng=rng,
-                         base_rtt=base_rtt, n_subflows=n_subflows)
+    router = make_router(
+        lb, paths, Flow._next_id if router_salt is None else router_salt,
+        rng=rng, base_rtt=base_rtt, n_subflows=n_subflows)
     f = Flow(net.sim, net, src, dst, size, cc, router, mtu=mtu,
              ec=ec if is_inter else None, start_t=start_t,
              base_rtt=base_rtt, on_done=on_done, is_inter=is_inter)
@@ -133,7 +139,11 @@ def poisson_mix(net: Net, *, load: float, n_flows: int, cc_scheme: str,
                 intra_cdf=WEBSEARCH_CDF, inter_cdf=ALIBABA_WAN_CDF,
                 cc_kw=None) -> list[Flow]:
     """Mixed realistic workload: Poisson arrivals at `load` of aggregate host
-    bandwidth; 4:1 intra:inter bytes (paper §5.1); uniform random src/dst."""
+    bandwidth; 4:1 intra:inter bytes (paper §5.1); uniform random src/dst.
+
+    Fully reproducible from `seed`: arrivals, sizes, endpoints AND per-flow
+    router identity (salted with the flow's index, not the process-global
+    Flow id) — two calls with the same seed build identical workloads."""
     rng = random.Random(seed)
     m_i, m_e = cdf_mean(intra_cdf), cdf_mean(inter_cdf)
     byte_rate = load * net.n_hosts * net.rate          # offered bytes/ns
@@ -144,7 +154,7 @@ def poisson_mix(net: Net, *, load: float, n_flows: int, cc_scheme: str,
     half = net.n_hosts // 2
     flows = []
     t = 0.0
-    for _ in range(n_flows):
+    for i in range(n_flows):
         t += rng.expovariate(lam)
         if rng.random() < p_inter:
             src = rng.randrange(net.n_hosts)
@@ -159,7 +169,8 @@ def poisson_mix(net: Net, *, load: float, n_flows: int, cc_scheme: str,
                 dst = rng.randrange(half) + src_dc * half
             size = sample_cdf(intra_cdf, rng)
         flows.append(spawn(net, src, dst, size, cc_scheme=cc_scheme, lb=lb,
-                           ec=ec, start_t=t, rng=rng, cc_kw=cc_kw))
+                           ec=ec, start_t=t, rng=rng, cc_kw=cc_kw,
+                           router_salt=(seed << 20) ^ i))
     return flows
 
 

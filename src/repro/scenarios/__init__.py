@@ -1,0 +1,29 @@
+"""repro.scenarios — ONE declarative spec drives BOTH simulators.
+
+A Scenario (links + flow groups over explicit path-sets + inter/intra
+tags + optional LB / churn) compiles to:
+
+  * the packet simulator: `to_netsim(spec)` -> repro.netsim ScenarioNet,
+    `spawn_backlogged(net, ...)` -> Flows;
+  * the fluid model: `to_fleetsim(spec)` -> FleetScenario
+    (FluidNet + FleetParams + is_inter + LbParams + ChurnParams).
+
+Both compilers share the spec's flow ordering and flow->bottleneck
+assignment, so cross-validation (repro.fleetsim.validate) compares
+per-flow rates positionally.  `dumbbell_scenario` builds the inter/intra
+dumbbell both simulators previously hand-rolled separately.
+"""
+from repro.scenarios.compile_fleetsim import (FleetScenario, fleet_arrays,
+                                              to_fleetsim)
+from repro.scenarios.compile_netsim import (ScenarioNet, spawn_backlogged,
+                                            to_netsim)
+from repro.scenarios.spec import (ChurnSpec, FlowGroup, LbSpec, LinkSpec,
+                                  Path, PathSet, Scenario,
+                                  dumbbell_scenario)
+
+__all__ = [
+    "ChurnSpec", "FlowGroup", "LbSpec", "LinkSpec", "Path", "PathSet",
+    "Scenario", "dumbbell_scenario",
+    "FleetScenario", "fleet_arrays", "to_fleetsim",
+    "ScenarioNet", "spawn_backlogged", "to_netsim",
+]

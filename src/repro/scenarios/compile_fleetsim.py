@@ -1,0 +1,138 @@
+"""Scenario -> fluid model: build the (FluidNet, FleetParams, is_inter,
+LbParams, ChurnParams) pytrees repro.fleetsim steps on.
+
+The route tensor is (n_flows, n_paths, max_hops) int32 with -1 padding on
+both the hop axis (short paths) and the path axis (flows with fewer paths
+than the widest path-set).  Adaptive weight dynamics (LbParams) are enabled
+only for groups whose LbSpec names an adaptive router ("unolb" / "plb")
+over a real multipath set, or that carry erasure coding; everything else
+gets a static uniform split over its valid paths — ecmp/rps spraying and
+the single-aggregated-pipe view then produce *identical* fluid dynamics
+(n parallel uniform-split links scale 1:1 to one n-times-faster link).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from repro.fleetsim.links import FluidNet
+from repro.fleetsim.state import (ChurnParams, FleetParams, LbParams,
+                                  make_params)
+from repro.scenarios.spec import Scenario
+
+_ADAPTIVE_KINDS = ("unolb", "plb")
+_NEVER = 2.0          # mark-frac threshold no path can exceed (fracs <= 1)
+
+
+class FleetScenario(NamedTuple):
+    """Everything the fluid simulator needs, compiled from one Scenario."""
+    net: FluidNet
+    params: FleetParams
+    is_inter: jnp.ndarray            # (n_flows,) bool
+    lb: Optional[LbParams]           # None -> static split, no EC overhead
+    churn: Optional[ChurnParams]     # None -> every flow backlogged
+    seed: int
+
+
+def _flow_adaptive(g) -> bool:
+    return g.lb.kind in _ADAPTIVE_KINDS and g.lb.eta > 0
+
+
+def fleet_arrays(spec: Scenario):
+    """(FluidNet, bdp, rtt, is_inter) — topology + per-flow path constants."""
+    idx = spec.link_index()
+    n_links = len(spec.links)
+
+    cap = jnp.asarray([l.rate for l in spec.links], jnp.float32)
+    qcap = jnp.asarray([l.qcap for l in spec.links], jnp.float32)
+    vcap_derived = jnp.asarray(
+        [l.vcap_scale * spec.cap_bdps
+         * (spec.inter_bdp if l.wan else spec.intra_bdp)
+         for l in spec.links], jnp.float32)
+    if spec.phantom:
+        ecn_lo = spec.min_frac * vcap_derived
+        ecn_hi = spec.max_frac * vcap_derived
+        drain = spec.drain_frac * cap
+        use_phantom = jnp.ones(n_links, bool)
+        vcap = vcap_derived
+    else:
+        ecn_lo = spec.red_lo_frac * qcap
+        ecn_hi = spec.red_hi_frac * qcap
+        drain = cap
+        use_phantom = jnp.zeros(n_links, bool)
+        vcap = qcap
+
+    path_sets = [[[idx[name] for name in path] for path in g.path_set(k)]
+                 for _, g, k in spec.flow_groups()]
+    n_paths = max(len(ps) for ps in path_sets)
+    max_hops = max(len(p) for ps in path_sets for p in ps)
+    routes = -jnp.ones((spec.n_flows, n_paths, max_hops), jnp.int32)
+    for i, ps in enumerate(path_sets):
+        for p, hops in enumerate(ps):
+            routes = routes.at[i, p, :len(hops)].set(
+                jnp.asarray(hops, jnp.int32))
+
+    rtt = jnp.asarray(
+        [g.rtt if g.rtt is not None
+         else (spec.inter_rtt if g.inter else spec.intra_rtt)
+         for _, g, _ in spec.flow_groups()], jnp.float32)
+    bdp = spec.rate * rtt
+    is_inter = jnp.asarray([g.inter for _, g, _ in spec.flow_groups()], bool)
+
+    net = FluidNet(cap=cap, qcap=qcap, ecn_lo=ecn_lo, ecn_hi=ecn_hi,
+                   drain=drain, vcap=vcap, use_phantom=use_phantom,
+                   routes=routes,
+                   dt=jnp.float32(spec.epoch_period_frac * spec.intra_rtt))
+    return net, bdp, rtt, is_inter
+
+
+def to_fleetsim(spec: Scenario, **make_params_kw) -> FleetScenario:
+    """Compile the full fluid scenario.
+
+    `make_params_kw` forwards to repro.fleetsim.state.make_params (scheme
+    knobs like cc_period_rtts, ewma_g...); epoch_period_frac defaults to
+    the spec's so FluidNet.dt and the derived control constants agree.
+    """
+    net, bdp, rtt, is_inter = fleet_arrays(spec)
+    make_params_kw.setdefault("epoch_period_frac", spec.epoch_period_frac)
+    params = make_params(bdp, rtt, spec.intra_bdp, spec.intra_rtt,
+                        **make_params_kw)
+
+    want_lb = any(_flow_adaptive(g)
+                  or (g.lb.ec is not None and g.inter)
+                  for g in spec.groups)
+    lb = None
+    if want_lb:
+        eta, thresh, patience, floor, eff = [], [], [], [], []
+        for _, g, _ in spec.flow_groups():
+            adaptive = _flow_adaptive(g)
+            eta.append(g.lb.eta if adaptive else 0.0)
+            thresh.append(g.lb.repath_thresh if adaptive else _NEVER)
+            patience.append(g.lb.repath_patience if adaptive else 2 ** 30)
+            floor.append(g.lb.w_floor if adaptive else 0.0)
+            # EC is inter-DC only (paper §4.2) — the netsim side drops it
+            # for intra flows too (workloads.spawn), so one spec means the
+            # same thing in both simulators.
+            k_r = g.lb.ec if g.inter else None
+            eff.append(1.0 if k_r is None else k_r[0] / (k_r[0] + k_r[1]))
+        lb = LbParams(eta=jnp.asarray(eta, jnp.float32),
+                      repath_thresh=jnp.asarray(thresh, jnp.float32),
+                      repath_patience=jnp.asarray(patience, jnp.int32),
+                      w_floor=jnp.asarray(floor, jnp.float32),
+                      ec_eff=jnp.asarray(eff, jnp.float32))
+
+    churn = None
+    if any(g.churn is not None for g in spec.groups):
+        churned, mean_on, mean_off = [], [], []
+        for _, g, _ in spec.flow_groups():
+            c = g.churn
+            churned.append(c is not None)
+            mean_on.append(c.mean_on if c is not None else 1.0)
+            mean_off.append(c.mean_off if c is not None else 1.0)
+        churn = ChurnParams(churned=jnp.asarray(churned, bool),
+                            mean_on=jnp.asarray(mean_on, jnp.float32),
+                            mean_off=jnp.asarray(mean_off, jnp.float32))
+
+    return FleetScenario(net=net, params=params, is_inter=is_inter,
+                         lb=lb, churn=churn, seed=spec.seed)

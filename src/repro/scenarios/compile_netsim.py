@@ -1,0 +1,100 @@
+"""Scenario -> packet simulator: a repro.netsim Net whose links, paths and
+marking config come from the same spec the fluid compiler consumes.
+
+Host convention: host 0 is the receiver, host 1 + i is the sender of global
+flow i (spec flow ordering).  `spawn_backlogged` then wires one Flow per
+spec flow with the group's router kind / subflow count / EC framing, rng
+seeded from the spec — the packet-level ground truth cross-validation
+(repro.fleetsim.validate) compares against positionally.
+"""
+from __future__ import annotations
+
+import random
+from typing import Optional
+
+from repro.netsim.engine import Simulator
+from repro.netsim.topology import Net
+from repro.scenarios.spec import Scenario
+
+
+class ScenarioNet(Net):
+    """A Net built link-by-link from a Scenario (no hand-coded topology)."""
+
+    def __init__(self, spec: Scenario, seed: Optional[int] = None):
+        self.spec = spec
+        sim = Simulator(spec.seed if seed is None else seed)
+        super().__init__(sim, 1 + spec.n_flows, spec.intra_rtt,
+                         spec.inter_rtt, spec.rate)
+        for l in spec.links:
+            ln = self._mk_link(l.name, l.rate, l.delay, int(l.qcap))
+            ln.ecn_min = spec.red_lo_frac * l.qcap
+            ln.ecn_max = spec.red_hi_frac * l.qcap
+            if l.wan:
+                self.wan_links.append(ln)
+            if spec.phantom:
+                vcap = (l.vcap_scale * spec.cap_bdps
+                        * (spec.inter_bdp if l.wan else spec.intra_bdp))
+                ln.attach_phantom(spec.drain_frac, vcap,
+                                  spec.min_frac, spec.max_frac)
+        self._flow_paths = []
+        self._flow_inter = []
+        self._flow_rtt = []
+        self._flow_group = []
+        for _, g, k in spec.flow_groups():
+            self._flow_paths.append(
+                [tuple(self.links[name] for name in path)
+                 for path in g.path_set(k)])
+            self._flow_inter.append(g.inter)
+            self._flow_rtt.append(
+                g.rtt if g.rtt is not None
+                else (spec.inter_rtt if g.inter else spec.intra_rtt))
+            self._flow_group.append(g)
+
+    def _flow_of(self, src: int, dst: int) -> int:
+        """Global flow index: the sender endpoint identifies the flow."""
+        host = src if src > 0 else dst
+        if not 1 <= host <= len(self._flow_paths):
+            raise ValueError(f"host {host} is not a scenario sender")
+        return host - 1
+
+    def is_inter(self, src: int, dst: int) -> bool:
+        return self._flow_inter[self._flow_of(src, dst)]
+
+    def base_rtt(self, src: int, dst: int) -> float:
+        return self._flow_rtt[self._flow_of(src, dst)]
+
+    def bdp(self, src: int, dst: int) -> float:
+        return self.rate * self.base_rtt(src, dst)
+
+    def paths(self, src: int, dst: int) -> list:
+        return self._flow_paths[self._flow_of(src, dst)]
+
+    def group_of(self, flow_idx: int):
+        return self._flow_group[flow_idx]
+
+
+def to_netsim(spec: Scenario, seed: Optional[int] = None) -> ScenarioNet:
+    """Compile the spec's topology (marking config included) to netsim."""
+    return ScenarioNet(spec, seed=seed)
+
+
+def spawn_backlogged(net: ScenarioNet, *, cc_scheme: str, size: int,
+                     trace_rate: bool = True, lb: Optional[str] = None,
+                     cc_kw: Optional[dict] = None) -> list:
+    """One long flow per spec flow, in spec order (cross-validation driver).
+
+    Router kind / subflow count / EC come from each group's LbSpec unless
+    `lb` overrides the kind globally.  The rng is seeded from the spec so
+    two spawns of the same spec route identically.
+    """
+    from repro.netsim import workloads as W
+    spec = net.spec
+    rng = random.Random(spec.seed)
+    flows = []
+    for i, g, _ in spec.flow_groups():
+        flows.append(W.spawn(
+            net, 1 + i, 0, size, cc_scheme=cc_scheme,
+            lb=lb if lb is not None else g.lb.kind, ec=g.lb.ec,
+            n_subflows=g.lb.n_subflows, rng=rng, trace_rate=trace_rate,
+            cc_kw=cc_kw, router_salt=(spec.seed << 20) ^ i))
+    return flows

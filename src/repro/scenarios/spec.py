@@ -1,0 +1,231 @@
+"""Declarative scenario specs: ONE description of topology + traffic that
+compiles to EITHER simulator.
+
+A `Scenario` names directed links (`LinkSpec`), groups flows over explicit
+path-sets (`FlowGroup`: each flow has a tuple of paths, each path a tuple of
+link names), tags flows inter/intra with per-class RTTs, and optionally
+attaches load-balancing (`LbSpec`) and Poisson on/off churn (`ChurnSpec`)
+per group.  Compilers:
+
+  * repro.scenarios.compile_fleetsim.to_fleetsim -> (FluidNet, FleetParams,
+    is_inter, LbParams, ChurnParams) for the jitted fluid model;
+  * repro.scenarios.compile_netsim.to_netsim -> a packet-level
+    `ScenarioNet` (repro.netsim) whose flows ride the same link names.
+
+Both compilers consume the same flow ordering (groups in declaration order,
+flows within a group in index order), so "which flows share a bottleneck"
+is decided once, here, and cross-validation (repro.fleetsim.validate) can
+compare per-flow rates positionally.
+
+Units follow the repo convention: ns / bytes / bytes-per-ns.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+GBPS = 0.125               # bytes per ns per Gbit/s
+RATE_100G = 100 * GBPS
+US = 1_000.0
+MS = 1_000_000.0
+MIB = 1024 * 1024
+
+Path = Tuple[str, ...]           # link names, sender -> receiver order
+PathSet = Tuple[Path, ...]       # the paths one flow may use
+
+
+class LinkSpec(NamedTuple):
+    """One directed link.
+
+    `vcap_scale` multiplies the derived phantom virtual capacity
+    (cap_bdps * class BDP); aggregated pipes (n parallel links modeled as
+    one) set it to the aggregation factor so per-byte marking matches the
+    disaggregated layout exactly.
+    """
+    name: str
+    rate: float                  # service rate (bytes/ns)
+    delay: float                 # one-way propagation (ns; packet sim only)
+    qcap: float = 1 * MIB        # physical queue capacity (bytes)
+    wan: bool = False            # inter-DC link: phantom cap uses inter BDP
+    vcap_scale: float = 1.0
+
+
+class LbSpec(NamedTuple):
+    """Load-balancing for one flow group.
+
+    `kind` picks the netsim router ("ecmp" / "rps" / "plb" / "unolb"); the
+    fluid compiler maps any adaptive kind onto the LbParams weight dynamics
+    and `eta == 0` onto a static uniform split.  `ec=(k, r)` enables UnoRC
+    erasure coding (packet-level) / the k/(k+r) goodput overhead (fluid)
+    — applied on INTER-DC groups only in both compilers (paper §4.2:
+    EC never runs intra-DC); on an intra group it is ignored.
+    """
+    kind: str = "ecmp"
+    n_subflows: int = 8
+    eta: float = 0.25
+    repath_thresh: float = 0.7
+    repath_patience: int = 8
+    w_floor: float = 0.05
+    ec: Optional[Tuple[int, int]] = None
+
+
+class ChurnSpec(NamedTuple):
+    """Poisson on/off churn: exponential ON/OFF holding times (ns)."""
+    mean_on: float
+    mean_off: float
+
+
+class FlowGroup(NamedTuple):
+    """`n` flows sharing a traffic class.
+
+    `path_sets` has length n (one PathSet per flow) or length 1 (all flows
+    share the PathSet).  `rtt=None` uses the class default (inter_rtt when
+    `inter` else intra_rtt).
+    """
+    name: str
+    n: int
+    path_sets: Tuple[PathSet, ...]
+    inter: bool = False
+    rtt: Optional[float] = None
+    lb: LbSpec = LbSpec()
+    churn: Optional[ChurnSpec] = None
+
+    def path_set(self, i: int) -> PathSet:
+        return self.path_sets[i if len(self.path_sets) > 1 else 0]
+
+
+class Scenario(NamedTuple):
+    """The complete spec both compilers consume."""
+    name: str
+    links: Tuple[LinkSpec, ...]
+    groups: Tuple[FlowGroup, ...]
+    rate: float = RATE_100G          # access line rate (sets BDPs)
+    intra_rtt: float = 14 * US
+    inter_rtt: float = 2 * MS
+    phantom: bool = True             # Uno marking (phantom) vs physical RED
+    drain_frac: float = 0.9
+    cap_bdps: float = 1.0
+    min_frac: float = 0.05
+    max_frac: float = 0.35
+    red_lo_frac: float = 0.25
+    red_hi_frac: float = 0.75
+    epoch_period_frac: float = 1.0
+    seed: int = 0                    # threaded to workloads AND churn masks
+
+    @property
+    def n_flows(self) -> int:
+        return sum(g.n for g in self.groups)
+
+    @property
+    def intra_bdp(self) -> float:
+        return self.rate * self.intra_rtt
+
+    @property
+    def inter_bdp(self) -> float:
+        return self.rate * self.inter_rtt
+
+    def link_index(self) -> dict:
+        return {l.name: i for i, l in enumerate(self.links)}
+
+    def flow_groups(self):
+        """Yield (global_flow_idx, group, idx_within_group) in the shared
+        ordering: groups in declaration order, flows in index order."""
+        i = 0
+        for g in self.groups:
+            for k in range(g.n):
+                yield i, g, k
+                i += 1
+
+    def validate(self) -> "Scenario":
+        """Cheap structural checks; returns self so builders can chain."""
+        idx = self.link_index()
+        if len(idx) != len(self.links):
+            raise ValueError(f"{self.name}: duplicate link names")
+        for g in self.groups:
+            if len(g.path_sets) not in (1, g.n):
+                raise ValueError(
+                    f"{self.name}/{g.name}: path_sets must have length 1 "
+                    f"or n={g.n}, got {len(g.path_sets)}")
+            for ps in g.path_sets:
+                if not ps:
+                    raise ValueError(f"{self.name}/{g.name}: empty path set")
+                for path in ps:
+                    for name in path:
+                        if name not in idx:
+                            raise ValueError(
+                                f"{self.name}/{g.name}: unknown link "
+                                f"{name!r}")
+        return self
+
+
+# ------------------------------------------------------------------ dumbbell
+
+def dumbbell_scenario(n_intra: int, n_inter: int, *,
+                      rate: float = RATE_100G,
+                      intra_rtt: float = 14 * US, inter_rtt: float = 2 * MS,
+                      qcap: float = 1 * MIB, n_wan: int = 8,
+                      n_bottleneck: int = 1, phantom: bool = True,
+                      drain_frac: float = 0.9, cap_bdps: float = 1.0,
+                      min_frac: float = 0.05, max_frac: float = 0.35,
+                      red_lo_frac: float = 0.25, red_hi_frac: float = 0.75,
+                      epoch_period_frac: float = 1.0,
+                      multipath: bool = False,
+                      intra_lb: Optional[LbSpec] = None,
+                      inter_lb: Optional[LbSpec] = None,
+                      intra_churn: Optional[ChurnSpec] = None,
+                      inter_churn: Optional[ChurnSpec] = None,
+                      seed: int = 0, name: str = "dumbbell") -> Scenario:
+    """The shared inter/intra dumbbell: one spec for netsim AND fleetsim.
+
+    Links: one private uplink per intra sender, the WAN border
+    (`multipath=False`: ONE aggregated pipe of n_wan * rate, the
+    packet-sprayed fluid view; `multipath=True`: n_wan separate links), and
+    `n_bottleneck` receiver downlinks.
+
+    Flow -> downlink convention (the one the compilers standardize on):
+    flows are numbered globally, intra flows first, then inter flows, and
+    flow i sends to downlink `down{i % n_bottleneck}`.
+
+    `multipath=True` gives every inter flow one path per WAN link (UnoLB
+    subflows / packet spraying); intra flows always have a single path.
+    Per-link propagation mirrors netsim.topology.Dumbbell: intra links
+    intra_rtt/8, WAN (inter_rtt - intra_rtt)/2.
+    """
+    d_inb = intra_rtt / 8.0
+    wan_delay = (inter_rtt - intra_rtt) / 2.0
+    links = [LinkSpec(f"up{i}", rate, d_inb, qcap) for i in range(n_intra)]
+    if multipath:
+        wan_names = [f"wan{w}" for w in range(n_wan)]
+        links += [LinkSpec(w, rate, wan_delay, qcap, wan=True)
+                  for w in wan_names]
+    else:
+        wan_names = ["wan"]
+        links += [LinkSpec("wan", n_wan * rate, wan_delay, qcap, wan=True,
+                           vcap_scale=float(n_wan))]
+    links += [LinkSpec(f"down{j}", rate, d_inb, qcap)
+              for j in range(n_bottleneck)]
+
+    groups = []
+    if n_intra:
+        groups.append(FlowGroup(
+            "intra", n_intra,
+            tuple(((f"up{i}", f"down{i % n_bottleneck}"),)
+                  for i in range(n_intra)),
+            inter=False, lb=intra_lb or LbSpec(), churn=intra_churn))
+    if n_inter:
+        groups.append(FlowGroup(
+            "inter", n_inter,
+            tuple(tuple((w, f"down{(n_intra + j) % n_bottleneck}")
+                        for w in wan_names)
+                  for j in range(n_inter)),
+            inter=True,
+            lb=inter_lb or LbSpec(kind="unolb" if multipath else "rps",
+                                  n_subflows=n_wan),
+            churn=inter_churn))
+
+    return Scenario(
+        name=name, links=tuple(links), groups=tuple(groups), rate=rate,
+        intra_rtt=intra_rtt, inter_rtt=inter_rtt, phantom=phantom,
+        drain_frac=drain_frac, cap_bdps=cap_bdps, min_frac=min_frac,
+        max_frac=max_frac, red_lo_frac=red_lo_frac,
+        red_hi_frac=red_hi_frac, epoch_period_frac=epoch_period_frac,
+        seed=seed).validate()

@@ -1,15 +1,19 @@
-"""fleetsim fluid model: link-math units, control-loop behavior, vmapped
-sweeps, and cross-validation against the packet simulator (repro.netsim)."""
+"""fleetsim fluid model: link-math units, control-loop behavior, multipath
+load balancing, open-loop churn, vmapped sweeps, and cross-validation
+against the packet simulator (repro.netsim)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.fleetsim import (dumbbell, init_state, make_params, simulate,
-                            steady_state)
+from repro.fleetsim import (dumbbell, init_state, make_lb_params,
+                            make_params, simulate, steady_state)
 from repro.fleetsim import links as L
+from repro.fleetsim.cc import update_split
 from repro.fleetsim.links import MS, RATE_100G, US
-from repro.fleetsim.sweeps import fairness_sweep, jain, load_mix_sweep
-from repro.fleetsim.validate import compare_steady_state
+from repro.fleetsim.sweeps import (churn_sweep, fairness_sweep, jain,
+                                   load_mix_sweep)
+from repro.fleetsim.validate import (compare_multipath_steady_state,
+                                     compare_steady_state)
 
 INTRA_RTT = 14 * US
 INTRA_BDP = RATE_100G * INTRA_RTT
@@ -129,6 +133,102 @@ def test_dctcp_intra_incast_fair_and_utilized():
     assert 0.85 < r.sum() / RATE_100G <= 1.01
 
 
+# ------------------------------------------------------- multipath / lb axis
+
+def test_multipath_uniform_split_matches_aggregated_pipe():
+    """n parallel uniform-split WAN links are fluid-identical to one
+    n-times-faster pipe (the PR-1 single-path view)."""
+    kw = dict(n_warm=60_000, n_meas=10_000)
+    net1, bdp1, rtt1 = dumbbell(1, 1)
+    p1 = make_params(bdp1, rtt1, INTRA_BDP, INTRA_RTT)
+    _, r_agg = steady_state(net1, p1, **kw)
+    net2, bdp2, rtt2 = dumbbell(1, 1, multipath=True)
+    p2 = make_params(bdp2, rtt2, INTRA_BDP, INTRA_RTT)
+    _, r_mp = steady_state(net2, p2, **kw)
+    assert net2.n_paths == 8 and net1.n_paths == 1
+    assert np.asarray(r_mp) == pytest.approx(np.asarray(r_agg), rel=0.02)
+
+
+def test_lb_shifts_split_away_from_congested_path():
+    """A backlogged hog on path 0's link drives the adaptive flow's weight
+    onto the clean path (UnoLB-style shift toward less-marked paths)."""
+    from repro.scenarios import (FlowGroup, LbSpec, LinkSpec, Scenario,
+                                 to_fleetsim)
+    from repro.fleetsim import cc as fleet_cc
+    spec = Scenario(
+        name="asym",
+        links=(LinkSpec("a", RATE_100G, 0.0), LinkSpec("b", RATE_100G, 0.0)),
+        groups=(FlowGroup("hog", 1, ((("a",),),)),
+                FlowGroup("lbf", 1, ((("a",), ("b",)),),
+                          lb=LbSpec(kind="unolb"))))
+    fs = to_fleetsim(spec)
+    st, rates = fleet_cc.steady_state(fs.net, fs.params, n_warm=50_000,
+                                      n_meas=5_000, lb=fs.lb)
+    split = np.asarray(st.split[1])
+    assert split[1] > 0.9, split                 # nearly all weight on "b"
+    assert split.sum() == pytest.approx(1.0, abs=1e-5)
+    # and the adaptive flow escapes the hog: near the solo phantom target
+    assert float(rates[1]) / RATE_100G > 0.85
+
+
+def test_update_split_repaths_persistently_marked_path():
+    """repath_patience epochs above repath_thresh zero the path's weight
+    (redistribution), leaving only the probe floor."""
+    lb = make_lb_params(1, eta=0.0, repath_thresh=0.5, repath_patience=3,
+                        w_floor=0.04)
+    mask = jnp.ones((1, 4), bool)
+    split = jnp.full((1, 4), 0.25)
+    bad_count = jnp.zeros((1, 4), jnp.int32)
+    pf = jnp.asarray([[0.9, 0.0, 0.0, 0.0]])     # path 0 persistently marked
+    for _ in range(3):
+        split, bad_count = update_split(split, pf, bad_count, mask, lb)
+    split = np.asarray(split)
+    assert split[0, 0] < 0.02                    # down to the probe floor
+    assert split.sum() == pytest.approx(1.0, abs=1e-5)
+    assert np.all(split[0, 1:] > 0.3)
+
+
+def test_static_ec_overhead_scales_goodput():
+    """lb's EC mode: useful goodput is k/(k+r) of the no-EC rate (wire
+    rate, and therefore the congestion equilibrium, is unchanged)."""
+    net, bdp, rtt = dumbbell(2, 0)
+    p = make_params(bdp, rtt, INTRA_BDP, INTRA_RTT)
+    _, r_plain = steady_state(net, p, n_warm=40_000, n_meas=5_000)
+    _, r_ec = steady_state(net, p, n_warm=40_000, n_meas=5_000,
+                           lb=make_lb_params(2, eta=0.0, ec=(8, 2)))
+    assert np.asarray(r_ec) == pytest.approx(0.8 * np.asarray(r_plain),
+                                             rel=0.01)
+
+
+# ------------------------------------------------------------------- churn
+
+def test_churn_reduces_util_with_duty_and_is_deterministic():
+    out = churn_sweep([0.2, 1.0], [200.0], n_flows=8,
+                      n_warm=10_000, n_meas=20_000, seed=3)
+    util = np.asarray(out["util"]).ravel()
+    assert np.all(np.isfinite(util)) and np.all(util > 0.05)
+    assert util[0] < util[1]            # lower duty -> lower utilization
+    out2 = churn_sweep([0.2, 1.0], [200.0], n_flows=8,
+                       n_warm=10_000, n_meas=20_000, seed=3)
+    assert np.array_equal(np.asarray(out["rates"]),
+                          np.asarray(out2["rates"]))
+
+
+def test_unchurned_flows_stay_backlogged():
+    """churned=False flows never turn off even with churn enabled."""
+    from repro.fleetsim import make_churn_params
+    net, bdp, rtt = dumbbell(2, 0)
+    p = make_params(bdp, rtt, INTRA_BDP, INTRA_RTT)
+    churn = make_churn_params(2, mean_on=10 * INTRA_RTT,
+                              mean_off=10 * INTRA_RTT,
+                              churned=jnp.asarray([True, False]))
+    final, good = simulate(net, p, n_epochs=2_000, churn=churn, seed=5,
+                           record=True)
+    good = np.asarray(good)
+    assert np.all(good[:, 1] > 0.0)              # pinned flow never idles
+    assert np.any(good[:, 0] == 0.0)             # churned flow does idle
+
+
 # ------------------------------------------------------------------- sweeps
 
 def test_fairness_sweep_grid():
@@ -168,3 +268,14 @@ def test_cross_validation_8flow_load():
     res = compare_steady_state(8, 0, horizon=80 * MS, t0=10 * MS)
     assert res["max_rel_err"] < 0.15, res
     assert res["util_fluid"] == pytest.approx(res["util_netsim"], abs=0.06)
+
+
+def test_cross_validation_multipath_unolb():
+    """Acceptance (ISSUE 2): ONE spec with the WAN as separate border
+    links; netsim routes inter flows with UnoLBRouter (Alg 2 subflows),
+    fleetsim runs the adaptive-split fluid LB — per-flow steady rates
+    within the established 15% tolerance."""
+    res = compare_multipath_steady_state(2, 2, n_bottleneck=2,
+                                         horizon=45 * MS, t0=15 * MS)
+    assert res["max_rel_err"] < 0.15, res
+    assert res["util_fluid"] == pytest.approx(res["util_netsim"], rel=0.10)

@@ -1,0 +1,127 @@
+"""Property tests for repro.fleetsim.links invariants.
+
+Runs under real hypothesis when installed (CI does); skips cleanly through
+tests/hypostub.py otherwise.  Hypothesis drives a seed; numpy generates the
+random nets/rates from it — small random topologies (random link counts,
+route tensors with -1 padding, random splits) rather than hand-picked ones.
+
+Invariants:
+  * offered_load conserves total rate: scatter mass over links equals the
+    sum over (flow, path, hop) of rate * split (independently recomputed);
+  * mark_prob is monotone in queue depth;
+  * bottleneck_scale lies in (0, 1];
+  * normalize_split / update_split keep each flow's weights a distribution
+    over its valid paths.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:
+    from hypostub import given, settings, st
+
+from repro.fleetsim import links as L
+from repro.fleetsim.cc import update_split
+from repro.fleetsim.state import LbParams
+
+
+def _random_net(rng: np.random.Generator):
+    n_links = int(rng.integers(1, 8))
+    n_flows = int(rng.integers(1, 10))
+    n_paths = int(rng.integers(1, 5))
+    max_hops = int(rng.integers(1, 5))
+    routes = rng.integers(-1, n_links, size=(n_flows, n_paths, max_hops))
+    routes[:, 0, 0] = rng.integers(0, n_links, size=n_flows)  # >=1 real path
+    cap = rng.uniform(1.0, 20.0, n_links)
+    qcap = rng.uniform(10.0, 1000.0, n_links)
+    lo = rng.uniform(0.0, 0.5, n_links) * qcap
+    hi = lo + rng.uniform(0.05, 0.5, n_links) * qcap
+    return L.FluidNet(
+        cap=jnp.asarray(cap, jnp.float32),
+        qcap=jnp.asarray(qcap, jnp.float32),
+        ecn_lo=jnp.asarray(lo, jnp.float32),
+        ecn_hi=jnp.asarray(hi, jnp.float32),
+        drain=jnp.asarray(0.9 * cap, jnp.float32),
+        vcap=jnp.asarray(qcap, jnp.float32),
+        use_phantom=jnp.asarray(rng.integers(0, 2, n_links), bool),
+        routes=jnp.asarray(routes, jnp.int32),
+        dt=jnp.float32(1.0))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_offered_load_conserves_total_rate(seed):
+    rng = np.random.default_rng(seed)
+    net = _random_net(rng)
+    n_flows, n_paths, _ = np.asarray(net.routes).shape
+    rates = rng.uniform(0.0, 10.0, n_flows).astype(np.float32)
+    w = rng.uniform(0.0, 1.0, (n_flows, n_paths)).astype(np.float32)
+    split = np.asarray(L.normalize_split(
+        jnp.asarray(w), L.path_mask(net)))
+    load = np.asarray(L.offered_load(net, jnp.asarray(rates),
+                                     jnp.asarray(split)))
+    # independent recount: every real hop of every path carries the
+    # subflow's rate; nothing leaks, nothing is double-counted
+    expect = np.zeros(net.n_links)
+    routes = np.asarray(net.routes)
+    for i in range(n_flows):
+        for p in range(n_paths):
+            for hop in routes[i, p]:
+                if hop >= 0:
+                    expect[hop] += rates[i] * split[i, p]
+    assert np.allclose(load, expect, rtol=1e-4, atol=1e-4)
+    assert np.isclose(load.sum(), expect.sum(), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_mark_prob_monotone_in_queue_depth(seed):
+    rng = np.random.default_rng(seed)
+    net = _random_net(rng)
+    q1 = rng.uniform(0.0, 1.0, net.n_links) * np.asarray(net.qcap)
+    q2 = q1 + rng.uniform(0.0, 1.0, net.n_links) * np.asarray(net.qcap)
+    p1 = np.asarray(L.mark_prob(net, jnp.asarray(q1, jnp.float32),
+                                jnp.asarray(q1, jnp.float32)))
+    p2 = np.asarray(L.mark_prob(net, jnp.asarray(q2, jnp.float32),
+                                jnp.asarray(q2, jnp.float32)))
+    assert np.all(p2 >= p1 - 1e-6)
+    assert np.all((0.0 <= p1) & (p1 <= 1.0))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_bottleneck_scale_in_unit_interval(seed):
+    rng = np.random.default_rng(seed)
+    net = _random_net(rng)
+    load = rng.uniform(0.0, 50.0, net.n_links).astype(np.float32)
+    scale = np.asarray(L.bottleneck_scale(net, jnp.asarray(load)))
+    assert np.all(scale > 0.0)
+    assert np.all(scale <= 1.0 + 1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_split_stays_a_distribution(seed):
+    rng = np.random.default_rng(seed)
+    net = _random_net(rng)
+    mask = L.path_mask(net)
+    n_flows, n_paths = np.asarray(mask).shape
+    split = L.normalize_split(
+        jnp.asarray(rng.uniform(0, 1, (n_flows, n_paths)), jnp.float32),
+        mask)
+    assert np.allclose(np.asarray(split).sum(axis=1), 1.0, atol=1e-5)
+    assert np.all(np.asarray(split) >= 0.0)
+    ones = jnp.ones(n_flows, jnp.float32)
+    lb = LbParams(eta=0.3 * ones,
+                  repath_thresh=0.5 * ones,
+                  repath_patience=jnp.full(n_flows, 2, jnp.int32),
+                  w_floor=0.05 * ones, ec_eff=ones)
+    pf = jnp.asarray(rng.uniform(0, 1, (n_flows, n_paths)), jnp.float32)
+    bad = jnp.zeros((n_flows, n_paths), jnp.int32)
+    for _ in range(4):      # through at least one repath event
+        split, bad = update_split(split, pf, bad, mask, lb)
+        s = np.asarray(split)
+        assert np.allclose(s.sum(axis=1), 1.0, atol=1e-5)
+        assert np.all(s >= 0.0)
+        assert np.all(s[~np.asarray(mask)] == 0.0)

@@ -1,0 +1,157 @@
+"""Scenario layer: spec validation, both compilers, and the shared
+conventions (flow ordering, flow->downlink assignment, deterministic
+seeding) that make netsim/fleetsim cross-validation positional."""
+import random
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.netsim import workloads as W
+from repro.netsim.topology import Dumbbell, TwoDCFatTree
+from repro.scenarios import (ChurnSpec, FlowGroup, LbSpec, LinkSpec,
+                             Scenario, dumbbell_scenario, fleet_arrays,
+                             spawn_backlogged, to_fleetsim, to_netsim)
+
+US = 1_000.0
+
+
+# ------------------------------------------------------------------ the spec
+
+def test_spec_validation_rejects_unknown_link():
+    with pytest.raises(ValueError, match="unknown link"):
+        Scenario(name="bad", links=(LinkSpec("a", 1.0, 0.0),),
+                 groups=(FlowGroup("g", 1, ((("a", "zzz"),),)),)).validate()
+
+
+def test_spec_validation_rejects_wrong_path_set_count():
+    with pytest.raises(ValueError, match="path_sets"):
+        Scenario(name="bad", links=(LinkSpec("a", 1.0, 0.0),),
+                 groups=(FlowGroup("g", 3, ((("a",),), (("a",),))),)
+                 ).validate()
+
+
+def test_flow_ordering_is_groups_then_index():
+    spec = dumbbell_scenario(2, 3)
+    order = [(g.name, k) for _, g, k in spec.flow_groups()]
+    assert order == [("intra", 0), ("intra", 1),
+                     ("inter", 0), ("inter", 1), ("inter", 2)]
+    assert spec.n_flows == 5
+
+
+# ------------------------------------------------- one spec, both simulators
+
+def test_downlink_assignment_agrees_between_compilers():
+    """The standardized convention: flow i (global order, intra first)
+    sends to downlink i % n_bottleneck — in BOTH compilations."""
+    spec = dumbbell_scenario(3, 3, n_bottleneck=2, multipath=True)
+    # fleetsim: the last hop of every valid path is the flow's downlink
+    net, _, _, _ = fleet_arrays(spec)
+    down = {name: i for i, name in
+            enumerate(l.name for l in spec.links)}
+    routes = np.asarray(net.routes)
+    ns = to_netsim(spec)
+    for i in range(spec.n_flows):
+        want = f"down{i % 2}"
+        for p in range(routes.shape[1]):
+            hops = routes[i, p][routes[i, p] >= 0]
+            if hops.size:
+                assert hops[-1] == down[want], (i, p)
+        # netsim: every path of sender host 1+i ends on the same downlink
+        for path in ns.paths(1 + i, 0):
+            assert path[-1].name == want, i
+
+
+def test_compilers_share_links_and_classes():
+    spec = dumbbell_scenario(2, 2, multipath=True, n_wan=4)
+    fnet, bdp, rtt, is_inter = fleet_arrays(spec)
+    nnet = to_netsim(spec)
+    assert set(nnet.links) == {l.name for l in spec.links}
+    assert fnet.n_links == len(spec.links)
+    # same inter/intra tagging and RTT classes, positionally
+    for i in range(spec.n_flows):
+        assert bool(is_inter[i]) == nnet.is_inter(1 + i, 0)
+        assert float(rtt[i]) == pytest.approx(nnet.base_rtt(1 + i, 0))
+    # phantom marking configured on both sides
+    assert bool(jnp.all(fnet.use_phantom))
+    assert all(ln.phantom is not None for ln in nnet.links.values())
+    # WAN phantom capacity uses the inter-DC BDP on both sides
+    wan_idx = [i for i, l in enumerate(spec.links) if l.wan]
+    assert float(fnet.vcap[wan_idx[0]]) == pytest.approx(spec.inter_bdp)
+    assert nnet.links["wan0"].phantom.cap == pytest.approx(spec.inter_bdp)
+
+
+def test_netsim_path_metadata_roundtrips_into_a_spec():
+    """Net.path_link_names lifts a hand-built topology into spec path-sets
+    that compile back to an equivalent fluid route tensor."""
+    hand = Dumbbell(n_left=3, n_right=1)
+    names = hand.path_link_names(4, 0)      # remote sender: 8 WAN paths
+    assert len(names) == 8
+    assert all(p[0].startswith("wan") and p[1] == "down0" for p in names)
+    links = tuple(LinkSpec(ln.name, ln.rate, ln.pdelay, ln.qcap,
+                           wan=ln.name.startswith("wan"))
+                  for ln in hand.links.values())
+    spec = Scenario(name="lifted", links=links,
+                    groups=(FlowGroup("inter", 1, (names,), inter=True),)
+                    ).validate()
+    net, _, _, _ = fleet_arrays(spec)
+    assert net.n_paths == 8
+    assert bool(jnp.all(net.routes >= 0))
+
+
+def test_multipath_spec_compiles_to_padded_route_tensor():
+    spec = dumbbell_scenario(2, 1, multipath=True, n_wan=4)
+    fs = to_fleetsim(spec)
+    assert fs.net.routes.shape == (3, 4, 2)
+    # intra flows: 1 valid path, 3 padding rows
+    from repro.fleetsim.links import path_mask
+    pm = np.asarray(path_mask(fs.net))
+    assert pm[0].tolist() == [True, False, False, False]
+    assert pm[2].tolist() == [True, True, True, True]
+    # inter group defaults to adaptive unolb -> LbParams present,
+    # intra rows inert (eta 0)
+    assert fs.lb is not None
+    assert np.asarray(fs.lb.eta)[:2].tolist() == [0.0, 0.0]
+    assert np.asarray(fs.lb.eta)[2] > 0.0
+
+
+# -------------------------------------------------------------- determinism
+
+def test_spawn_backlogged_is_seed_reproducible():
+    spec = dumbbell_scenario(1, 2, multipath=True, seed=11)
+    picks = []
+    for _ in range(2):
+        net = to_netsim(spec)
+        flows = spawn_backlogged(net, cc_scheme="uno", size=1 << 20)
+        picks.append([[tuple(ln.name for ln in sp)
+                       for sp in f.router.sub_paths]
+                      for f in flows if f.is_inter])
+    assert picks[0] == picks[1]
+
+
+def test_poisson_mix_is_seed_reproducible():
+    runs = []
+    for _ in range(2):
+        net = TwoDCFatTree(seed=4)
+        flows = W.poisson_mix(net, load=0.2, n_flows=25, cc_scheme="uno",
+                              lb="ecmp", seed=4)
+        runs.append([(f.src, f.dst, f.size, f.start_t,
+                      tuple(ln.name for ln in f.router.path))
+                     for f in flows])
+    assert runs[0] == runs[1]
+
+
+def test_fleet_churn_masks_are_seed_reproducible():
+    from repro.fleetsim import cc as fleet_cc
+    spec = dumbbell_scenario(
+        4, 0, seed=9,
+        intra_churn=ChurnSpec(mean_on=50 * 14 * US, mean_off=50 * 14 * US))
+    outs = []
+    for _ in range(2):
+        fs = to_fleetsim(spec)
+        _, good = fleet_cc.simulate(fs.net, fs.params, n_epochs=3_000,
+                                    churn=fs.churn, seed=fs.seed,
+                                    record=True)
+        outs.append(np.asarray(good))
+    assert np.array_equal(outs[0], outs[1])
+    assert np.any(outs[0] == 0.0)       # churn actually idles some flows
