@@ -6,6 +6,15 @@ Acceptance targets:
     needs minutes for a few dozen flows).
   * ISSUE 2: >= 1M flow-epochs/s with n_paths = 4 multipath (adaptive
     UnoLB-style splits) on one CPU core.
+  * ISSUE 3: the million-flow scaling curve (`--scaling` / `--smoke`):
+    flow-epochs/s at n_flows in {1k, 10k, 100k, 1M} for the compiled
+    RouteLayout path, the original `.at[].add` scatter path, and the
+    shard_map'd flow axis (subprocess with
+    --xla_force_host_platform_device_count; the device count must be fixed
+    before jax initializes).  Results land in BENCH_fleetsim.json at the
+    repo root — the start of the perf trajectory — including the
+    layout-vs-scatter speedup per config and a completed 1M-flow x
+    1k-epoch run.
 
 Reports: jitted single-scenario rate (compile time separated out), the same
 1k-flow scenario's steady utilization/fairness as a sanity check, the
@@ -15,16 +24,25 @@ for the figure registry (benchmarks.run).
 """
 from __future__ import annotations
 
+import datetime
+import json
+import os
+import pathlib
+import subprocess
+import sys
 import time
 
 import jax
 import numpy as np
 
 from benchmarks import common
-from repro.fleetsim import dumbbell, make_params, simulate
+from repro.fleetsim import dumbbell, links as fl, make_params, simulate
 from repro.fleetsim.links import RATE_100G, US
 from repro.fleetsim.sweeps import churn_sweep, fairness_sweep, jain
 from repro.scenarios import dumbbell_scenario, to_fleetsim
+
+BENCH_PATH = pathlib.Path(__file__).resolve().parents[1] / \
+    "BENCH_fleetsim.json"
 
 
 def _timed_sim(n_flows: int, n_epochs: int) -> dict:
@@ -127,6 +145,171 @@ def run(quick: bool = True) -> dict:
     return out
 
 
+# --------------------------------------------- million-flow scaling curve
+
+def _scenario(n_flows: int, multipath: bool):
+    if multipath:
+        fs = to_fleetsim(dumbbell_scenario(
+            n_flows // 2, n_flows - n_flows // 2, multipath=True, n_wan=4,
+            n_bottleneck=max(1, n_flows // 64)))
+        return fs.net, fs.params, fs.is_inter, fs.lb
+    net, bdp, rtt = dumbbell(n_flows // 2, n_flows - n_flows // 2,
+                             n_bottleneck=max(1, n_flows // 64))
+    params = make_params(bdp, rtt, RATE_100G * 14 * US, 14 * US)
+    return net, params, None, None
+
+
+def _time_simulate(net, params, n_epochs, *, is_inter=None, lb=None,
+                   backend="auto", reps=3):
+    """(cold_s, best warm_s) for one jitted n_epochs run."""
+    t0 = time.time()
+    final, _ = simulate(net, params, n_epochs=n_epochs, is_inter=is_inter,
+                        lb=lb, backend=backend)
+    jax.block_until_ready(final.cwnd)
+    cold = time.time() - t0
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.time()
+        final, _ = simulate(net, params, n_epochs=n_epochs,
+                            is_inter=is_inter, lb=lb, backend=backend)
+        jax.block_until_ready(final.cwnd)
+        best = min(best, time.time() - t0)
+    return cold, best
+
+
+def _point(n_flows, n_epochs, *, variant, path, warm_s, cold_s=None):
+    rec = {"n_flows": n_flows, "n_epochs": n_epochs, "variant": variant,
+           "path": path, "warm_s": round(warm_s, 3),
+           "flow_epochs_per_s": round(n_flows * n_epochs / warm_s)}
+    if cold_s is not None:
+        rec["cold_s"] = round(cold_s, 2)
+    print("  ", json.dumps(rec))
+    return rec
+
+
+def _sharded_point(n_flows: int, n_epochs: int, n_devices: int = 2):
+    """Time the shard_map'd flow axis in a subprocess (the forced host
+    device count must be set before jax initializes)."""
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count={n_devices} "
+    + os.environ.get("XLA_FLAGS", ""))
+import json, time, jax
+from repro.fleetsim import dumbbell, make_params
+from repro.fleetsim.shard import steady_state_sharded
+from repro.fleetsim.links import RATE_100G, US
+n = {n_flows}
+net, bdp, rtt = dumbbell(n // 2, n - n // 2, n_bottleneck=max(1, n // 64))
+p = make_params(bdp, rtt, RATE_100G * 14 * US, 14 * US)
+kw = dict(n_warm={n_epochs} - 10, n_meas=10)
+_, r = steady_state_sharded(net, p, **kw)
+jax.block_until_ready(r)
+best = float("inf")
+for _ in range(2):
+    t0 = time.time()
+    _, r = steady_state_sharded(net, p, **kw)
+    jax.block_until_ready(r)
+    best = min(best, time.time() - t0)
+print(json.dumps({{"warm_s": best}}))
+"""
+    env = dict(os.environ)
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=1800, env=env)
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-2000:])
+    return json.loads(out.stdout.strip().splitlines()[-1])["warm_s"]
+
+
+# layout-path epoch counts per size (reference runs use ~1/4 of these so
+# the slow scatter path doesn't dominate benchmark wall-clock)
+_CURVE_EPOCHS = {1_000: 20_000, 10_000: 2_000, 100_000: 200, 1_000_000: 40}
+
+
+def scaling_curve(mode: str = "full") -> dict:
+    """Grow the n_flows scaling curve and write BENCH_fleetsim.json.
+
+    mode: "smoke" (CI: 10k flows only, short scan), "quick" (up to 100k),
+    "full" (up to 1M + the completed 1M-flow x 1k-epoch run).
+    """
+    sizes = {"smoke": [10_000], "quick": [1_000, 10_000, 100_000],
+             "full": [1_000, 10_000, 100_000, 1_000_000]}[mode]
+    points, speedups = [], {}
+    for n in sizes:
+        ne = _CURVE_EPOCHS[n] if mode != "smoke" else 300
+        for variant in ("single", "multipath"):
+            multipath = variant == "multipath"
+            if multipath and n < 100_000 and mode != "smoke":
+                continue            # headline contrast configs only
+            if multipath and mode == "smoke":
+                continue
+            net, params, ii, lb = _scenario(n, multipath)
+            fast_net = fl.with_layout(net, trim=True) if multipath else net
+            cold, warm = _time_simulate(fast_net, params, ne,
+                                        is_inter=ii, lb=lb)
+            points.append(_point(n, ne, variant=variant, path="layout",
+                                 warm_s=warm, cold_s=cold))
+            ref_ne = max(5, ne // 4)
+            _, ref_warm = _time_simulate(net._replace(layout=None), params,
+                                         ref_ne, is_inter=ii, lb=lb,
+                                         backend="reference", reps=2)
+            points.append(_point(n, ref_ne, variant=variant,
+                                 path="reference", warm_s=ref_warm))
+            speedups[f"{variant}:{n}"] = round(
+                (n * ne / warm) / (n * ref_ne / ref_warm), 2)
+        # sharded flow axis (2 CPU shards; single-path scenario)
+        try:
+            sh_ne = min(ne, 200)
+            sh_warm = _sharded_point(n, sh_ne)
+            points.append(_point(n, sh_ne, variant="single",
+                                 path="sharded2", warm_s=sh_warm))
+        except (RuntimeError, subprocess.TimeoutExpired, OSError,
+                json.JSONDecodeError, KeyError, IndexError) as e:
+            # keep the rest of the curve (and still write the JSON) even
+            # if the sharded subprocess hangs, dies, or prints garbage
+            print("  sharded point failed:", str(e)[:200])
+
+    out = {
+        "meta": {
+            "generated": datetime.datetime.now(
+                datetime.timezone.utc).isoformat(timespec="seconds"),
+            "mode": mode,
+            "cpu_count": os.cpu_count(),
+            "jax": jax.__version__,
+            "scenario": "scenarios.dumbbell_scenario, "
+                        "n_bottleneck=n_flows/64, multipath=n_wan=4",
+        },
+        "points": points,
+        "speedup_layout_vs_reference": speedups,
+    }
+
+    if mode == "full":
+        # acceptance: a completed 1M-flow x 1k-epoch run on the fast path
+        n, ne = 1_000_000, 1_000
+        net, params, _, _ = _scenario(n, False)
+        t0 = time.time()
+        final, _ = simulate(net, params, n_epochs=ne)
+        jax.block_until_ready(final.cwnd)
+        wall = time.time() - t0
+        rates = final.cwnd / params.rtt
+        out["run_1m"] = {
+            "n_flows": n, "n_epochs": ne, "wall_s": round(wall, 1),
+            "flow_epochs_per_s": round(n * ne / wall),
+            "final_jain": round(float(jain(rates)), 4),
+        }
+        print("  run_1m:", json.dumps(out["run_1m"]))
+
+    BENCH_PATH.write_text(json.dumps(out, indent=1))
+    print(f"wrote {BENCH_PATH}")
+    return out
+
+
 if __name__ == "__main__":
-    import json
-    print(json.dumps(run(quick=True), indent=1))
+    if "--scaling" in sys.argv or "--smoke" in sys.argv:
+        mode = "smoke" if "--smoke" in sys.argv else \
+            ("quick" if "--quick" in sys.argv else "full")
+        scaling_curve(mode)
+    else:
+        print(json.dumps(run(quick=True), indent=1))

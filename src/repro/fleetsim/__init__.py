@@ -6,23 +6,33 @@ flow-level fluid model stepped on the UnoCC epoch clock — (n_flows,) state
 arrays, a (n_flows, n_paths, max_hops) route tensor with per-subflow rate
 splits, one jitted `lax.scan` step, scenario grids via `vmap` — so 10k+
 flows x 100k epochs run in seconds and parameter heatmaps (RTT ratio, load,
-phantom drain, churn duty) become cheap.  The `lb` axis (LbParams) models
-UnoLB-style adaptive path weights + static-EC overhead; ChurnParams adds
-open-loop Poisson on/off flow churn.  Topologies come from the shared
-scenario layer (repro.scenarios) — one spec compiles to this simulator AND
-to repro.netsim, and repro.fleetsim.validate cross-checks the fluid steady
+phantom drain, churn duty) become cheap.  The per-scenario `RouteLayout`
+(links.compute_layout; attached by the scenario compiler) precompiles the
+route tensor into gather indices + a by-link-sorted CSR view so the
+per-epoch hot path does no scatter, and `repro.fleetsim.shard` runs the
+flow axis under `shard_map` (one psum of partial link loads per epoch) for
+1M+ flows across devices.  The `lb` axis (LbParams) models UnoLB-style
+adaptive path weights + static-EC overhead; ChurnParams adds open-loop
+Poisson on/off flow churn.  Topologies come from the shared scenario layer
+(repro.scenarios) — one spec compiles to this simulator AND to
+repro.netsim, and repro.fleetsim.validate cross-checks the fluid steady
 state against the packet simulator on small scenarios.
 """
 from repro.fleetsim.cc import (SCHEMES, make_step, simulate, steady_state,
                                update_split)
-from repro.fleetsim.links import FluidNet, dumbbell, uniform_split
+from repro.fleetsim.links import (LOAD_BACKENDS, FluidNet, RouteLayout,
+                                  compute_layout, dumbbell, link_epoch,
+                                  uniform_split, with_layout)
+from repro.fleetsim.shard import steady_state_sharded
 from repro.fleetsim.state import (ChurnParams, FleetParams, FleetState,
                                   LbParams, init_state, make_churn_params,
                                   make_lb_params, make_params)
 
 __all__ = [
     "SCHEMES", "make_step", "simulate", "steady_state", "update_split",
-    "FluidNet", "dumbbell", "uniform_split",
+    "LOAD_BACKENDS", "FluidNet", "RouteLayout", "compute_layout",
+    "dumbbell", "link_epoch", "uniform_split", "with_layout",
+    "steady_state_sharded",
     "ChurnParams", "FleetParams", "FleetState", "LbParams",
     "init_state", "make_churn_params", "make_lb_params", "make_params",
 ]

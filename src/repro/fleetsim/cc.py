@@ -104,17 +104,23 @@ def update_split(split: jnp.ndarray, path_frac: jnp.ndarray,
 def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
               is_inter: Optional[jnp.ndarray] = None,
               lb: Optional[LbParams] = None,
-              churn: Optional[ChurnParams] = None):
+              churn: Optional[ChurnParams] = None, *,
+              axis_name: Optional[str] = None, backend: str = "auto"):
     """Build the per-epoch transition: state -> (state', goodput).
 
     `lb=None` freezes the split at its initial value (static spraying) and
     reports raw goodput; `churn=None` keeps every flow backlogged.
+    `axis_name` names a shard_map mesh axis the flow dimension is sharded
+    over (per-epoch psum of the partial link loads — repro.fleetsim.shard);
+    `backend` picks the link-aggregation implementation (repro.fleetsim
+    .links.LOAD_BACKENDS).
     """
     if scheme not in SCHEMES:
         raise ValueError(f"unknown fleetsim scheme {scheme!r}")
     if is_inter is None:
         is_inter = jnp.zeros_like(params.bdp, bool)
     pmask = L.path_mask(net)
+    single = net.n_paths == 1
     # restart target for OFF->ON churn transitions: a fresh flow exactly as
     # init_state would start it (line-rate cwnd, clean accumulators,
     # uniform split); constant, so hoisted out of the scanned step
@@ -130,15 +136,19 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
         # ---- network: loads, queues, marks, delays ----------------------
         rate = actf * state.cwnd / p.rtt
         split = state.split
-        load = L.offered_load(net, rate, split)
-        sub_scale = L.subflow_scale(net, load)
-        goodput = rate * jnp.sum(split * sub_scale, axis=1)
-        q_phys, q_phantom = L.step_queues(net, state.q_phys,
-                                          state.q_phantom, load)
-        p_link = L.mark_prob(net, q_phys, q_phantom)
-        sub_frac = L.subflow_mark_frac(net, p_link)
-        inst_frac = jnp.sum(split * sub_frac, axis=1)
-        inst_delay = L.path_delay(net, q_phys, split)
+        le = L.link_epoch(net, rate, split, state.q_phys, state.q_phantom,
+                          axis_name=axis_name, backend=backend)
+        q_phys, q_phantom = le.q_phys, le.q_phantom
+        sub_frac = le.sub_frac
+        if single:   # split-weighted sums collapse to one product per flow
+            s1 = split[:, 0]
+            goodput = rate * (s1 * le.sub_scale[:, 0])
+            inst_frac = s1 * sub_frac[:, 0]
+            inst_delay = s1 * le.sub_delay[:, 0]
+        else:
+            goodput = rate * jnp.sum(split * le.sub_scale, axis=1)
+            inst_frac = jnp.sum(split * sub_frac, axis=1)
+            inst_delay = jnp.sum(split * le.sub_delay, axis=1)
         # Feedback lag: a sender observes congestion one flow-RTT late (marks
         # ride the data+ACK round trip).  First-order filter with time
         # constant = flow RTT — exact for intra flows (rtt == dt), and for
@@ -148,15 +158,22 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
         fb = jnp.minimum(net.dt / p.rtt, 1.0)
         frac = state.obs_frac + fb * (inst_frac - state.obs_frac)
         delay = state.obs_delay + fb * (inst_delay - state.obs_delay)
-        path_frac = state.path_frac + fb[:, None] * (sub_frac
-                                                     - state.path_frac)
+        # the lagged per-path marks only feed the lb weight update — skip
+        # the (n_flows, n_paths) filter entirely under static spraying
+        path_frac = state.path_frac if lb is None else \
+            state.path_frac + fb[:, None] * (sub_frac - state.path_frac)
         acked = goodput * net.dt
 
         # ---- window accumulators ----------------------------------------
         win_acked = state.win_acked + acked
         win_marked = state.win_marked + frac * acked
-        win_dmin = jnp.minimum(state.win_delay_min, delay)
-        win_dmax = jnp.maximum(state.win_delay_max, delay)
+        # delay extrema feed scheme-specific reactions: win_dmin gates Uno's
+        # gentle MD, win_dmax drives Gemini's WAN backoff — maintain only
+        # what the scheme reads
+        win_dmin = jnp.minimum(state.win_delay_min, delay) \
+            if scheme == "uno" else state.win_delay_min
+        win_dmax = jnp.maximum(state.win_delay_max, delay) \
+            if scheme == "gemini" else state.win_delay_max
         fire = state.cc_countdown <= 1
         can_md = state.skip <= 0
         wfrac = win_marked / jnp.maximum(win_acked, 1.0)
@@ -203,8 +220,10 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
 
         win_acked = jnp.where(fire, 0.0, win_acked)
         win_marked = jnp.where(fire, 0.0, win_marked)
-        win_dmin = jnp.where(fire, jnp.inf, win_dmin)
-        win_dmax = jnp.where(fire, 0.0, win_dmax)
+        if scheme == "uno":
+            win_dmin = jnp.where(fire, jnp.inf, win_dmin)
+        if scheme == "gemini":
+            win_dmax = jnp.where(fire, 0.0, win_dmax)
         cc_countdown = jnp.where(fire, p.cc_period, state.cc_countdown - 1)
 
         # ---- Quick-Adapt (UnoCC only; Alg 1 OnQA) -----------------------
@@ -278,10 +297,12 @@ def _default_state(net: L.FluidNet, params: FleetParams, seed: int = 0):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("scheme", "n_epochs", "record"))
+                   static_argnames=("scheme", "n_epochs", "record",
+                                    "backend"))
 def _simulate(net, params, state0, is_inter, lb, churn, scheme, n_epochs,
-              record):
-    step = make_step(net, params, scheme, is_inter, lb=lb, churn=churn)
+              record, backend="auto"):
+    step = make_step(net, params, scheme, is_inter, lb=lb, churn=churn,
+                     backend=backend)
     if record:
         return jax.lax.scan(step, state0, None, length=n_epochs)
     final, _ = jax.lax.scan(lambda s, x: (step(s, x)[0], None),
@@ -294,32 +315,36 @@ def simulate(net: L.FluidNet, params: FleetParams, *, n_epochs: int,
              is_inter: Optional[jnp.ndarray] = None,
              lb: Optional[LbParams] = None,
              churn: Optional[ChurnParams] = None,
-             seed: int = 0, record: bool = False):
+             seed: int = 0, record: bool = False, backend: str = "auto"):
     """Run `n_epochs` epochs; returns (final_state, goodput_trajectory).
 
     `goodput_trajectory` is (n_epochs, n_flows) bytes/ns when `record`,
     else None.  Jit-compiled; recompiles only on new (scheme, n_epochs,
-    record, shapes, lb/churn presence).  `seed` fixes the churn PRNG.
+    record, backend, shapes, lb/churn presence).  `seed` fixes the churn
+    PRNG; `backend` picks the link-aggregation path (links.LOAD_BACKENDS).
     """
     if state0 is None:
         state0 = _default_state(net, params, seed)
     if is_inter is None:
         is_inter = jnp.zeros_like(params.bdp, bool)
     return _simulate(net, params, state0, is_inter, lb, churn, scheme,
-                     n_epochs, record)
+                     n_epochs, record, backend)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("scheme", "n_warm", "n_meas"))
+                   static_argnames=("scheme", "n_warm", "n_meas", "backend",
+                                    "axis_name"))
 def steady_state_core(net, params, state0, is_inter, scheme, n_warm, n_meas,
-                      lb=None, churn=None):
+                      lb=None, churn=None, backend="auto", axis_name=None):
     """Warm up, then return (final_state, mean goodput over n_meas epochs).
 
     The measurement pass accumulates a running sum in the carry instead of
     materializing the (n_meas, n_flows) trajectory — this is the vmap-safe
     entry point sweeps fan out over (a stacked trajectory for a whole grid
-    would not fit memory)."""
-    step = make_step(net, params, scheme, is_inter, lb=lb, churn=churn)
+    would not fit memory).  `axis_name` is set by repro.fleetsim.shard when
+    the flow axis runs under shard_map."""
+    step = make_step(net, params, scheme, is_inter, lb=lb, churn=churn,
+                     backend=backend, axis_name=axis_name)
     state, _ = jax.lax.scan(lambda s, x: (step(s, x)[0], None),
                             state0, None, length=n_warm)
 
@@ -338,10 +363,11 @@ def steady_state(net: L.FluidNet, params: FleetParams, *, n_warm: int,
                  state0: Optional[FleetState] = None,
                  is_inter: Optional[jnp.ndarray] = None,
                  lb: Optional[LbParams] = None,
-                 churn: Optional[ChurnParams] = None, seed: int = 0):
+                 churn: Optional[ChurnParams] = None, seed: int = 0,
+                 backend: str = "auto"):
     if state0 is None:
         state0 = _default_state(net, params, seed)
     if is_inter is None:
         is_inter = jnp.zeros_like(params.bdp, bool)
     return steady_state_core(net, params, state0, is_inter, scheme,
-                             n_warm, n_meas, lb, churn)
+                             n_warm, n_meas, lb, churn, backend)

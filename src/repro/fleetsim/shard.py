@@ -1,0 +1,162 @@
+"""Sharded flow axis: run the fluid model with flows split across devices.
+
+The fleet step is embarrassingly parallel in the flow dimension except for
+one reduction: the per-link offered load.  `shard_map` gives each device a
+contiguous flow shard (state, params, routes — everything with a leading
+n_flows axis — split over the mesh axis "flows"; the (n_links,) link arrays
+and queue state replicated), each shard compiles its OWN RouteLayout over
+its local routes, and the only cross-device traffic is one `psum` of the
+partial link-load buffer per epoch (see `links.offered_load(axis_name=)`),
+after which every device steps the replicated queues identically.
+
+That makes 1M+ flows a data-layout question rather than a memory/compute
+wall: on GPU/TPU fleets each device carries n_flows / n_devices state rows,
+and on CPU the same code path is exercised with
+`XLA_FLAGS=--xla_force_host_platform_device_count=N` (how the tests and
+`benchmarks/fleetsim_sweep.py --scaling` run it; device count must be set
+before jax initializes, so the benchmark spawns a fresh interpreter).
+
+Flow counts that do not divide the device count are padded with *inert*
+flows: every hop is -1, so their split row is all-zero and they contribute
+exactly nothing to any link, mark, or goodput — results match the unpadded
+run on the real rows.  Churn is not supported here: its PRNG draws are
+(n_flows,)-shaped on one device, and a faithful sharded split of the same
+stream would tie the layout to the device count.  Sharded and single-device
+runs agree to float-sum tolerance (the psum changes the order link loads
+accumulate in), which tests/test_fleet_scale.py pins.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.fleetsim import links as L
+from repro.fleetsim.cc import steady_state_core
+from repro.fleetsim.state import (FleetParams, FleetState, LbParams,
+                                  init_state)
+from repro.sharding import shard_map
+
+AXIS = "flows"
+# FleetState fields replicated across flow shards (cc._NON_FLOW_FIELDS
+# additionally lists `active`, which IS per-flow — it is excluded there
+# only because the churn merge sets it explicitly)
+_REPLICATED = ("q_phys", "q_phantom", "key")
+
+
+def flow_mesh(n_devices: Optional[int] = None):
+    """1-D mesh over the first `n_devices` (default: all) local devices."""
+    n = n_devices or len(jax.devices())
+    return jax.make_mesh((n,), (AXIS,))
+
+
+def _pad_flow_tree(tree, pad: int):
+    """Repeat each leaf's first row `pad` times at the tail (leading axis)."""
+    return jax.tree.map(
+        lambda a: jnp.concatenate(
+            [a, jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])]), tree)
+
+
+def pad_flows(net: L.FluidNet, params: FleetParams,
+              is_inter: Optional[jnp.ndarray] = None,
+              lb: Optional[LbParams] = None, *, multiple: int):
+    """Pad the flow axis up to a multiple of `multiple` with inert flows.
+
+    Inert flows route every hop to -1: no valid path, all-zero split, zero
+    offered load and zero goodput — pure ballast that makes the shard shapes
+    even.  Returns (net, params, is_inter, lb, n_real).
+    """
+    n = params.bdp.shape[0]
+    pad = (-n) % multiple
+    if pad == 0:
+        return net, params, is_inter, lb, n
+    routes3 = net.routes if net.routes.ndim == 3 else net.routes[:, None, :]
+    fill = jnp.full((pad,) + routes3.shape[1:], -1, jnp.int32)
+    net = net._replace(routes=jnp.concatenate([routes3, fill]), layout=None)
+    params = _pad_flow_tree(params, pad)
+    if is_inter is not None:
+        is_inter = jnp.concatenate([is_inter, jnp.zeros(pad, bool)])
+    if lb is not None:
+        lb = _pad_flow_tree(lb, pad)
+    return net, params, is_inter, lb, n
+
+
+def _net_spec(net: L.FluidNet) -> L.FluidNet:
+    """PartitionSpec tree for FluidNet: routes sharded, links replicated."""
+    return L.FluidNet(cap=P(), qcap=P(), ecn_lo=P(), ecn_hi=P(), drain=P(),
+                      vcap=P(), use_phantom=P(), routes=P(AXIS), dt=P(),
+                      layout=None)
+
+
+def _state_spec() -> FleetState:
+    """PartitionSpec tree for FleetState: link state + PRNG key replicated."""
+    return FleetState(**{
+        f: P() if f in _REPLICATED else P(AXIS)
+        for f in FleetState._fields})
+
+
+def _unpad_state(state: FleetState, n: int) -> FleetState:
+    return FleetState(**{
+        f: getattr(state, f) if f in _REPLICATED
+        else getattr(state, f)[:n] for f in FleetState._fields})
+
+
+def steady_state_sharded(net: L.FluidNet, params: FleetParams, *,
+                         n_warm: int, n_meas: int, scheme: str = "uno",
+                         is_inter: Optional[jnp.ndarray] = None,
+                         lb: Optional[LbParams] = None,
+                         state0: Optional[FleetState] = None,
+                         mesh=None, backend: str = "auto"):
+    """`cc.steady_state` with the flow axis sharded over `mesh` (default:
+    all local devices).  Returns (final_state, mean goodput) with the
+    padding rows stripped; per-flow leaves keep device sharding.
+
+    Each shard rebuilds its local RouteLayout inside shard_map, so the
+    caller's `net.layout` (global, unshardable: its CSR view is sorted
+    across all flows) is discarded.  `state0`, when given, must match the
+    *unpadded* flow count.
+    """
+    mesh = mesh if mesh is not None else flow_mesh()
+    n_dev = mesh.devices.size
+    if state0 is not None and state0.cwnd.shape[0] != params.bdp.shape[0]:
+        raise ValueError("state0 flow count does not match params")
+    net, params, is_inter, lb, n_real = pad_flows(
+        net, params, is_inter, lb, multiple=n_dev)
+    if is_inter is None:
+        is_inter = jnp.zeros(params.bdp.shape[0], bool)
+    if state0 is None:
+        state0 = init_state(params, net.n_links, n_paths=net.n_paths,
+                            split0=L.uniform_split(net))
+    else:
+        pad = params.bdp.shape[0] - n_real
+        if pad:
+            state0 = FleetState(**{
+                f: getattr(state0, f) if f in _REPLICATED
+                else _pad_flow_tree(getattr(state0, f), pad)
+                for f in FleetState._fields})
+        # inert padding must carry zero split weight, not flow 0's copy
+        if pad:
+            keep = jnp.arange(state0.split.shape[0]) < n_real
+            state0 = state0._replace(
+                split=jnp.where(keep[:, None], state0.split, 0.0))
+
+    lb_spec = None if lb is None else jax.tree.map(lambda _: P(AXIS), lb)
+    param_spec = jax.tree.map(lambda _: P(AXIS), params)
+
+    def local(net_l, params_l, state0_l, ii_l, lb_l):
+        net_l = L.with_layout(net_l)
+        return steady_state_core(net_l, params_l, state0_l, ii_l,
+                                 scheme=scheme, n_warm=n_warm,
+                                 n_meas=n_meas, lb=lb_l, churn=None,
+                                 backend=backend, axis_name=AXIS)
+
+    f = shard_map(local, mesh,
+                  in_specs=(_net_spec(net), param_spec, _state_spec(),
+                            P(AXIS), lb_spec),
+                  out_specs=(_state_spec(), P(AXIS)),
+                  check_vma=False)
+    final, rates = jax.jit(f)(net._replace(layout=None), params, state0,
+                              is_inter, lb)
+    return _unpad_state(final, n_real), rates[:n_real]

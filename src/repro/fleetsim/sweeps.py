@@ -26,12 +26,49 @@ from repro.fleetsim.cc import steady_state_core
 from repro.fleetsim.state import init_state, make_params
 
 US = fl.US
+_SUM_CHUNK = 1024
+
+
+def fleet_sum(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Compensated float32 sum along `axis`, accurate at 10^6+ flows.
+
+    A naive float32 accumulation of n ~ 1e5-1e6 per-flow rates carries
+    O(n * eps) rounding — enough to visibly bias Jain / utilization
+    numbers whose interesting differences are in the third decimal.
+    Chunked Neumaier summation (pairwise inside `_SUM_CHUNK`-sized chunks,
+    a compensated carry across them) keeps the error near 1 ulp of the
+    true sum without needing the x64 mode this repo leaves off.
+    """
+    x = jnp.moveaxis(jnp.asarray(x, jnp.float32), axis, -1)
+    n = x.shape[-1]
+    pad = (-n) % _SUM_CHUNK
+    if pad:
+        x = jnp.concatenate(
+            [x, jnp.zeros(x.shape[:-1] + (pad,), x.dtype)], axis=-1)
+    chunks = jnp.moveaxis(
+        x.reshape(x.shape[:-1] + (-1, _SUM_CHUNK)), -2, 0)
+
+    def body(carry, c):
+        s, comp = carry
+        y = jnp.sum(c, axis=-1)
+        t = s + y
+        comp = comp + jnp.where(jnp.abs(s) >= jnp.abs(y),
+                                (s - t) + y, (y - t) + s)
+        return (t, comp), None
+
+    zero = jnp.zeros(x.shape[:-1], x.dtype)
+    (s, comp), _ = jax.lax.scan(body, (zero, zero), chunks)
+    return s + comp
 
 
 def jain(rates: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
-    """Jain fairness index along `axis` (1.0 = perfectly fair)."""
-    s = jnp.sum(rates, axis=axis)
-    s2 = jnp.sum(rates * rates, axis=axis)
+    """Jain fairness index along `axis` (1.0 = perfectly fair).
+
+    Both reductions (sum of rates, sum of squares) run through the
+    compensated `fleet_sum` so the index stays meaningful at 100k+ flows.
+    """
+    s = fleet_sum(rates, axis=axis)
+    s2 = fleet_sum(rates * rates, axis=axis)
     n = rates.shape[axis]
     return s * s / jnp.maximum(n * s2, 1e-12)
 
@@ -77,11 +114,13 @@ def run_grid(scenarios: Sequence[tuple], *, scheme: str = "uno",
     nets, params, inters, lb, churn = stack_scenarios(scenarios)
     n_links = nets.cap.shape[1]
     n_paths = nets.routes.shape[2] if nets.routes.ndim == 4 else 1
-    state0 = [init_state(p, n_links, n_paths=n_paths,
-                         split0=fl.uniform_split(net), seed=seed + i)
-              for i, (net, p, *_rest)
-              in enumerate(_norm_scenario(s) for s in scenarios)]
-    state0 = jax.tree.map(lambda *xs: jnp.stack(xs), *state0)
+    # vmap the initial-state construction over the stacked grid instead of
+    # a per-scenario Python loop + re-stack (one traced init, no host loop)
+    seeds = seed + jnp.arange(len(scenarios), dtype=jnp.int32)
+    state0 = jax.vmap(
+        lambda p, s0, sd: init_state(p, n_links, n_paths=n_paths,
+                                     split0=s0, seed=sd)
+    )(params, jax.vmap(fl.uniform_split)(nets), seeds)
 
     def one(net, p, s0, ii, lb_i, churn_i):
         return steady_state_core(net, p, s0, ii, scheme, n_warm, n_meas,
@@ -133,7 +172,7 @@ def fairness_sweep(rtt_ratios: Sequence[float],
         "jain": jain(rates).reshape(shape),
         "class_ratio": (mean_inter / jnp.maximum(mean_intra, 1e-9))
         .reshape(shape),
-        "util": (rates.sum(axis=1) / rate).reshape(shape),
+        "util": (fleet_sum(rates, axis=1) / rate).reshape(shape),
     }
 
 
@@ -151,27 +190,29 @@ def load_mix_sweep(inter_counts: Sequence[int],
     bottleneck of capacity rate / load.
     """
     scen, shape = [], (len(inter_counts), len(loads))
+    # ONE base dumbbell (fixed link layout: n_total uplinks + wan +
+    # bottleneck, so all grid cells stack); each cell then varies only the
+    # per-cell arrays — routes + flow profile once per mix m (the m inter
+    # flows repoint hop 0 at the WAN pipe, recompiling the RouteLayout),
+    # cap/drain once per load level — instead of rebuilding and recompiling
+    # the whole scenario spec per cell.
+    base, bdp0, rtt0 = fl.dumbbell(n_total, 0, rate=rate,
+                                   intra_rtt=intra_rtt, inter_rtt=inter_rtt)
+    wan, down = n_total, base.cap.shape[0] - 1
     for m in inter_counts:
         if not 0 <= m <= n_total:
             raise ValueError(f"inter count {m} not in [0, {n_total}]")
+        ii = jnp.arange(n_total) >= (n_total - m)
+        routes = jnp.where(ii[:, None, None] & (jnp.arange(2) == 0),
+                           wan, base.routes).astype(jnp.int32)
+        net_m = fl.with_layout(base._replace(routes=routes))
+        p = make_params(jnp.where(ii, rate * inter_rtt, bdp0),
+                        jnp.where(ii, inter_rtt, rtt0),
+                        rate * intra_rtt, intra_rtt)
         for load in loads:
-            # fixed link layout (n_total uplinks + wan + bottleneck) so all
-            # grid cells stack; the m inter flows repoint hop 0 at the WAN
-            # pipe and take the inter-DC BDP/RTT profile.
-            net, bdp, rtt = fl.dumbbell(n_total, 0, rate=rate,
-                                        intra_rtt=intra_rtt,
-                                        inter_rtt=inter_rtt)
-            ii = jnp.arange(n_total) >= (n_total - m)
-            wan, down = n_total, net.cap.shape[0] - 1
-            net = net._replace(
-                routes=jnp.where(
-                    ii[:, None, None] & (jnp.arange(2) == 0),
-                    wan, net.routes).astype(jnp.int32),
-                cap=net.cap.at[down].mul(1.0 / load),
-                drain=net.drain.at[down].mul(1.0 / load))
-            bdp = jnp.where(ii, rate * inter_rtt, bdp)
-            rtt = jnp.where(ii, inter_rtt, rtt)
-            p = make_params(bdp, rtt, rate * intra_rtt, intra_rtt)
+            net = net_m._replace(
+                cap=net_m.cap.at[down].mul(1.0 / load),
+                drain=net_m.drain.at[down].mul(1.0 / load))
             scen.append((net, p, ii))
     _, rates = run_grid(scen, scheme=scheme, n_warm=n_warm, n_meas=n_meas)
     return {
@@ -179,7 +220,7 @@ def load_mix_sweep(inter_counts: Sequence[int],
         "loads": jnp.asarray(loads),
         "rates": rates.reshape(shape + (n_total,)),
         "jain": jain(rates).reshape(shape),
-        "util": (rates.sum(axis=1) / rate).reshape(shape),
+        "util": (fleet_sum(rates, axis=1) / rate).reshape(shape),
     }
 
 
@@ -224,7 +265,7 @@ def churn_sweep(duty_fracs: Sequence[float],
         "mean_on_rtts": jnp.asarray(mean_on_rtts),
         "rates": rates.reshape(shape + (n_flows,)),
         "jain": jain(rates).reshape(shape),
-        "util": (rates.sum(axis=1) / rate).reshape(shape),
+        "util": (fleet_sum(rates, axis=1) / rate).reshape(shape),
         "expected_on": jnp.full(
             shape, n_flows) * jnp.asarray(duty_fracs)[:, None],
     }

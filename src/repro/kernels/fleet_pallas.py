@@ -1,0 +1,147 @@
+"""Pallas kernels for the fleetsim flow<->link exchange.
+
+Two blocked kernels over the (n_flows, n_paths, max_hops) route tensor, the
+per-epoch hot path of repro.fleetsim at million-flow scale:
+
+  * `link_scatter`  — flow -> link: accumulate every subflow's wire rate
+    onto each hop of its path, producing the (n_links + 1,) offered-load
+    buffer (the pad slot absorbs -1 hops).
+  * `link_gathers`  — link -> flow, fused: ONE pass over the route tensor
+    yields all three per-subflow reductions (min over hops of the link
+    scale, mark composition 1 - prod(1 - p), and the queue-delay sum) that
+    the reference path (`repro.kernels.ref.fleet_link_gathers_ref`, the
+    jnp oracle) computes with three separate gathers.
+
+The TPU VPU has no per-lane gather/scatter, so both kernels express the
+sparse access as a one-hot matmul against the link axis: a (block_entries,
+n_links + 1) indicator contracted with per-link values on the MXU.  That
+keeps the kernels Mosaic-lowerable, but makes them O(entries * n_links) —
+right for fat-tree-scale link counts (<= a few thousand links resident in
+VMEM), wrong for the degenerate one-uplink-per-flow topologies where
+n_links ~ n_flows; the CSR layout path in repro.fleetsim.links is the CPU
+default and covers that regime.  `interpret=True` (the default; this
+container is CPU-only) runs the same kernel bodies through the Pallas
+interpreter, and tests/test_fleet_scale.py pins both kernels to the
+reference within 1e-6.
+
+Grid: one step per `block`-flow slice (wrappers pad n_flows up and strip
+the padding; pad flows point every hop at the scratch slot with zero rate).
+The scatter accumulates into one revisited (n_links + 1,) output block
+across the sequential grid, the Pallas analogue of the `.at[].add` ravel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_FLOWS = 512
+
+
+def _onehot_vals(idx, packed, n_cols):
+    """(E,) int32 entry links x (L + 1, k) per-link values -> (E, k)."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, (idx.shape[0], n_cols), 1)
+    onehot = (idx[:, None] == iota).astype(packed.dtype)
+    return jax.lax.dot_general(
+        onehot, packed, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def _scatter_kernel(idx_ref, val_ref, o_ref, *, n_links):
+    b, p, h = idx_ref.shape
+    idx = idx_ref[...].reshape(b * p * h)
+    val = jnp.broadcast_to(val_ref[...][:, :, None], (b, p, h))
+    val = val.reshape(1, b * p * h)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (b * p * h, n_links + 1), 1)
+    onehot = (idx[:, None] == iota).astype(val.dtype)
+    partial = jax.lax.dot_general(
+        val, onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[0]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += partial
+
+
+def _gathers_kernel(idx_ref, packed_ref, scale_ref, frac_ref, delay_ref):
+    b, p, h = idx_ref.shape
+    idx = idx_ref[...].reshape(b * p * h)
+    vals = _onehot_vals(idx, packed_ref[...], packed_ref.shape[0])
+    vals = vals.reshape(b, p, h, 3)
+    scale_ref[...] = jnp.min(vals[..., 0], axis=2)
+    frac_ref[...] = 1.0 - jnp.prod(vals[..., 1], axis=2)
+    delay_ref[...] = jnp.sum(vals[..., 2], axis=2)
+
+
+def _pad_flows(pad_idx, n_links, block):
+    n = pad_idx.shape[0]
+    pad = (-n) % block
+    if pad:
+        fill = jnp.full((pad,) + pad_idx.shape[1:], n_links, jnp.int32)
+        pad_idx = jnp.concatenate([pad_idx, fill])
+    return pad_idx, pad
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_links", "block", "interpret"))
+def link_scatter(pad_idx, sub_vals, n_links: int,
+                 block: int = BLOCK_FLOWS, interpret: bool = True):
+    """Offered-load buffer from per-subflow rates.
+
+    pad_idx: (n_flows, n_paths, max_hops) int32 in [0, n_links] (-1 hops
+    already redirected to the n_links scratch slot); sub_vals: (n_flows,
+    n_paths) f32 wire rates.  Returns (n_links + 1,) f32.
+    """
+    pad_idx, pad = _pad_flows(pad_idx, n_links, block)
+    if pad:
+        sub_vals = jnp.concatenate(
+            [sub_vals, jnp.zeros((pad, sub_vals.shape[1]), sub_vals.dtype)])
+    n, p, h = pad_idx.shape
+    return pl.pallas_call(
+        functools.partial(_scatter_kernel, n_links=n_links),
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block, p, h), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((block, p), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((n_links + 1,), lambda i: (0,)),
+        out_shape=jax.ShapeDtypeStruct((n_links + 1,), jnp.float32),
+        interpret=interpret,
+    )(pad_idx, sub_vals.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def link_gathers(pad_idx, scale, clean, delay,
+                 block: int = BLOCK_FLOWS, interpret: bool = True):
+    """Fused link -> flow pass: all three per-subflow reductions at once.
+
+    pad_idx: (n_flows, n_paths, max_hops) int32 in [0, n_links]; scale /
+    clean / delay: (n_links,) f32 per-link values (goodput scale cap/load,
+    1 - mark probability, queue delay q/cap).  Returns (sub_scale,
+    sub_frac, sub_delay), each (n_flows, n_paths) f32 — identical contract
+    to ref.fleet_link_gathers_ref.
+    """
+    n_links = scale.shape[0]
+    packed = jnp.stack([
+        jnp.concatenate([scale, jnp.ones(1, scale.dtype)]),
+        jnp.concatenate([clean, jnp.ones(1, clean.dtype)]),
+        jnp.concatenate([delay, jnp.zeros(1, delay.dtype)]),
+    ], axis=1).astype(jnp.float32)                # (n_links + 1, 3)
+    pad_idx, pad = _pad_flows(pad_idx, n_links, block)
+    n, p, h = pad_idx.shape
+    out = pl.pallas_call(
+        _gathers_kernel,
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block, p, h), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((n_links + 1, 3), lambda i: (0, 0))],
+        out_specs=[pl.BlockSpec((block, p), lambda i: (i, 0)),
+                   pl.BlockSpec((block, p), lambda i: (i, 0)),
+                   pl.BlockSpec((block, p), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, p), jnp.float32)] * 3,
+        interpret=interpret,
+    )(pad_idx, packed)
+    if pad:
+        out = tuple(o[:n - pad] for o in out)
+    return tuple(out)

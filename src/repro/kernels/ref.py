@@ -73,3 +73,38 @@ def dequant_int8_ref(q, scale, block: int = 256, dtype=jnp.float32):
     qb = q.astype(jnp.float32).reshape(shape[:-1] + (shape[-1] // block, block))
     out = qb * scale[..., None]
     return out.reshape(shape).astype(dtype)
+
+
+# ------------------------------------------------- fleetsim flow<->link ops
+
+def fleet_offered_load_ref(routes, rates, split, n_links: int):
+    """The original ravel'd `.at[].add` link aggregation.
+
+    routes: (n_flows, n_paths, max_hops) int32 with -1 padding; rates:
+    (n_flows,); split: (n_flows, n_paths).  Returns the (n_links + 1,)
+    offered-load buffer (pad slot last) — the oracle the segment/CSR/Pallas
+    fast paths must match.
+    """
+    pad_idx = jnp.where(routes >= 0, routes, n_links)
+    hop_mask = (routes >= 0).astype(rates.dtype)
+    per_hop = (rates[:, None] * split)[:, :, None] * hop_mask
+    buf = jnp.zeros(n_links + 1, rates.dtype)
+    return buf.at[pad_idx.ravel()].add(per_hop.ravel())
+
+
+def fleet_link_gathers_ref(routes, scale, clean, delay):
+    """Three separate link -> flow gathers (the fused-kernel oracle).
+
+    scale / clean / delay: (n_links,) per-link values.  Returns
+    (sub_scale, sub_frac, sub_delay), each (n_flows, n_paths): min over
+    hops of scale, 1 - prod over hops of clean, sum over hops of delay,
+    with -1 hops contributing the identity (1 / 1 / 0).
+    """
+    n_links = scale.shape[0]
+    pad_idx = jnp.where(routes >= 0, routes, n_links)
+    scale_ext = jnp.concatenate([scale, jnp.ones(1, scale.dtype)])
+    clean_ext = jnp.concatenate([clean, jnp.ones(1, clean.dtype)])
+    delay_ext = jnp.concatenate([delay, jnp.zeros(1, delay.dtype)])
+    return (jnp.min(scale_ext[pad_idx], axis=2),
+            1.0 - jnp.prod(clean_ext[pad_idx], axis=2),
+            jnp.sum(delay_ext[pad_idx], axis=2))

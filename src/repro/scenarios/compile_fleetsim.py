@@ -15,8 +15,9 @@ from __future__ import annotations
 from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
+import numpy as np
 
-from repro.fleetsim.links import FluidNet
+from repro.fleetsim.links import FluidNet, with_layout
 from repro.fleetsim.state import (ChurnParams, FleetParams, LbParams,
                                   make_params)
 from repro.scenarios.spec import Scenario
@@ -67,11 +68,14 @@ def fleet_arrays(spec: Scenario):
                  for _, g, k in spec.flow_groups()]
     n_paths = max(len(ps) for ps in path_sets)
     max_hops = max(len(p) for ps in path_sets for p in ps)
-    routes = -jnp.ones((spec.n_flows, n_paths, max_hops), jnp.int32)
+    # build on host with numpy, ONE device transfer at the end — a per-flow
+    # `.at[i].set` loop copies the whole tensor each iteration (quadratic;
+    # it froze million-flow scenario builds)
+    routes_np = np.full((spec.n_flows, n_paths, max_hops), -1, np.int32)
     for i, ps in enumerate(path_sets):
         for p, hops in enumerate(ps):
-            routes = routes.at[i, p, :len(hops)].set(
-                jnp.asarray(hops, jnp.int32))
+            routes_np[i, p, :len(hops)] = hops
+    routes = jnp.asarray(routes_np)
 
     rtt = jnp.asarray(
         [g.rtt if g.rtt is not None
@@ -84,7 +88,11 @@ def fleet_arrays(spec: Scenario):
                    drain=drain, vcap=vcap, use_phantom=use_phantom,
                    routes=routes,
                    dt=jnp.float32(spec.epoch_period_frac * spec.intra_rtt))
-    return net, bdp, rtt, is_inter
+    # compile the RouteLayout once per scenario, here, so every consumer
+    # (steady_state, sweeps.run_grid stacking, validate) steps on the
+    # precomputed indices + sorted CSR view instead of re-deriving them
+    # each epoch.  trim=False: layouts must stack across sweep grids.
+    return with_layout(net), bdp, rtt, is_inter
 
 
 def to_fleetsim(spec: Scenario, **make_params_kw) -> FleetScenario:
