@@ -1,0 +1,98 @@
+"""Print per-config throughput deltas between BENCH_fleetsim.json entries.
+
+The benchmark file is a trajectory (one appended entry per
+`fleetsim_sweep --scaling` run, keyed by git SHA + date).  This tool joins
+the last two entries on (n_flows, variant, path) and prints flow-epochs/s
+old -> new with the ratio, flagging regressions; points skipped or missing
+on either side are listed as such.  `--all` prints the whole trajectory of
+one metric per config instead.  Exit code is always 0 — this is a report,
+not a gate (the CI gates are the smoke step's wall-clock timeout and the
+boundary-payload guard inside fleetsim_sweep).
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks.fleetsim_sweep import BENCH_PATH, load_history
+
+
+def _key(p: dict) -> tuple:
+    return (p["n_flows"], p.get("variant", "single"), p["path"])
+
+
+def _fmt(v: float) -> str:
+    return f"{v / 1e6:8.2f}M"
+
+
+def _points(entry: dict) -> dict:
+    return {_key(p): p for p in entry.get("points", [])}
+
+
+def compare_last_two(hist: list) -> None:
+    prev, cur = hist[-2], hist[-1]
+    pm, cm = prev.get("meta", {}), cur.get("meta", {})
+    print(f"comparing {pm.get('git_sha', '?')} ({pm.get('generated', '?')}, "
+          f"mode={pm.get('mode', '?')}) -> {cm.get('git_sha', '?')} "
+          f"({cm.get('generated', '?')}, mode={cm.get('mode', '?')})")
+    pp, cp = _points(prev), _points(cur)
+    for key in sorted(set(pp) | set(cp)):
+        n, variant, path = key
+        name = f"{variant}/{path}@{n:>9,}"
+        a, b = pp.get(key), cp.get(key)
+        if b is None:
+            print(f"  {name}: only in previous entry")
+            continue
+        if b.get("skipped"):
+            print(f"  {name}: skipped ({b.get('reason', '?')})")
+            continue
+        if a is None or a.get("skipped"):
+            print(f"  {name}: new  {_fmt(b['flow_epochs_per_s'])} fe/s")
+            continue
+        old, new = a["flow_epochs_per_s"], b["flow_epochs_per_s"]
+        ratio = new / max(old, 1)
+        flag = "  <-- regression" if ratio < 0.8 else ""
+        print(f"  {name}: {_fmt(old)} -> {_fmt(new)} fe/s "
+              f"({ratio:5.2f}x){flag}")
+    for e, label in ((prev, "prev"), (cur, "cur ")):
+        if "run_1m" in e:
+            r = e["run_1m"]
+            print(f"  {label} run_1m: {r['wall_s']}s, "
+                  f"{_fmt(r['flow_epochs_per_s'])} fe/s")
+
+
+def print_trajectory(hist: list) -> None:
+    keys = sorted({k for e in hist for k in _points(e)})
+    for key in keys:
+        n, variant, path = key
+        print(f"{variant}/{path}@{n:,}:")
+        for e in hist:
+            p = _points(e).get(key)
+            sha = e.get("meta", {}).get("git_sha", "?")
+            if p is None:
+                continue
+            val = ("skipped: " + p.get("reason", "?") if p.get("skipped")
+                   else _fmt(p["flow_epochs_per_s"]) + " fe/s")
+            print(f"  {sha:>8} {e.get('meta', {}).get('generated', '?')} "
+                  f" {val}")
+
+
+def main(argv) -> int:
+    hist = load_history()
+    if not hist:
+        print(f"no benchmark history at {BENCH_PATH}")
+        return 0
+    if "--all" in argv:
+        print_trajectory(hist)
+        return 0
+    if len(hist) < 2:
+        sha = hist[0].get("meta", {}).get("git_sha", "?")
+        print(f"only one entry ({sha}) in {BENCH_PATH}; nothing to "
+              "compare — run benchmarks.fleetsim_sweep --scaling to grow "
+              "the trajectory")
+        return 0
+    compare_last_two(hist)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

@@ -11,10 +11,21 @@ Acceptance targets:
     RouteLayout path, the original `.at[].add` scatter path, and the
     shard_map'd flow axis (subprocess with
     --xla_force_host_platform_device_count; the device count must be fixed
-    before jax initializes).  Results land in BENCH_fleetsim.json at the
-    repo root — the start of the perf trajectory — including the
-    layout-vs-scatter speedup per config and a completed 1M-flow x
-    1k-epoch run.
+    before jax initializes).
+  * ISSUE 4: the sharded flow axis runs under the locality ShardPlan
+    ("sharded2-local": private links reduced on-shard, only the boundary
+    tail psummed) next to the PR-3 full-buffer exchange ("sharded2");
+    each locality point records its boundary payload and the run FAILS if
+    the psum payload is not >= 10x smaller than the full link buffer on
+    the standard dumbbell (the CI smoke guard).  Sharded points below
+    MIN_SHARD_FLOWS flows per shard are skipped AND recorded as skipped —
+    collective overhead dominates there and used to pollute the curve.
+    Compiled scenarios are cached across backend variants (and shipped to
+    the sharded subprocess as an .npz) so the curve builds each route
+    tensor once.  BENCH_fleetsim.json is a TRAJECTORY now: each run
+    appends an entry keyed by git SHA + date (the PR-3 single-run file is
+    absorbed as the first entry) and `benchmarks/compare.py` prints
+    deltas vs the previous entry.
 
 Reports: jitted single-scenario rate (compile time separated out), the same
 1k-flow scenario's steady utilization/fairness as a sanity check, the
@@ -30,6 +41,7 @@ import os
 import pathlib
 import subprocess
 import sys
+import tempfile
 import time
 
 import jax
@@ -147,16 +159,53 @@ def run(quick: bool = True) -> dict:
 
 # --------------------------------------------- million-flow scaling curve
 
+# sharded points need at least this many flows per shard to clear the
+# collective/dispatch overhead; below it the point is recorded as skipped
+MIN_SHARD_FLOWS = 5_000
+
+# compiled scenarios are expensive at 1M flows (route tensor + layout);
+# build each (n_flows, multipath) once and reuse across backend variants
+_SCENARIO_CACHE: dict = {}
+
+
 def _scenario(n_flows: int, multipath: bool):
+    key = (n_flows, multipath)
+    if key in _SCENARIO_CACHE:
+        return _SCENARIO_CACHE[key]
     if multipath:
         fs = to_fleetsim(dumbbell_scenario(
             n_flows // 2, n_flows - n_flows // 2, multipath=True, n_wan=4,
             n_bottleneck=max(1, n_flows // 64)))
-        return fs.net, fs.params, fs.is_inter, fs.lb
-    net, bdp, rtt = dumbbell(n_flows // 2, n_flows - n_flows // 2,
-                             n_bottleneck=max(1, n_flows // 64))
-    params = make_params(bdp, rtt, RATE_100G * 14 * US, 14 * US)
-    return net, params, None, None
+        out = fs.net, fs.params, fs.is_inter, fs.lb
+    else:
+        net, bdp, rtt = dumbbell(n_flows // 2, n_flows - n_flows // 2,
+                                 n_bottleneck=max(1, n_flows // 64))
+        params = make_params(bdp, rtt, RATE_100G * 14 * US, 14 * US)
+        out = net, params, None, None
+    _SCENARIO_CACHE[key] = out
+    return out
+
+
+_DUMP_DIR: list = []          # one private temp dir per benchmark process
+
+
+def _dump_scenario(n_flows: int) -> pathlib.Path:
+    """Write the (single-path) compiled scenario to an .npz the sharded
+    subprocess can load — it must not rebuild the same route tensor the
+    parent already compiled (at 1M flows that is most of the wall time).
+    Files live in a per-process mkdtemp dir: a fixed shared path would
+    race with concurrent runs on the same host."""
+    net, params, _, _ = _scenario(n_flows, False)
+    if not _DUMP_DIR:
+        _DUMP_DIR.append(pathlib.Path(
+            tempfile.mkdtemp(prefix="fleetsim_bench_")))
+    path = _DUMP_DIR[0] / f"scn_{n_flows}.npz"
+    arrays = {f"net_{f}": np.asarray(getattr(net, f))
+              for f in net._fields if f != "layout"}
+    arrays.update({f"par_{f}": np.asarray(getattr(params, f))
+                   for f in params._fields})
+    np.savez(path, **arrays)
+    return path
 
 
 def _time_simulate(net, params, n_epochs, *, is_inter=None, lb=None,
@@ -187,31 +236,38 @@ def _point(n_flows, n_epochs, *, variant, path, warm_s, cold_s=None):
     return rec
 
 
-def _sharded_point(n_flows: int, n_epochs: int, n_devices: int = 2):
+def _sharded_point(n_flows: int, n_epochs: int, n_devices: int = 2,
+                   locality: bool = True) -> dict:
     """Time the shard_map'd flow axis in a subprocess (the forced host
-    device count must be set before jax initializes)."""
+    device count must be set before jax initializes).  Returns warm_s
+    plus the plan's boundary stats.  The compiled scenario is loaded
+    from the parent's .npz cache, not rebuilt."""
+    scn = _dump_scenario(n_flows)
     code = f"""
 import os
 os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count={n_devices} "
     + os.environ.get("XLA_FLAGS", ""))
-import json, time, jax
-from repro.fleetsim import dumbbell, make_params
-from repro.fleetsim.shard import steady_state_sharded
-from repro.fleetsim.links import RATE_100G, US
-n = {n_flows}
-net, bdp, rtt = dumbbell(n // 2, n - n // 2, n_bottleneck=max(1, n // 64))
-p = make_params(bdp, rtt, RATE_100G * 14 * US, 14 * US)
+import json, time, jax, numpy as np
+from repro.fleetsim.links import FluidNet
+from repro.fleetsim.state import FleetParams
+from repro.fleetsim.shard import shard_scenario, steady_state_prepared
+z = np.load({str(scn)!r})
+net = FluidNet(**{{f: z["net_" + f]
+                   for f in FluidNet._fields if f != "layout"}})
+p = FleetParams(**{{f: z["par_" + f] for f in FleetParams._fields}})
+sf = shard_scenario(net, p, locality={locality})
 kw = dict(n_warm={n_epochs} - 10, n_meas=10)
-_, r = steady_state_sharded(net, p, **kw)
+_, r = steady_state_prepared(sf, **kw)
 jax.block_until_ready(r)
 best = float("inf")
 for _ in range(2):
     t0 = time.time()
-    _, r = steady_state_sharded(net, p, **kw)
+    _, r = steady_state_prepared(sf, **kw)
     jax.block_until_ready(r)
     best = min(best, time.time() - t0)
-print(json.dumps({{"warm_s": best}}))
+print(json.dumps({{"warm_s": best, "n_links": int(sf.plan.n_links),
+                   "n_boundary": int(sf.plan.n_boundary)}}))
 """
     env = dict(os.environ)
     src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
@@ -220,7 +276,7 @@ print(json.dumps({{"warm_s": best}}))
                          text=True, timeout=1800, env=env)
     if out.returncode != 0:
         raise RuntimeError(out.stderr[-2000:])
-    return json.loads(out.stdout.strip().splitlines()[-1])["warm_s"]
+    return json.loads(out.stdout.strip().splitlines()[-1])
 
 
 # layout-path epoch counts per size (reference runs use ~1/4 of these so
@@ -228,8 +284,97 @@ print(json.dumps({{"warm_s": best}}))
 _CURVE_EPOCHS = {1_000: 20_000, 10_000: 2_000, 100_000: 200, 1_000_000: 40}
 
 
+def _git_sha() -> str:
+    """Short HEAD sha, suffixed "-dirty" when the tree has uncommitted
+    changes — a trajectory entry must say which code produced it."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, cwd=BENCH_PATH.parent, timeout=10)
+        sha = out.stdout.strip() or "unknown"
+        st = subprocess.run(
+            ["git", "status", "--porcelain"], capture_output=True,
+            text=True, cwd=BENCH_PATH.parent, timeout=10)
+        return sha + "-dirty" if st.stdout.strip() else sha
+    except OSError:
+        return "unknown"
+
+
+def load_history() -> list:
+    """BENCH_fleetsim.json as a list of run entries, oldest first.  The
+    PR-3 file was one bare run dict; it becomes the first entry."""
+    if not BENCH_PATH.exists():
+        return []
+    data = json.loads(BENCH_PATH.read_text())
+    return data["history"] if "history" in data else [data]
+
+
+def _append_history(entry: dict) -> None:
+    hist = load_history()
+    hist.append(entry)
+    BENCH_PATH.write_text(json.dumps(
+        {"schema": "trajectory-v1", "history": hist}, indent=1))
+
+
+def _sharded_points(n: int, ne: int, mode: str, points: list,
+                    speedups: dict) -> None:
+    """Both sharded variants at one size: locality halo exchange vs the
+    PR-3 full-buffer psum.  Too-small points are recorded as skipped (not
+    silently omitted) — below MIN_SHARD_FLOWS per shard the collective
+    overhead dominates and the curve stops measuring aggregation.  In
+    smoke mode a FAILED locality point is fatal: CI's payload guard must
+    not pass vacuously because the subprocess crashed."""
+    n_devices = 2
+    sh_ne = min(ne, 300)
+    per_shard = n // n_devices
+    rates = {}
+    for path_name, locality in (("sharded2-local", True),
+                                ("sharded2", False)):
+        if per_shard < MIN_SHARD_FLOWS:
+            rec = {"n_flows": n, "n_epochs": sh_ne, "variant": "single",
+                   "path": path_name, "skipped": True,
+                   "reason": f"flows_per_shard {per_shard} < "
+                             f"{MIN_SHARD_FLOWS}"}
+            points.append(rec)
+            print("  ", json.dumps(rec))
+            continue
+        try:
+            res = _sharded_point(n, sh_ne, n_devices, locality=locality)
+        except (RuntimeError, subprocess.TimeoutExpired, OSError,
+                json.JSONDecodeError, KeyError, IndexError) as e:
+            if mode == "smoke" and locality:
+                raise SystemExit(
+                    f"locality-sharded smoke point failed at n={n}: "
+                    + str(e)[:500])
+            # outside smoke, keep the rest of the curve (and still write
+            # the JSON) if the sharded subprocess hangs, dies, or prints
+            # garbage
+            print(f"  {path_name} point failed:", str(e)[:200])
+            continue
+        rec = _point(n, sh_ne, variant="single", path=path_name,
+                     warm_s=res["warm_s"])
+        rates[path_name] = rec["flow_epochs_per_s"]
+        if locality:
+            full_payload = res["n_links"] + 1
+            shrink = full_payload / max(res["n_boundary"], 1)
+            rec["n_links"] = res["n_links"]
+            rec["n_boundary"] = res["n_boundary"]
+            rec["psum_payload_shrink"] = round(shrink, 1)
+            if shrink < 10.0:
+                raise SystemExit(
+                    f"boundary psum payload guard failed at n={n}: "
+                    f"{res['n_boundary']} boundary links vs "
+                    f"{full_payload} full buffer (shrink {shrink:.1f}x "
+                    "< 10x)")
+        points.append(rec)
+    if len(rates) == 2:
+        speedups[f"sharded_locality_vs_full:{n}"] = round(
+            rates["sharded2-local"] / rates["sharded2"], 2)
+
+
 def scaling_curve(mode: str = "full") -> dict:
-    """Grow the n_flows scaling curve and write BENCH_fleetsim.json.
+    """Grow the n_flows scaling curve and append it to the
+    BENCH_fleetsim.json trajectory.
 
     mode: "smoke" (CI: 10k flows only, short scan), "quick" (up to 100k),
     "full" (up to 1M + the completed 1M-flow x 1k-epoch run).
@@ -260,21 +405,13 @@ def scaling_curve(mode: str = "full") -> dict:
             speedups[f"{variant}:{n}"] = round(
                 (n * ne / warm) / (n * ref_ne / ref_warm), 2)
         # sharded flow axis (2 CPU shards; single-path scenario)
-        try:
-            sh_ne = min(ne, 200)
-            sh_warm = _sharded_point(n, sh_ne)
-            points.append(_point(n, sh_ne, variant="single",
-                                 path="sharded2", warm_s=sh_warm))
-        except (RuntimeError, subprocess.TimeoutExpired, OSError,
-                json.JSONDecodeError, KeyError, IndexError) as e:
-            # keep the rest of the curve (and still write the JSON) even
-            # if the sharded subprocess hangs, dies, or prints garbage
-            print("  sharded point failed:", str(e)[:200])
+        _sharded_points(n, ne, mode, points, speedups)
 
-    out = {
+    entry = {
         "meta": {
             "generated": datetime.datetime.now(
                 datetime.timezone.utc).isoformat(timespec="seconds"),
+            "git_sha": _git_sha(),
             "mode": mode,
             "cpu_count": os.cpu_count(),
             "jax": jax.__version__,
@@ -294,16 +431,16 @@ def scaling_curve(mode: str = "full") -> dict:
         jax.block_until_ready(final.cwnd)
         wall = time.time() - t0
         rates = final.cwnd / params.rtt
-        out["run_1m"] = {
+        entry["run_1m"] = {
             "n_flows": n, "n_epochs": ne, "wall_s": round(wall, 1),
             "flow_epochs_per_s": round(n * ne / wall),
             "final_jain": round(float(jain(rates)), 4),
         }
-        print("  run_1m:", json.dumps(out["run_1m"]))
+        print("  run_1m:", json.dumps(entry["run_1m"]))
 
-    BENCH_PATH.write_text(json.dumps(out, indent=1))
-    print(f"wrote {BENCH_PATH}")
-    return out
+    _append_history(entry)
+    print(f"appended entry {entry['meta']['git_sha']} to {BENCH_PATH}")
+    return entry
 
 
 if __name__ == "__main__":

@@ -23,7 +23,9 @@ from repro.fleetsim.cc import (SCHEMES, make_step, simulate, steady_state,
 from repro.fleetsim.links import (LOAD_BACKENDS, FluidNet, RouteLayout,
                                   compute_layout, dumbbell, link_epoch,
                                   uniform_split, with_layout)
-from repro.fleetsim.shard import steady_state_sharded
+from repro.fleetsim.shard import (ShardedFleet, shard_scenario,
+                                  steady_state_prepared,
+                                  steady_state_sharded)
 from repro.fleetsim.state import (ChurnParams, FleetParams, FleetState,
                                   LbParams, init_state, make_churn_params,
                                   make_lb_params, make_params)
@@ -32,6 +34,7 @@ __all__ = [
     "SCHEMES", "make_step", "simulate", "steady_state", "update_split",
     "LOAD_BACKENDS", "FluidNet", "RouteLayout", "compute_layout",
     "dumbbell", "link_epoch", "uniform_split", "with_layout",
+    "ShardedFleet", "shard_scenario", "steady_state_prepared",
     "steady_state_sharded",
     "ChurnParams", "FleetParams", "FleetState", "LbParams",
     "init_state", "make_churn_params", "make_lb_params", "make_params",

@@ -105,18 +105,31 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
               is_inter: Optional[jnp.ndarray] = None,
               lb: Optional[LbParams] = None,
               churn: Optional[ChurnParams] = None, *,
-              axis_name: Optional[str] = None, backend: str = "auto"):
+              axis_name: Optional[str] = None, backend: str = "auto",
+              halo: Optional[int] = None,
+              churn_map: Optional[jnp.ndarray] = None,
+              churn_n: Optional[int] = None):
     """Build the per-epoch transition: state -> (state', goodput).
 
     `lb=None` freezes the split at its initial value (static spraying) and
     reports raw goodput; `churn=None` keeps every flow backlogged.
     `axis_name` names a shard_map mesh axis the flow dimension is sharded
-    over (per-epoch psum of the partial link loads — repro.fleetsim.shard);
+    over (per-epoch reduction of the partial link loads — repro.fleetsim
+    .shard); `halo` shrinks that reduction to the trailing boundary links
+    of a locality-relabeled link id space (links.halo_exchange);
     `backend` picks the link-aggregation implementation (repro.fleetsim
     .links.LOAD_BACKENDS).
+
+    `churn_map`/`churn_n` make churn exact under flow sharding: each shard
+    draws the SAME global (churn_n,) uniform vector (the PRNG key is
+    replicated) and gathers its local rows by their global flow ids, so a
+    sharded run flips exactly the flows the single-device run flips
+    regardless of how the plan permuted them.
     """
     if scheme not in SCHEMES:
         raise ValueError(f"unknown fleetsim scheme {scheme!r}")
+    if churn_map is not None and churn_n is None:
+        raise ValueError("churn_map needs churn_n (the global flow count)")
     if is_inter is None:
         is_inter = jnp.zeros_like(params.bdp, bool)
     pmask = L.path_mask(net)
@@ -137,7 +150,7 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
         rate = actf * state.cwnd / p.rtt
         split = state.split
         le = L.link_epoch(net, rate, split, state.q_phys, state.q_phantom,
-                          axis_name=axis_name, backend=backend)
+                          axis_name=axis_name, backend=backend, halo=halo)
         q_phys, q_phantom = le.q_phys, le.q_phantom
         sub_frac = le.sub_frac
         if single:   # split-weighted sums collapse to one product per flow
@@ -276,7 +289,10 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
         # ---- churn: freeze OFF flows, restart fresh on OFF->ON ----------
         if churn is not None:
             key, sub = jax.random.split(state.key)
-            u = jax.random.uniform(sub, p.bdp.shape)
+            if churn_map is not None:
+                u = jax.random.uniform(sub, (churn_n,))[churn_map]
+            else:
+                u = jax.random.uniform(sub, p.bdp.shape)
             p_off = jnp.clip(net.dt / jnp.maximum(churn.mean_on, 1.0),
                              0.0, 1.0)
             p_on = jnp.clip(net.dt / jnp.maximum(churn.mean_off, 1.0),
@@ -333,20 +349,28 @@ def simulate(net: L.FluidNet, params: FleetParams, *, n_epochs: int,
 
 @functools.partial(jax.jit,
                    static_argnames=("scheme", "n_warm", "n_meas", "backend",
-                                    "axis_name"))
+                                    "axis_name", "halo", "churn_n",
+                                    "unroll"))
 def steady_state_core(net, params, state0, is_inter, scheme, n_warm, n_meas,
-                      lb=None, churn=None, backend="auto", axis_name=None):
+                      lb=None, churn=None, backend="auto", axis_name=None,
+                      halo=None, churn_map=None, churn_n=None, unroll=1):
     """Warm up, then return (final_state, mean goodput over n_meas epochs).
 
     The measurement pass accumulates a running sum in the carry instead of
     materializing the (n_meas, n_flows) trajectory — this is the vmap-safe
     entry point sweeps fan out over (a stacked trajectory for a whole grid
-    would not fit memory).  `axis_name` is set by repro.fleetsim.shard when
-    the flow axis runs under shard_map."""
+    would not fit memory).  `axis_name`/`halo`/`churn_map`/`churn_n` are
+    set by repro.fleetsim.shard when the flow axis runs under shard_map
+    (see make_step).  `unroll` fuses that many epochs into one scan step:
+    the loop-carried state stays in registers/cache across the fused
+    epochs and the boundary collectives batch per step instead of paying
+    per-epoch dispatch — numerics are unchanged (same per-epoch op order,
+    just loop restructuring)."""
     step = make_step(net, params, scheme, is_inter, lb=lb, churn=churn,
-                     backend=backend, axis_name=axis_name)
+                     backend=backend, axis_name=axis_name, halo=halo,
+                     churn_map=churn_map, churn_n=churn_n)
     state, _ = jax.lax.scan(lambda s, x: (step(s, x)[0], None),
-                            state0, None, length=n_warm)
+                            state0, None, length=n_warm, unroll=unroll)
 
     def acc_step(carry, _):
         s, acc = carry
@@ -354,7 +378,8 @@ def steady_state_core(net, params, state0, is_inter, scheme, n_warm, n_meas,
         return (s, acc + goodput), None
 
     (state, acc), _ = jax.lax.scan(
-        acc_step, (state, jnp.zeros_like(params.bdp)), None, length=n_meas)
+        acc_step, (state, jnp.zeros_like(params.bdp)), None, length=n_meas,
+        unroll=unroll)
     return state, acc / n_meas
 
 

@@ -36,6 +36,11 @@ backends selected by `backend=`:
 
 `offered_load(..., axis_name=...)` psums the per-shard partial loads, which
 is all `repro.fleetsim.shard` needs to run the flow axis under `shard_map`.
+With `halo=B` the collective shrinks to the LAST `B` real links of the
+buffer: the locality shard plan (repro.scenarios.plan_shards) relabels link
+ids so every cross-shard ("boundary") link sits at the tail of the id
+space, making the halo exchange one contiguous-slice psum — shard-private
+links are reduced entirely locally by whatever backend is active.
 
 Multipath: each flow carries an (n_paths,) `split` weight vector (rows sum
 to 1 over valid paths) and its send rate is divided across its paths — the
@@ -320,10 +325,31 @@ def _resolve_backend(net: FluidNet, backend: str) -> str:
     return backend
 
 
+def halo_exchange(buf: jnp.ndarray, n_links: int, axis_name: str,
+                  halo: Optional[int]) -> jnp.ndarray:
+    """Cross-shard reduction of a partial (n_links + 1,) link buffer.
+
+    `halo=None` psums the whole buffer (every link potentially shared — the
+    PR-3 behavior).  `halo=B` psums only the LAST `B` real links: under a
+    locality shard plan (repro.scenarios.plan_shards) those are exactly the
+    boundary links touched by more than one shard, everything below them is
+    shard-private and already globally correct, and the scratch slot is
+    never read.  `halo=0` means no link is shared — no collective at all.
+    """
+    if halo is None:
+        return jax.lax.psum(buf, axis_name)
+    if halo == 0:
+        return buf
+    lo = n_links - halo
+    shared = jax.lax.psum(jax.lax.slice_in_dim(buf, lo, n_links), axis_name)
+    return jnp.concatenate([buf[:lo], shared, buf[n_links:]])
+
+
 def offered_load(net: FluidNet, rates: jnp.ndarray,
                  split: Optional[jnp.ndarray] = None, *,
                  axis_name: Optional[str] = None,
-                 backend: str = "auto") -> jnp.ndarray:
+                 backend: str = "auto",
+                 halo: Optional[int] = None) -> jnp.ndarray:
     """(n_links,) aggregate arrival rate from per-flow send rates.
 
     With a split matrix, flow i contributes rates[i] * split[i, p] to every
@@ -331,8 +357,12 @@ def offered_load(net: FluidNet, rates: jnp.ndarray,
     the internal pad slot is backend-specific (the reference scatter masks
     -1 hops to zero, so only IT conserves total scatter mass across
     links + pad slot — the layout/Pallas paths park the subflow's rate
-    there).  `axis_name` psums the per-shard partial loads across a
-    sharded flow axis (repro.fleetsim.shard).  `backend` picks the
+    there).  `axis_name` reduces the per-shard partial loads across a
+    sharded flow axis (repro.fleetsim.shard): the full buffer when
+    `halo=None`, only the trailing `halo` boundary links otherwise (see
+    `halo_exchange`).  On a locality-sharded run the returned loads are
+    globally correct ONLY on this shard's own links plus the boundary
+    tail — exactly the links its flows can read.  `backend` picks the
     aggregation implementation (see module docstring); "auto" uses the
     blocked-CSR path whenever a layout is attached.
     """
@@ -340,8 +370,13 @@ def offered_load(net: FluidNet, rates: jnp.ndarray,
     backend = _resolve_backend(net, backend)
     if backend == "pallas":
         from repro.kernels import fleet_pallas
-        buf = fleet_pallas.link_scatter(
-            _pad_idx(net), rates[:, None] * split, net.n_links)
+        if halo is not None and 0 < halo < net.n_links:
+            priv, bnd = fleet_pallas.link_scatter_tiles(
+                _pad_idx(net), rates[:, None] * split, net.n_links, halo)
+            buf = jnp.concatenate([priv, bnd])
+        else:
+            buf = fleet_pallas.link_scatter(
+                _pad_idx(net), rates[:, None] * split, net.n_links)
     elif backend == "segment":
         buf = _offered_load_segment(net, rates, split)
     elif backend == "csr":
@@ -349,7 +384,7 @@ def offered_load(net: FluidNet, rates: jnp.ndarray,
     else:
         buf = _offered_load_reference(net, rates, split)
     if axis_name is not None:
-        buf = jax.lax.psum(buf, axis_name)
+        buf = halo_exchange(buf, net.n_links, axis_name, halo)
     return buf[:net.n_links]
 
 
@@ -423,16 +458,20 @@ def path_delay(net: FluidNet, q_phys: jnp.ndarray,
 def link_epoch(net: FluidNet, rates: jnp.ndarray, split: jnp.ndarray,
                q_phys: jnp.ndarray, q_phantom: jnp.ndarray, *,
                axis_name: Optional[str] = None,
-               backend: str = "auto") -> LinkEpoch:
+               backend: str = "auto",
+               halo: Optional[int] = None) -> LinkEpoch:
     """One epoch of link physics in one call: offered load -> queue step ->
     mark probabilities -> the three link->flow gathers.
 
     The gathers share one `pad_idx` read per call via the layout; with
     `backend="pallas"` they run as one fused kernel pass over the route
-    tensor (repro.kernels.fleet_pallas.link_gathers).
+    tensor (repro.kernels.fleet_pallas.link_gathers).  `halo` restricts
+    the sharded reduction to the trailing boundary links (see
+    `offered_load`); queue/mark state on links outside this shard's reach
+    is then stale, but no local flow reads it.
     """
     load = offered_load(net, rates, split, axis_name=axis_name,
-                        backend=backend)
+                        backend=backend, halo=halo)
     q_phys, q_phantom = step_queues(net, q_phys, q_phantom, load)
     p_link = mark_prob(net, q_phys, q_phantom)
     if _resolve_backend(net, backend) == "pallas":

@@ -1,42 +1,77 @@
-"""Sharded flow axis: run the fluid model with flows split across devices.
+"""Locality-sharded flow axis: private/boundary link split + halo exchange.
 
 The fleet step is embarrassingly parallel in the flow dimension except for
-one reduction: the per-link offered load.  `shard_map` gives each device a
-contiguous flow shard (state, params, routes — everything with a leading
-n_flows axis — split over the mesh axis "flows"; the (n_links,) link arrays
-and queue state replicated), each shard compiles its OWN RouteLayout over
-its local routes, and the only cross-device traffic is one `psum` of the
-partial link-load buffer per epoch (see `links.offered_load(axis_name=)`),
-after which every device steps the replicated queues identically.
+one reduction: the per-link offered load.  PR 3 sharded the flow axis with
+`shard_map` and psummed the ENTIRE (n_links + 1,) load buffer every epoch —
+correct, but on real topologies the flow->link incidence is overwhelmingly
+local (a dumbbell uplink is touched by exactly one flow, a downlink by the
+~64 flows hashed onto it), so almost every element of that collective was
+traffic one shard alone produced and one shard alone would read.  It also
+rebuilt the shard_map closure and re-jitted it on every call, so repeated
+runs paid multi-second retrace+recompile each time — the benchmark's
+"sharded is 100x slower" was mostly that.
 
-That makes 1M+ flows a data-layout question rather than a memory/compute
-wall: on GPU/TPU fleets each device carries n_flows / n_devices state rows,
-and on CPU the same code path is exercised with
-`XLA_FLAGS=--xla_force_host_platform_device_count=N` (how the tests and
-`benchmarks/fleetsim_sweep.py --scaling` run it; device count must be set
-before jax initializes, so the benchmark spawns a fresh interpreter).
+This module instead runs the flow axis under a compile-time `ShardPlan`
+(repro.scenarios.plan_shards):
 
-Flow counts that do not divide the device count are padded with *inert*
-flows: every hop is -1, so their split row is all-zero and they contribute
-exactly nothing to any link, mark, or goodput — results match the unpadded
-run on the real rows.  Churn is not supported here: its PRNG draws are
-(n_flows,)-shaped on one device, and a faithful sharded split of the same
-stream would tie the layout to the device count.  Sharded and single-device
-runs agree to float-sum tolerance (the psum changes the order link loads
-accumulate in), which tests/test_fleet_scale.py pins.
+  * flows are permuted into per-shard rows so each shard's flows touch a
+    CONTIGUOUS range of link ids that shard owns privately;
+  * link ids are relabeled so every boundary link — one touched by flows
+    of 2+ shards — sits at the TAIL of the id space;
+  * per-shard RouteLayouts are compiled over the permuted routes and
+    stacked, so each shard steps on its own CSR view.
+
+Per epoch each shard reduces its private links entirely locally with the
+normal `links` backends and exchanges only the trailing boundary slice
+(`links.halo_exchange`, one contiguous psum of `plan.n_boundary` values
+instead of `n_links + 1`).  On the standard 100k-flow dumbbell the
+boundary is 2 links (the WAN pipe + the one downlink straddling the shard
+cut) out of 51,563 — a ~25,000x smaller collective payload, boundary
+fraction 0.0039% (`benchmarks/fleetsim_sweep.py` records it per run).
+Queue state on links outside a shard's reach goes stale, but no local
+flow reads it; the final state's link arrays are reassembled from each
+link's owning shard before returning.
+
+`unroll=K` fuses K epochs per scan step (the boundary collectives and
+loop bookkeeping batch per step instead of paying per-epoch dispatch),
+the padded initial state is donated to the compiled executable, and
+compiled executables are cached per (mesh, scheme, epochs, backend,
+halo, ...) so repeated calls — sweeps, benchmark reps — reuse them.
+Measured on the 2-core dev container the fusion is neutral-to-negative
+(XLA CPU loop overhead is tiny and the boundary psum is already
+payload-free; compile time grows with K), so it defaults to 1 — it is
+the knob to raise where per-step launch/collective dispatch dominates
+(real device fleets).
+
+Flow counts that do not divide the shard count are padded per shard with
+*inert* flows (every hop -1: zero split, zero load, zero goodput).  Churn
+IS supported under sharding now: every shard draws the same global
+uniform vector from the replicated PRNG key and gathers its rows by
+ORIGINAL flow id (`cc.make_step(churn_map=...)`), so the sharded run
+flips exactly the flows the single-device run flips.  Sharded and
+single-device runs agree to float-sum tolerance (reduction order
+changes), which tests/test_fleet_scale.py pins across single-path,
+multipath, lb, and churn scenarios.
+
+On CPU the same code path is exercised with
+`XLA_FLAGS=--xla_force_host_platform_device_count=N` (device count must
+be set before jax initializes, so tests and the benchmark spawn a fresh
+interpreter).
 """
 from __future__ import annotations
 
-from typing import Optional
+import functools
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.fleetsim import links as L
 from repro.fleetsim.cc import steady_state_core
-from repro.fleetsim.state import (FleetParams, FleetState, LbParams,
-                                  init_state)
+from repro.fleetsim.state import (ChurnParams, FleetParams, FleetState,
+                                  LbParams, init_state)
 from repro.sharding import shard_map
 
 AXIS = "flows"
@@ -52,38 +87,118 @@ def flow_mesh(n_devices: Optional[int] = None):
     return jax.make_mesh((n,), (AXIS,))
 
 
-def _pad_flow_tree(tree, pad: int):
-    """Repeat each leaf's first row `pad` times at the tail (leading axis)."""
-    return jax.tree.map(
-        lambda a: jnp.concatenate(
-            [a, jnp.broadcast_to(a[:1], (pad,) + a.shape[1:])]), tree)
+def _contiguous_plan(n_real: int, n_links: int, n_shards: int):
+    """The PR-3 layout as a ShardPlan: contiguous flow blocks, no link
+    relabeling, every link boundary (full-buffer exchange)."""
+    from repro.scenarios.compile_fleetsim import ShardPlan
+    rows = -(-n_real // n_shards)
+    ids = np.arange(n_shards * rows, dtype=np.int32)
+    gather = np.where(ids < n_real, ids, n_real).reshape(n_shards, rows)
+    eye = np.arange(n_links, dtype=np.int32)
+    return ShardPlan(n_shards=n_shards, n_real=n_real, n_links=n_links,
+                     n_boundary=n_links, gather=gather, new2old=eye,
+                     old2new=eye,
+                     owner_ptr=np.zeros(n_shards + 1, np.int32))
 
 
-def pad_flows(net: L.FluidNet, params: FleetParams,
-              is_inter: Optional[jnp.ndarray] = None,
-              lb: Optional[LbParams] = None, *, multiple: int):
-    """Pad the flow axis up to a multiple of `multiple` with inert flows.
+class ShardedFleet(NamedTuple):
+    """A scenario compiled against one ShardPlan + mesh: flow axis
+    permuted into per-shard rows, link ids relabeled boundary-last,
+    per-shard RouteLayouts stacked along a leading shard axis.  Build
+    once with `shard_scenario`, reuse across runs/backends — everything
+    here is call-invariant."""
+    plan: object                  # ShardPlan (host-side, never traced)
+    mesh: object
+    net: L.FluidNet               # permuted links+routes, layout=None
+    layouts: L.RouteLayout        # stacked per-shard layouts (leading S axis)
+    params: FleetParams           # flow axis permuted + padded
+    is_inter: jnp.ndarray
+    lb: Optional[LbParams]
+    churn: Optional[ChurnParams]
+    churn_map: Optional[jnp.ndarray]  # (S, rows) original flow id per row
+    own: jnp.ndarray              # (S, n_links) link-ownership masks
 
-    Inert flows route every hop to -1: no valid path, all-zero split, zero
-    offered load and zero goodput — pure ballast that makes the shard shapes
-    even.  Returns (net, params, is_inter, lb, n_real).
+
+def _take_links(net: L.FluidNet, new2old: jnp.ndarray) -> L.FluidNet:
+    """Permute every (n_links,) field of the net into the relabeled order."""
+    return net._replace(
+        cap=net.cap[new2old], qcap=net.qcap[new2old],
+        ecn_lo=net.ecn_lo[new2old], ecn_hi=net.ecn_hi[new2old],
+        drain=net.drain[new2old], vcap=net.vcap[new2old],
+        use_phantom=net.use_phantom[new2old])
+
+
+def shard_scenario(net: L.FluidNet, params: FleetParams, *,
+                   is_inter: Optional[jnp.ndarray] = None,
+                   lb: Optional[LbParams] = None,
+                   churn: Optional[ChurnParams] = None,
+                   mesh=None, locality: bool = True,
+                   plan=None) -> ShardedFleet:
+    """Compile (net, params, ...) against a locality ShardPlan.
+
+    `locality=False` reproduces the PR-3 contiguous-block sharding (full
+    link buffer exchanged every epoch) — kept for A/B benchmarking.  An
+    explicit `plan` overrides both.
     """
-    n = params.bdp.shape[0]
-    pad = (-n) % multiple
-    if pad == 0:
-        return net, params, is_inter, lb, n
-    routes3 = net.routes if net.routes.ndim == 3 else net.routes[:, None, :]
-    fill = jnp.full((pad,) + routes3.shape[1:], -1, jnp.int32)
-    net = net._replace(routes=jnp.concatenate([routes3, fill]), layout=None)
-    params = _pad_flow_tree(params, pad)
-    if is_inter is not None:
-        is_inter = jnp.concatenate([is_inter, jnp.zeros(pad, bool)])
-    if lb is not None:
-        lb = _pad_flow_tree(lb, pad)
-    return net, params, is_inter, lb, n
+    from repro.scenarios.compile_fleetsim import plan_shards
+    mesh = mesh if mesh is not None else flow_mesh()
+    n_dev = mesh.devices.size
+    n_real = params.bdp.shape[0]
+    routes3 = np.asarray(net.routes if net.routes.ndim == 3
+                         else net.routes[:, None, :])
+    if plan is None:
+        plan = (plan_shards(routes3, net.n_links, n_dev) if locality
+                else _contiguous_plan(n_real, net.n_links, n_dev))
+    if plan.n_shards != n_dev or plan.n_real != n_real:
+        raise ValueError(
+            f"plan is for {plan.n_shards} shards x {plan.n_real} flows, "
+            f"mesh/params give {n_dev} x {n_real}")
+
+    gflat = plan.flat_gather
+    real = gflat < n_real
+    gc_np = np.where(real, gflat, 0)
+    gc = jnp.asarray(gc_np)
+    realj = jnp.asarray(real)
+
+    # routes: relabel link ids, permute flows, force inert padding rows
+    relabeled = np.where(routes3 >= 0,
+                         plan.old2new[np.clip(routes3, 0, None)], -1)
+    routes_p = np.where(real[:, None, None], relabeled[gc_np], -1)
+    routes_p = jnp.asarray(routes_p, jnp.int32)
+
+    net_p = _take_links(net, jnp.asarray(plan.new2old))._replace(
+        routes=routes_p, layout=None)
+    rows = plan.rows
+    lays = [L.compute_layout(routes_p[s * rows:(s + 1) * rows], net.n_links)
+            for s in range(plan.n_shards)]
+    layouts = jax.tree.map(lambda *xs: jnp.stack(xs), *lays)
+
+    params_p = jax.tree.map(lambda a: a[gc], params)
+    if is_inter is None:
+        is_inter = jnp.zeros(n_real, bool)
+    ii_p = is_inter[gc] & realj
+    lb_p = None if lb is None else jax.tree.map(lambda a: a[gc], lb)
+    churn_p = cmap = None
+    if churn is not None:
+        churn_p = ChurnParams(churned=churn.churned[gc] & realj,
+                              mean_on=churn.mean_on[gc],
+                              mean_off=churn.mean_off[gc])
+        cmap = gc.reshape(plan.n_shards, rows).astype(jnp.int32)
+
+    # link-ownership masks: shard s owns its private range; shard 0 also
+    # claims the boundary tail (identical on every shard after the halo
+    # exchange) and any untouched links (identically zero everywhere)
+    iota = np.arange(plan.n_links)
+    own = (iota >= plan.owner_ptr[:-1, None]) & \
+        (iota < plan.owner_ptr[1:, None])
+    own[0] |= iota >= plan.n_links - plan.n_boundary
+    return ShardedFleet(plan=plan, mesh=mesh, net=net_p, layouts=layouts,
+                        params=params_p, is_inter=ii_p, lb=lb_p,
+                        churn=churn_p, churn_map=cmap,
+                        own=jnp.asarray(own))
 
 
-def _net_spec(net: L.FluidNet) -> L.FluidNet:
+def _net_spec() -> L.FluidNet:
     """PartitionSpec tree for FluidNet: routes sharded, links replicated."""
     return L.FluidNet(cap=P(), qcap=P(), ecn_lo=P(), ecn_hi=P(), drain=P(),
                       vcap=P(), use_phantom=P(), routes=P(AXIS), dt=P(),
@@ -97,66 +212,139 @@ def _state_spec() -> FleetState:
         for f in FleetState._fields})
 
 
-def _unpad_state(state: FleetState, n: int) -> FleetState:
-    return FleetState(**{
-        f: getattr(state, f) if f in _REPLICATED
-        else getattr(state, f)[:n] for f in FleetState._fields})
+@functools.lru_cache(maxsize=64)
+def _compiled(mesh, scheme, n_warm, n_meas, backend, halo, unroll, churn_n,
+              has_lb, has_churn):
+    """Build + cache the jitted shard_map'd steady-state executable.
+
+    PR 3 rebuilt this closure (and its jit wrapper) inside every call, so
+    every benchmark rep re-traced and re-compiled the whole scan — THE
+    dominant cost of the old sharded path.  Everything value-like is a
+    traced argument here; only genuinely static config is in the key.
+    """
+    lay_spec = L.RouteLayout(
+        **{f: P(AXIS) for f in L.RouteLayout._fields})
+    param_spec = FleetParams(**{f: P(AXIS) for f in FleetParams._fields})
+    lb_spec = None if not has_lb else LbParams(
+        **{f: P(AXIS) for f in LbParams._fields})
+    churn_spec = cmap_spec = None
+    if has_churn:
+        churn_spec = ChurnParams(
+            **{f: P(AXIS) for f in ChurnParams._fields})
+        cmap_spec = P(AXIS)
+
+    def local(net_l, lay_l, params_l, state0_l, ii_l, lb_l, churn_l,
+              cmap_l, own_l):
+        net_l = net_l._replace(layout=jax.tree.map(lambda a: a[0], lay_l))
+        final, rates = steady_state_core(
+            net_l, params_l, state0_l, ii_l, scheme=scheme, n_warm=n_warm,
+            n_meas=n_meas, lb=lb_l, churn=churn_l, backend=backend,
+            axis_name=AXIS, halo=halo,
+            churn_map=None if cmap_l is None else cmap_l[0],
+            churn_n=churn_n, unroll=unroll)
+        # reassemble globally-correct link state from each link's owner
+        own = own_l[0]
+        return final._replace(
+            q_phys=jax.lax.psum(
+                jnp.where(own, final.q_phys, 0.0), AXIS),
+            q_phantom=jax.lax.psum(
+                jnp.where(own, final.q_phantom, 0.0), AXIS)), rates
+
+    f = shard_map(local, mesh,
+                  in_specs=(_net_spec(), lay_spec, param_spec,
+                            _state_spec(), P(AXIS), lb_spec, churn_spec,
+                            cmap_spec, P(AXIS)),
+                  out_specs=(_state_spec(), P(AXIS)),
+                  check_vma=False)
+    return jax.jit(f, donate_argnums=(3,))
+
+
+def _permute_state(state: FleetState, flow_idx: jnp.ndarray,
+                   link_idx: jnp.ndarray) -> FleetState:
+    """Reindex a FleetState: per-flow fields by `flow_idx`, link-shaped
+    replicated fields by `link_idx`, the PRNG key untouched.  One place
+    decides the classification (keyed on _REPLICATED, same as
+    _state_spec) for both the permute-in and permute-out directions."""
+    out = {}
+    for f in FleetState._fields:
+        v = getattr(state, f)
+        if f == "key":
+            out[f] = v
+        elif f in _REPLICATED:
+            out[f] = v[link_idx]
+        else:
+            out[f] = v[flow_idx]
+    return FleetState(**out)
+
+
+def _unalias(state: FleetState) -> FleetState:
+    """Fresh buffer per leaf.  init_state reuses one zeros array across
+    many fields (and cc_countdown aliases params.cc_period); donating an
+    aliased pytree trips XLA's double-donation check, so the one state we
+    donate per run is copied leaf-by-leaf first — the copy is what
+    donation then saves on every fused scan step."""
+    return FleetState(**{f: jnp.array(getattr(state, f), copy=True)
+                         for f in FleetState._fields})
+
+
+def steady_state_prepared(sf: ShardedFleet, *, n_warm: int, n_meas: int,
+                          scheme: str = "uno", backend: str = "auto",
+                          unroll: int = 1,
+                          state0: Optional[FleetState] = None,
+                          seed: int = 0):
+    """`cc.steady_state` over an already-compiled ShardedFleet.
+
+    Returns (final_state, mean goodput) in the ORIGINAL flow and link
+    order with padding stripped.  `state0`, when given, must match the
+    unpadded flow count and original ordering — it is permuted in (its
+    buffers are never donated; the permuted copy is).
+    """
+    plan, net = sf.plan, sf.net
+    if state0 is None:
+        state0 = init_state(sf.params, net.n_links, n_paths=net.n_paths,
+                            split0=L.uniform_split(net), seed=seed)
+    else:
+        if state0.cwnd.shape[0] != plan.n_real:
+            raise ValueError("state0 flow count does not match the plan")
+        gflat = plan.flat_gather
+        real = gflat < plan.n_real
+        gc = jnp.asarray(np.where(real, gflat, 0))
+        realj = jnp.asarray(real)
+        state0 = _permute_state(state0, gc, jnp.asarray(plan.new2old))
+        # inert padding must carry zero split weight, not a real flow's copy
+        state0 = state0._replace(
+            split=jnp.where(realj[:, None], state0.split, 0.0))
+
+    run = _compiled(sf.mesh, scheme, n_warm, n_meas, backend,
+                    plan.n_boundary, unroll,
+                    None if sf.churn is None else plan.n_real,
+                    sf.lb is not None, sf.churn is not None)
+    final, rates = run(net, sf.layouts, sf.params, _unalias(state0),
+                       sf.is_inter, sf.lb, sf.churn, sf.churn_map, sf.own)
+
+    inv = jnp.asarray(plan.inverse_flow)
+    return (_permute_state(final, inv, jnp.asarray(plan.old2new)),
+            rates[inv])
 
 
 def steady_state_sharded(net: L.FluidNet, params: FleetParams, *,
                          n_warm: int, n_meas: int, scheme: str = "uno",
                          is_inter: Optional[jnp.ndarray] = None,
                          lb: Optional[LbParams] = None,
+                         churn: Optional[ChurnParams] = None,
                          state0: Optional[FleetState] = None,
-                         mesh=None, backend: str = "auto"):
+                         mesh=None, backend: str = "auto",
+                         locality: bool = True, plan=None,
+                         unroll: int = 1, seed: int = 0):
     """`cc.steady_state` with the flow axis sharded over `mesh` (default:
-    all local devices).  Returns (final_state, mean goodput) with the
-    padding rows stripped; per-flow leaves keep device sharding.
-
-    Each shard rebuilds its local RouteLayout inside shard_map, so the
-    caller's `net.layout` (global, unshardable: its CSR view is sorted
-    across all flows) is discarded.  `state0`, when given, must match the
-    *unpadded* flow count.
-    """
-    mesh = mesh if mesh is not None else flow_mesh()
-    n_dev = mesh.devices.size
-    if state0 is not None and state0.cwnd.shape[0] != params.bdp.shape[0]:
-        raise ValueError("state0 flow count does not match params")
-    net, params, is_inter, lb, n_real = pad_flows(
-        net, params, is_inter, lb, multiple=n_dev)
-    if is_inter is None:
-        is_inter = jnp.zeros(params.bdp.shape[0], bool)
-    if state0 is None:
-        state0 = init_state(params, net.n_links, n_paths=net.n_paths,
-                            split0=L.uniform_split(net))
-    else:
-        pad = params.bdp.shape[0] - n_real
-        if pad:
-            state0 = FleetState(**{
-                f: getattr(state0, f) if f in _REPLICATED
-                else _pad_flow_tree(getattr(state0, f), pad)
-                for f in FleetState._fields})
-        # inert padding must carry zero split weight, not flow 0's copy
-        if pad:
-            keep = jnp.arange(state0.split.shape[0]) < n_real
-            state0 = state0._replace(
-                split=jnp.where(keep[:, None], state0.split, 0.0))
-
-    lb_spec = None if lb is None else jax.tree.map(lambda _: P(AXIS), lb)
-    param_spec = jax.tree.map(lambda _: P(AXIS), params)
-
-    def local(net_l, params_l, state0_l, ii_l, lb_l):
-        net_l = L.with_layout(net_l)
-        return steady_state_core(net_l, params_l, state0_l, ii_l,
-                                 scheme=scheme, n_warm=n_warm,
-                                 n_meas=n_meas, lb=lb_l, churn=None,
-                                 backend=backend, axis_name=AXIS)
-
-    f = shard_map(local, mesh,
-                  in_specs=(_net_spec(net), param_spec, _state_spec(),
-                            P(AXIS), lb_spec),
-                  out_specs=(_state_spec(), P(AXIS)),
-                  check_vma=False)
-    final, rates = jax.jit(f)(net._replace(layout=None), params, state0,
-                              is_inter, lb)
-    return _unpad_state(final, n_real), rates[:n_real]
+    all local devices) under a locality ShardPlan — one-shot convenience
+    over `shard_scenario` + `steady_state_prepared`.  Repeated runs over
+    the same scenario should build the ShardedFleet once and call
+    `steady_state_prepared` directly (the scenario compile — plan,
+    permutation, per-shard layouts — is the only per-call host work; the
+    executable itself is cached either way)."""
+    sf = shard_scenario(net, params, is_inter=is_inter, lb=lb, churn=churn,
+                        mesh=mesh, locality=locality, plan=plan)
+    return steady_state_prepared(sf, n_warm=n_warm, n_meas=n_meas,
+                                 scheme=scheme, backend=backend,
+                                 unroll=unroll, state0=state0, seed=seed)

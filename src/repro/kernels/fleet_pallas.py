@@ -112,6 +112,70 @@ def link_scatter(pad_idx, sub_vals, n_links: int,
     )(pad_idx, sub_vals.astype(jnp.float32))
 
 
+def _scatter_tiles_kernel(idx_ref, val_ref, priv_ref, bnd_ref, *,
+                          n_links, n_boundary):
+    b, p, h = idx_ref.shape
+    idx = idx_ref[...].reshape(b * p * h)
+    val = jnp.broadcast_to(val_ref[...][:, :, None], (b, p, h))
+    val = val.reshape(1, b * p * h)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (b * p * h, n_links + 1), 1)
+    onehot = (idx[:, None] == iota).astype(val.dtype)
+    partial = jax.lax.dot_general(
+        val, onehot, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[0]
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        priv_ref[...] = jnp.zeros_like(priv_ref)
+        bnd_ref[...] = jnp.zeros_like(bnd_ref)
+
+    priv_ref[...] += partial[:n_links - n_boundary]
+    bnd_ref[...] += partial[n_links - n_boundary:]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_links", "n_boundary", "block",
+                                    "interpret"))
+def link_scatter_tiles(pad_idx, sub_vals, n_links: int, n_boundary: int,
+                       block: int = BLOCK_FLOWS, interpret: bool = True):
+    """Per-shard offered-load scatter with the boundary links in their own
+    tile.
+
+    Same contract as `link_scatter`, but the link id space is assumed
+    locality-relabeled (repro.scenarios.plan_shards): ids below
+    `n_links - n_boundary` are shard-private, the rest are boundary links
+    shared across shards.  Returns (private, boundary) where `private` is
+    (n_links - n_boundary,) and `boundary` is (n_boundary + 1,) with the
+    -1-hop scratch slot last — so the boundary tile (the only piece the
+    halo exchange psums) leaves the kernel as its own contiguous buffer,
+    and concatenating the two tiles reproduces the (n_links + 1,) buffer
+    of `link_scatter` on the real links.
+    """
+    if not 0 < n_boundary < n_links:
+        # an all-boundary plan has no private tile — that regime is plain
+        # link_scatter + a full halo exchange (links.offered_load routes it
+        # there); a zero-size BlockSpec would die deep inside pallas_call
+        raise ValueError(f"n_boundary {n_boundary} out of (0, {n_links})")
+    pad_idx, pad = _pad_flows(pad_idx, n_links, block)
+    if pad:
+        sub_vals = jnp.concatenate(
+            [sub_vals, jnp.zeros((pad, sub_vals.shape[1]), sub_vals.dtype)])
+    n, p, h = pad_idx.shape
+    n_priv = n_links - n_boundary
+    return pl.pallas_call(
+        functools.partial(_scatter_tiles_kernel, n_links=n_links,
+                          n_boundary=n_boundary),
+        grid=(n // block,),
+        in_specs=[pl.BlockSpec((block, p, h), lambda i: (i, 0, 0)),
+                  pl.BlockSpec((block, p), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((n_priv,), lambda i: (0,)),
+                   pl.BlockSpec((n_boundary + 1,), lambda i: (0,))],
+        out_shape=[jax.ShapeDtypeStruct((n_priv,), jnp.float32),
+                   jax.ShapeDtypeStruct((n_boundary + 1,), jnp.float32)],
+        interpret=interpret,
+    )(pad_idx, sub_vals.astype(jnp.float32))
+
+
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def link_gathers(pad_idx, scale, clean, delay,
                  block: int = BLOCK_FLOWS, interpret: bool = True):

@@ -92,6 +92,18 @@ def fleet_offered_load_ref(routes, rates, split, n_links: int):
     return buf.at[pad_idx.ravel()].add(per_hop.ravel())
 
 
+def fleet_offered_load_tiles_ref(routes, rates, split, n_links: int,
+                                 n_boundary: int):
+    """Oracle for the per-shard tiled scatter (fleet_pallas
+    .link_scatter_tiles): the (n_links + 1,) reference buffer split at
+    `n_links - n_boundary` into (private, boundary + scratch) tiles.
+    Only the real links are part of the contract — the scratch slot is
+    backend-specific (see fleet_offered_load_ref).
+    """
+    buf = fleet_offered_load_ref(routes, rates, split, n_links)
+    return buf[:n_links - n_boundary], buf[n_links - n_boundary:]
+
+
 def fleet_link_gathers_ref(routes, scale, clean, delay):
     """Three separate link -> flow gathers (the fused-kernel oracle).
 

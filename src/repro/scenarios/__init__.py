@@ -13,7 +13,8 @@ assignment, so cross-validation (repro.fleetsim.validate) compares
 per-flow rates positionally.  `dumbbell_scenario` builds the inter/intra
 dumbbell both simulators previously hand-rolled separately.
 """
-from repro.scenarios.compile_fleetsim import (FleetScenario, fleet_arrays,
+from repro.scenarios.compile_fleetsim import (FleetScenario, ShardPlan,
+                                              fleet_arrays, plan_shards,
                                               to_fleetsim)
 from repro.scenarios.compile_netsim import (ScenarioNet, spawn_backlogged,
                                             to_netsim)
@@ -24,6 +25,7 @@ from repro.scenarios.spec import (ChurnSpec, FlowGroup, LbSpec, LinkSpec,
 __all__ = [
     "ChurnSpec", "FlowGroup", "LbSpec", "LinkSpec", "Path", "PathSet",
     "Scenario", "dumbbell_scenario",
-    "FleetScenario", "fleet_arrays", "to_fleetsim",
+    "FleetScenario", "ShardPlan", "fleet_arrays", "plan_shards",
+    "to_fleetsim",
     "ScenarioNet", "spawn_backlogged", "to_netsim",
 ]

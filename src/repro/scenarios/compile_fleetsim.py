@@ -9,6 +9,13 @@ over a real multipath set, or that carry erasure coding; everything else
 gets a static uniform split over its valid paths — ecmp/rps spraying and
 the single-aggregated-pipe view then produce *identical* fluid dynamics
 (n parallel uniform-split links scale 1:1 to one n-times-faster link).
+
+`plan_shards` is the compile-time half of the locality-sharded fleetsim
+(repro.fleetsim.shard): it partitions flows so each shard owns a
+contiguous range of links, relabels link ids so every cross-shard
+("boundary") link sits at the TAIL of the id space, and records the
+per-shard flow permutation — the runtime then reduces shard-private link
+loads entirely locally and psums only the trailing boundary slice.
 """
 from __future__ import annotations
 
@@ -144,3 +151,125 @@ def to_fleetsim(spec: Scenario, **make_params_kw) -> FleetScenario:
 
     return FleetScenario(net=net, params=params, is_inter=is_inter,
                          lb=lb, churn=churn, seed=spec.seed)
+
+
+# ------------------------------------------------ locality shard planning
+
+class ShardPlan(NamedTuple):
+    """Host-side (numpy, never traced) link-locality flow partition.
+
+    Link ids are RELABELED: `new2old` lists old ids in the new order —
+    first every shard's private links as contiguous ranges (shard s owns
+    new ids [owner_ptr[s], owner_ptr[s+1])), then the `n_boundary`
+    boundary links (touched by flows of 2+ shards) at the tail.  Flows are
+    permuted into per-shard rows: `gather[s, r]` is the ORIGINAL flow id
+    sitting in shard s's r-th local row, with `n_real` marking inert
+    padding rows (compiled to all-(-1) routes).  Links no flow touches are
+    folded into shard 0's private range (their load is identically zero).
+    """
+    n_shards: int
+    n_real: int              # original flow count (gather pads with this)
+    n_links: int
+    n_boundary: int
+    gather: np.ndarray       # (n_shards, rows) int32 original flow ids
+    new2old: np.ndarray      # (n_links,) int32: old link id per new id
+    old2new: np.ndarray      # (n_links,) int32 inverse relabeling
+    owner_ptr: np.ndarray    # (n_shards + 1,) int32 private-range offsets
+
+    @property
+    def rows(self) -> int:
+        return self.gather.shape[1]
+
+    @property
+    def boundary_frac(self) -> float:
+        return self.n_boundary / max(self.n_links, 1)
+
+    @property
+    def flat_gather(self) -> np.ndarray:
+        return self.gather.reshape(-1)
+
+    @property
+    def inverse_flow(self) -> np.ndarray:
+        """(n_real,) position of each original flow in the permuted order."""
+        flat = self.flat_gather
+        real = flat < self.n_real
+        inv = np.empty(self.n_real, np.int64)
+        inv[flat[real]] = np.flatnonzero(real)
+        return inv
+
+
+def _home_links(routes3: np.ndarray, n_links: int,
+                n_shards: int) -> np.ndarray:
+    """Pick each flow's "home" link — the hop that best localizes it.
+
+    Preference: the most-shared link that is NOT a hub (a link touched by
+    >= ceil(n_flows / n_shards) route entries can never be private to one
+    shard once its flows overflow a shard, so grouping by it buys
+    nothing).  Flows whose every hop is a hub fall back to their rarest
+    hop, which still co-locates flows sharing that hub.  On the standard
+    dumbbell this resolves to the receiver downlink for BOTH flow classes
+    (uplinks are one-flow, the WAN pipe is a hub), leaving the WAN
+    link(s) as the only boundary.
+    """
+    n = routes3.shape[0]
+    pidx = np.where(routes3 >= 0, routes3, n_links).reshape(n, -1)
+    counts = np.bincount(pidx.ravel(), minlength=n_links + 1)[:n_links]
+    counts_ext = np.concatenate([counts, [0]])
+    hub_ext = np.concatenate(
+        [counts >= max(2, -(-n // n_shards)), [True]])
+    c = counts_ext[pidx]                          # (n, p*h)
+    score = np.where((c > 0) & ~hub_ext[pidx], c, -1)
+    home = pidx[np.arange(n), np.argmax(score, axis=1)]
+    no_nonhub = score.max(axis=1) < 0
+    if np.any(no_nonhub):
+        rare = np.where(c > 0, c, np.iinfo(np.int64).max)
+        fb = pidx[np.arange(n), np.argmin(rare, axis=1)]
+        home = np.where(no_nonhub, fb, home)
+    return np.where(home >= n_links, 0, home)     # routeless flows -> link 0
+
+
+def plan_shards(routes, n_links: int, n_shards: int) -> ShardPlan:
+    """Partition flows by link locality into `n_shards` balanced shards.
+
+    Flows are sorted by home link and cut into equal contiguous chunks
+    (each padded to the common row count with inert flows), so a home
+    group larger than one shard simply straddles the cut and its link is
+    classified boundary.  Boundary status is then derived from the ACTUAL
+    assignment — a link is private iff flows of at most one shard touch
+    it — so the relabeled id space is correct whatever the heuristic did.
+    """
+    r = np.asarray(routes)
+    r3 = r if r.ndim == 3 else r[:, None, :]
+    n = r3.shape[0]
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    home = _home_links(r3, n_links, n_shards)
+    order = np.argsort(home, kind="stable")
+    rows = -(-n // n_shards)
+    gather = np.full((n_shards, rows), n, np.int32)
+    for s in range(n_shards):
+        chunk = order[s * rows:(s + 1) * rows]
+        gather[s, :chunk.shape[0]] = chunk
+
+    flow_shard = np.empty(n, np.int32)
+    flow_shard[order] = np.minimum(np.arange(n) // rows, n_shards - 1)
+    flat = r3.reshape(n, -1)
+    valid = flat >= 0
+    touched = np.zeros((n_shards, n_links), bool)
+    touched[np.repeat(flow_shard, flat.shape[1]).reshape(n, -1)[valid],
+            flat[valid]] = True
+    n_touching = touched.sum(axis=0)
+    boundary = n_touching >= 2
+    owner = np.where(n_touching == 1, np.argmax(touched, axis=0), 0)
+
+    priv = [np.flatnonzero(~boundary & (owner == s))
+            for s in range(n_shards)]
+    new2old = np.concatenate(priv + [np.flatnonzero(boundary)]).astype(
+        np.int32)
+    old2new = np.empty(n_links, np.int32)
+    old2new[new2old] = np.arange(n_links, dtype=np.int32)
+    owner_ptr = np.concatenate(
+        [[0], np.cumsum([p.shape[0] for p in priv])]).astype(np.int32)
+    return ShardPlan(n_shards=n_shards, n_real=n, n_links=n_links,
+                     n_boundary=int(boundary.sum()), gather=gather,
+                     new2old=new2old, old2new=old2new, owner_ptr=owner_ptr)

@@ -1,7 +1,8 @@
 """Million-flow fleetsim machinery: RouteLayout equivalence (segment / CSR /
 Pallas link aggregation vs the original scatter), the fused Pallas
-link->flow gathers, sharded-vs-single-device steady state, and the
-compensated fairness reductions at 10^5 flows."""
+link->flow gathers, locality shard plans + halo-exchange sharded steady
+state vs single device, and the compensated fairness reductions at 10^5
+flows."""
 import json
 import subprocess
 import sys
@@ -15,6 +16,7 @@ from repro.fleetsim.links import RATE_100G, US
 from repro.fleetsim.sweeps import fleet_sum, jain
 from repro.kernels import fleet_pallas
 from repro.kernels import ref as kref
+from repro.scenarios import plan_shards
 
 INTRA_RTT = 14 * US
 INTRA_BDP = RATE_100G * INTRA_RTT
@@ -173,6 +175,134 @@ def test_layout_backends_require_layout():
         L.offered_load(bare, jnp.ones(2), backend="nope")
 
 
+# --------------------------------------------------- locality shard plans
+
+def _shards_touching(routes, n_links, plan):
+    """(n_shards, n_links) bool recomputed from the plan's own flow
+    assignment — the ground truth the boundary classification must match."""
+    r3 = np.asarray(routes)
+    r3 = r3 if r3.ndim == 3 else r3[:, None, :]
+    touched = np.zeros((plan.n_shards, n_links), bool)
+    for s in range(plan.n_shards):
+        ids = plan.gather[s]
+        links = r3[ids[ids < plan.n_real]].ravel()
+        touched[s, links[links >= 0]] = True
+    return touched
+
+
+@pytest.mark.parametrize("n_shards", [2, 3, 4])
+def test_plan_shards_invariants(n_shards):
+    """gather is a padded permutation of the flows, the link relabeling is
+    a permutation with boundary links exactly at the tail, and every
+    private link lands in its single touching shard's contiguous range."""
+    rng = np.random.default_rng(13)
+    for _ in range(6):
+        net = _random_net(rng, n_flows=int(rng.integers(4, 30)))
+        n_links = net.n_links
+        plan = plan_shards(np.asarray(net.routes), n_links, n_shards)
+        flat = plan.flat_gather
+        real = flat[flat < plan.n_real]
+        assert sorted(real.tolist()) == list(range(plan.n_real))
+        assert plan.rows * n_shards >= plan.n_real
+        assert sorted(plan.new2old.tolist()) == list(range(n_links))
+        assert np.array_equal(plan.old2new[plan.new2old],
+                              np.arange(n_links))
+        inv = plan.inverse_flow
+        assert np.array_equal(flat[inv], np.arange(plan.n_real))
+
+        touched = _shards_touching(net.routes, n_links, plan)
+        n_touch = touched.sum(axis=0)
+        want_boundary = set(np.flatnonzero(n_touch >= 2).tolist())
+        tail = set(plan.new2old[n_links - plan.n_boundary:].tolist())
+        assert tail == want_boundary
+        ptr = plan.owner_ptr
+        assert ptr[0] == 0 and ptr[-1] == n_links - plan.n_boundary
+        for s in range(n_shards):
+            owned_old = plan.new2old[ptr[s]:ptr[s + 1]]
+            for l in owned_old:
+                # private by construction: only shard s (or nobody) uses it
+                assert n_touch[l] <= 1
+                if n_touch[l] == 1:
+                    assert touched[s, l]
+
+
+def test_plan_shards_dumbbell_boundary_is_tiny():
+    """On the standard dumbbell the only cross-shard links are the WAN
+    pipe and at most one downlink straddling the cut — the halo payload
+    must be >= 10x smaller than the full link buffer (the CI guard)."""
+    n = 4096
+    net, _, _ = dumbbell(n // 2, n - n // 2, n_bottleneck=n // 64)
+    plan = plan_shards(np.asarray(net.routes), net.n_links, 2)
+    assert plan.n_boundary <= 3
+    assert plan.boundary_frac < 0.01
+    assert (plan.n_links + 1) >= 10 * plan.n_boundary
+    # flows stay balanced: both shards fully populated (n divides evenly)
+    assert plan.gather.shape == (2, n // 2)
+    assert np.all(plan.flat_gather < plan.n_real)
+
+
+def test_scatter_tiles_matches_reference():
+    """The private/boundary-tiled Pallas scatter == the reference buffer
+    split at the boundary, over random routes incl. -1 padding."""
+    rng = np.random.default_rng(21)
+    for _ in range(6):
+        net = _random_net(rng)
+        rates, split = _random_rates_split(rng, net)
+        n_boundary = int(rng.integers(1, net.n_links))
+        pad_idx = jnp.where(net.routes >= 0, net.routes, net.n_links)
+        priv, bnd = fleet_pallas.link_scatter_tiles(
+            pad_idx, rates[:, None] * split, net.n_links, n_boundary,
+            block=4)
+        rp, rb = kref.fleet_offered_load_tiles_ref(
+            net.routes, rates, split, net.n_links, n_boundary)
+        assert priv.shape == (net.n_links - n_boundary,)
+        assert bnd.shape == (n_boundary + 1,)
+        got = np.concatenate([np.asarray(priv), np.asarray(bnd)])
+        want = np.concatenate([np.asarray(rp), np.asarray(rb)])
+        # real links must match; the scratch slot is backend-specific
+        np.testing.assert_allclose(got[:net.n_links], want[:net.n_links],
+                                   atol=1e-6)
+    with pytest.raises(ValueError):
+        fleet_pallas.link_scatter_tiles(pad_idx, rates[:, None] * split,
+                                        net.n_links, 0)
+
+
+def test_offered_load_pallas_halo_tiles():
+    """offered_load(backend="pallas", halo=...) routes through the tiled
+    kernel and still reproduces the reference loads."""
+    rng = np.random.default_rng(23)
+    for _ in range(4):
+        net = L.with_layout(_random_net(rng))
+        rates, split = _random_rates_split(rng, net)
+        ref = np.asarray(kref.fleet_offered_load_ref(
+            net.routes, rates, split, net.n_links))[:net.n_links]
+        halo = int(rng.integers(1, net.n_links))
+        got = np.asarray(L.offered_load(net, rates, split,
+                                        backend="pallas", halo=halo))
+        np.testing.assert_allclose(got, ref, atol=1e-6)
+
+
+def test_sharded_one_device_mesh_matches_single():
+    """The full locality machinery (plan, flow/link permutation, stacked
+    layouts, ownership reassembly, inverse permutation) on a 1-device
+    mesh must reproduce the plain steady state — no collectives involved,
+    so this runs in-process on any host."""
+    from repro.fleetsim import steady_state
+    from repro.fleetsim.shard import flow_mesh, steady_state_sharded
+    net, bdp, rtt = dumbbell(6, 5, n_bottleneck=2)
+    p = make_params(bdp, rtt, INTRA_BDP, INTRA_RTT)
+    ii = jnp.arange(11) >= 6
+    mesh = flow_mesh(1)
+    _, r1 = steady_state(net, p, n_warm=2000, n_meas=500, is_inter=ii)
+    s2, r2 = steady_state_sharded(net, p, n_warm=2000, n_meas=500,
+                                  is_inter=ii, mesh=mesh)
+    np.testing.assert_allclose(np.asarray(r2), np.asarray(r1), atol=1e-5)
+    # unroll is loop restructuring only — same epochs, same numbers
+    _, r3 = steady_state_sharded(net, p, n_warm=2000, n_meas=500,
+                                 is_inter=ii, mesh=mesh, unroll=4)
+    np.testing.assert_allclose(np.asarray(r3), np.asarray(r1), atol=1e-5)
+
+
 # ------------------------------------------------------- sharded flow axis
 
 def _run(code: str) -> dict:
@@ -184,9 +314,12 @@ def _run(code: str) -> dict:
 
 @pytest.mark.slow
 def test_sharded_steady_state_matches_single_device():
-    """Full steady_state_core under shard_map (4 CPU shards, flow count NOT
-    divisible -> inert padding) == the single-device run to float-sum
-    tolerance, multipath + adaptive LB included."""
+    """Locality-sharded steady state (4 CPU shards, flow count NOT
+    divisible -> inert padding, boundary-only halo exchange) == the
+    single-device run to float-sum tolerance across single-path,
+    multipath + adaptive LB, churn-enabled, and PR-3-style full-exchange
+    configurations; final per-link queue state is reassembled correctly
+    from the owning shards."""
     res = _run(r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -194,27 +327,62 @@ import jax, jax.numpy as jnp, numpy as np, json
 from repro.fleetsim import dumbbell, make_params, steady_state
 from repro.fleetsim.shard import steady_state_sharded
 from repro.fleetsim.links import RATE_100G, US
-from repro.scenarios import dumbbell_scenario, to_fleetsim
+from repro.scenarios import (ChurnSpec, dumbbell_scenario, plan_shards,
+                             to_fleetsim)
 
+out = {}
 net, bdp, rtt = dumbbell(5, 5)
 p = make_params(bdp, rtt, RATE_100G * 14 * US, 14 * US)
 ii = jnp.arange(10) >= 5
-_, r1 = steady_state(net, p, n_warm=5000, n_meas=1000, is_inter=ii)
-_, r2 = steady_state_sharded(net, p, n_warm=5000, n_meas=1000, is_inter=ii)
-err1 = float(np.max(np.abs(np.asarray(r1) - np.asarray(r2))))
+s1, r1 = steady_state(net, p, n_warm=5000, n_meas=1000, is_inter=ii)
+s2, r2 = steady_state_sharded(net, p, n_warm=5000, n_meas=1000,
+                              is_inter=ii)
+out["err_single_path"] = float(
+    np.max(np.abs(np.asarray(r1) - np.asarray(r2))))
+out["err_q"] = float(
+    np.max(np.abs(np.asarray(s1.q_phantom) - np.asarray(s2.q_phantom))))
+out["q_scale"] = float(np.max(np.asarray(s1.q_phantom)))
+plan = plan_shards(np.asarray(net.routes), net.n_links, 4)
+out["n_boundary"] = plan.n_boundary
+out["n_links"] = plan.n_links
+# PR-3-style contiguous sharding (full-buffer exchange) must still agree
+_, r2f = steady_state_sharded(net, p, n_warm=5000, n_meas=1000,
+                              is_inter=ii, locality=False)
+out["err_full_exchange"] = float(
+    np.max(np.abs(np.asarray(r1) - np.asarray(r2f))))
 
 fs = to_fleetsim(dumbbell_scenario(3, 5, multipath=True, n_wan=4))
 _, ra = steady_state(fs.net, fs.params, n_warm=5000, n_meas=1000,
                      is_inter=fs.is_inter, lb=fs.lb)
 _, rb = steady_state_sharded(fs.net, fs.params, n_warm=5000, n_meas=1000,
                              is_inter=fs.is_inter, lb=fs.lb)
-err2 = float(np.max(np.abs(np.asarray(ra) - np.asarray(rb))))
-scale = float(np.max(np.abs(np.asarray(r1))))
-print(json.dumps({"err_single_path": err1, "err_multipath": err2,
-                  "scale": scale}))
+out["err_multipath"] = float(
+    np.max(np.abs(np.asarray(ra) - np.asarray(rb))))
+
+US_ = 14 * US
+fs2 = to_fleetsim(dumbbell_scenario(
+    6, 5, intra_churn=ChurnSpec(50 * US_, 20 * US_)))
+_, rc = steady_state(fs2.net, fs2.params, n_warm=3000, n_meas=1000,
+                     is_inter=fs2.is_inter, churn=fs2.churn, seed=7)
+_, rd = steady_state_sharded(fs2.net, fs2.params, n_warm=3000,
+                             n_meas=1000, is_inter=fs2.is_inter,
+                             churn=fs2.churn, seed=7)
+out["err_churn"] = float(
+    np.max(np.abs(np.asarray(rc) - np.asarray(rd))))
+out["churn_scale"] = float(np.max(np.abs(np.asarray(rc))))
+out["scale"] = float(np.max(np.abs(np.asarray(r1))))
+print(json.dumps(out))
 """)
-    assert res["err_single_path"] < 1e-5 * max(1.0, res["scale"])
+    scale = max(1.0, res["scale"])
+    assert res["err_single_path"] < 1e-5 * scale
+    assert res["err_full_exchange"] < 1e-5 * scale
     assert res["err_multipath"] < 1e-4
+    # churn flips whole flows on identical PRNG draws — any mismatch in the
+    # draw alignment would show up as O(1) rate differences, not rounding
+    assert res["err_churn"] < 1e-4 * max(1.0, res["churn_scale"])
+    assert res["err_q"] <= 1e-4 * max(1.0, res["q_scale"])
+    # the dumbbell boundary is the WAN pipe + at most the shared downlinks
+    assert res["n_boundary"] < res["n_links"]
 
 
 # --------------------------------------------- numerical hygiene at scale
