@@ -43,13 +43,26 @@ def compare_last_two(hist: list) -> None:
             print(f"  {name}: only in previous entry")
             continue
         if b.get("skipped"):
-            print(f"  {name}: skipped ({b.get('reason', '?')})")
+            # a measured -> skipped transition hides a regression if we
+            # only print "skipped": surface the value that was lost
+            if a is not None and not a.get("skipped"):
+                print(f"  {name}: {_fmt(a['flow_epochs_per_s'])} fe/s -> "
+                      f"skipped ({b.get('reason', '?')})  "
+                      "<-- was measured in previous entry")
+            else:
+                print(f"  {name}: skipped ({b.get('reason', '?')})")
             continue
         if a is None or a.get("skipped"):
             print(f"  {name}: new  {_fmt(b['flow_epochs_per_s'])} fe/s")
             continue
         old, new = a["flow_epochs_per_s"], b["flow_epochs_per_s"]
-        ratio = new / max(old, 1)
+        if old < 1.0:
+            # sub-1 fe/s old values (a stalled or garbage point) make any
+            # ratio meaningless — don't let max(old, 1) fake a sane one
+            print(f"  {name}: {_fmt(old)} -> {_fmt(new)} fe/s "
+                  "(ratio n/a: previous value < 1 fe/s)")
+            continue
+        ratio = new / old
         flag = "  <-- regression" if ratio < 0.8 else ""
         print(f"  {name}: {_fmt(old)} -> {_fmt(new)} fe/s "
               f"({ratio:5.2f}x){flag}")

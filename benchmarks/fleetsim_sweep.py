@@ -26,6 +26,12 @@ Acceptance targets:
     appends an entry keyed by git SHA + date (the PR-3 single-run file is
     absorbed as the first entry) and `benchmarks/compare.py` prints
     deltas vs the previous entry.
+  * ISSUE 5: a fat-tree point — the paper's actual two-DC k-ary fat-tree
+    (scenarios.fat_tree_spec) at k=8 / 100k flows (k=4 in smoke),
+    single-device layout path + the locality-sharded flow axis under the
+    pod-grouping tiered ShardPlan.  The psum payload-shrink guard is
+    parameterized per scenario kind (MIN_PSUM_SHRINK): 10x on the
+    dumbbell's 2-link boundary, 1.5x on the fat-tree's agg/core/WAN cut.
 
 Reports: jitted single-scenario rate (compile time separated out), the same
 1k-flow scenario's steady utilization/fairness as a sanity check, the
@@ -51,7 +57,7 @@ from benchmarks import common
 from repro.fleetsim import dumbbell, links as fl, make_params, simulate
 from repro.fleetsim.links import RATE_100G, US
 from repro.fleetsim.sweeps import churn_sweep, fairness_sweep, jain
-from repro.scenarios import dumbbell_scenario, to_fleetsim
+from repro.scenarios import dumbbell_scenario, fat_tree_spec, to_fleetsim
 
 BENCH_PATH = pathlib.Path(__file__).resolve().parents[1] / \
     "BENCH_fleetsim.json"
@@ -163,25 +169,39 @@ def run(quick: bool = True) -> dict:
 # collective/dispatch overhead; below it the point is recorded as skipped
 MIN_SHARD_FLOWS = 5_000
 
+# boundary-psum payload-shrink guard, per scenario kind: the dumbbell's
+# boundary is 2-3 links (>= 10x shrink), while a fat-tree's boundary is
+# structurally the agg/core/WAN cut plus the straddling sender uplinks —
+# a ~2x shrink at k=8 (the tiered plan still beats the untiered ~1.26x)
+MIN_PSUM_SHRINK = {"dumbbell": 10.0, "fat_tree": 1.5}
+
+FAT_TREE_PATHS = 8            # ECMP path-set cap for the fat-tree points
+
 # compiled scenarios are expensive at 1M flows (route tensor + layout);
-# build each (n_flows, multipath) once and reuse across backend variants
+# build each (kind, n_flows, multipath) once and reuse across backend
+# variants.  Entries are (net, params, is_inter, lb, link_tier).
 _SCENARIO_CACHE: dict = {}
 
 
-def _scenario(n_flows: int, multipath: bool):
-    key = (n_flows, multipath)
+def _scenario(n_flows: int, multipath: bool, kind: str = "dumbbell",
+              k: int = 8):
+    key = (kind, n_flows, multipath, k)
     if key in _SCENARIO_CACHE:
         return _SCENARIO_CACHE[key]
-    if multipath:
+    if kind == "fat_tree":
+        fs = to_fleetsim(fat_tree_spec(k=k, n_wan=k, n_flows=n_flows,
+                                       n_paths=FAT_TREE_PATHS, seed=1))
+        out = fs.net, fs.params, fs.is_inter, fs.lb, fs.link_tier
+    elif multipath:
         fs = to_fleetsim(dumbbell_scenario(
             n_flows // 2, n_flows - n_flows // 2, multipath=True, n_wan=4,
             n_bottleneck=max(1, n_flows // 64)))
-        out = fs.net, fs.params, fs.is_inter, fs.lb
+        out = fs.net, fs.params, fs.is_inter, fs.lb, None
     else:
         net, bdp, rtt = dumbbell(n_flows // 2, n_flows - n_flows // 2,
                                  n_bottleneck=max(1, n_flows // 64))
         params = make_params(bdp, rtt, RATE_100G * 14 * US, 14 * US)
-        out = net, params, None, None
+        out = net, params, None, None, None
     _SCENARIO_CACHE[key] = out
     return out
 
@@ -189,21 +209,33 @@ def _scenario(n_flows: int, multipath: bool):
 _DUMP_DIR: list = []          # one private temp dir per benchmark process
 
 
-def _dump_scenario(n_flows: int) -> pathlib.Path:
-    """Write the (single-path) compiled scenario to an .npz the sharded
-    subprocess can load — it must not rebuild the same route tensor the
-    parent already compiled (at 1M flows that is most of the wall time).
-    Files live in a per-process mkdtemp dir: a fixed shared path would
-    race with concurrent runs on the same host."""
-    net, params, _, _ = _scenario(n_flows, False)
+def _dump_scenario(n_flows: int, kind: str = "dumbbell",
+                   k: int = 8) -> pathlib.Path:
+    """Write the compiled scenario to an .npz the sharded subprocess can
+    load — it must not rebuild the same route tensor the parent already
+    compiled (at 1M flows that is most of the wall time).  Dumbbell
+    points ship the single-path scenario; fat-tree points ship the full
+    multipath one plus its locality tiers (and LbParams when present) so
+    the subprocess reproduces the pod-locality plan.  Files live in a
+    per-process mkdtemp dir: a fixed shared path would race with
+    concurrent runs on the same host."""
+    net, params, is_inter, lb, tier = _scenario(
+        n_flows, kind == "fat_tree", kind, k)
     if not _DUMP_DIR:
         _DUMP_DIR.append(pathlib.Path(
             tempfile.mkdtemp(prefix="fleetsim_bench_")))
-    path = _DUMP_DIR[0] / f"scn_{n_flows}.npz"
+    path = _DUMP_DIR[0] / f"scn_{kind}_{n_flows}.npz"
     arrays = {f"net_{f}": np.asarray(getattr(net, f))
               for f in net._fields if f != "layout"}
     arrays.update({f"par_{f}": np.asarray(getattr(params, f))
                    for f in params._fields})
+    if tier is not None:
+        arrays["link_tier"] = np.asarray(tier)
+    if is_inter is not None:
+        arrays["is_inter"] = np.asarray(is_inter)
+    if lb is not None:
+        arrays.update({f"lb_{f}": np.asarray(getattr(lb, f))
+                       for f in lb._fields})
     np.savez(path, **arrays)
     return path
 
@@ -237,12 +269,14 @@ def _point(n_flows, n_epochs, *, variant, path, warm_s, cold_s=None):
 
 
 def _sharded_point(n_flows: int, n_epochs: int, n_devices: int = 2,
-                   locality: bool = True) -> dict:
+                   locality: bool = True, kind: str = "dumbbell",
+                   k: int = 8) -> dict:
     """Time the shard_map'd flow axis in a subprocess (the forced host
     device count must be set before jax initializes).  Returns warm_s
     plus the plan's boundary stats.  The compiled scenario is loaded
-    from the parent's .npz cache, not rebuilt."""
-    scn = _dump_scenario(n_flows)
+    from the parent's .npz cache, not rebuilt; fat-tree points also load
+    the locality tiers (pod-grouped plan) and the adaptive LbParams."""
+    scn = _dump_scenario(n_flows, kind, k)
     code = f"""
 import os
 os.environ["XLA_FLAGS"] = (
@@ -250,13 +284,19 @@ os.environ["XLA_FLAGS"] = (
     + os.environ.get("XLA_FLAGS", ""))
 import json, time, jax, numpy as np
 from repro.fleetsim.links import FluidNet
-from repro.fleetsim.state import FleetParams
+from repro.fleetsim.state import FleetParams, LbParams
 from repro.fleetsim.shard import shard_scenario, steady_state_prepared
 z = np.load({str(scn)!r})
 net = FluidNet(**{{f: z["net_" + f]
                    for f in FluidNet._fields if f != "layout"}})
 p = FleetParams(**{{f: z["par_" + f] for f in FleetParams._fields}})
-sf = shard_scenario(net, p, locality={locality})
+jnp = jax.numpy
+tier = z["link_tier"] if "link_tier" in z else None
+ii = jnp.asarray(z["is_inter"]) if "is_inter" in z else None
+lb = (LbParams(**{{f: jnp.asarray(z["lb_" + f]) for f in LbParams._fields}})
+      if "lb_eta" in z else None)
+sf = shard_scenario(net, p, is_inter=ii, lb=lb, locality={locality},
+                    link_tier=tier)
 kw = dict(n_warm={n_epochs} - 10, n_meas=10)
 _, r = steady_state_prepared(sf, **kw)
 jax.block_until_ready(r)
@@ -317,21 +357,27 @@ def _append_history(entry: dict) -> None:
 
 
 def _sharded_points(n: int, ne: int, mode: str, points: list,
-                    speedups: dict) -> None:
+                    speedups: dict, kind: str = "dumbbell", k: int = 8,
+                    variant: str = "single",
+                    paths=(("sharded2-local", True),
+                           ("sharded2", False))) -> None:
     """Both sharded variants at one size: locality halo exchange vs the
     PR-3 full-buffer psum.  Too-small points are recorded as skipped (not
     silently omitted) — below MIN_SHARD_FLOWS per shard the collective
-    overhead dominates and the curve stops measuring aggregation.  In
-    smoke mode a FAILED locality point is fatal: CI's payload guard must
-    not pass vacuously because the subprocess crashed."""
+    overhead dominates and the curve stops measuring aggregation.  The
+    locality point's boundary-psum payload shrink is guarded per scenario
+    kind (MIN_PSUM_SHRINK) — the dumbbell's 2-link boundary warrants 10x,
+    a fat-tree's agg/core/WAN cut ~1.5x.  In smoke mode a FAILED locality
+    point is fatal: CI's payload guard must not pass vacuously because
+    the subprocess crashed."""
     n_devices = 2
     sh_ne = min(ne, 300)
     per_shard = n // n_devices
+    min_shrink = MIN_PSUM_SHRINK[kind]
     rates = {}
-    for path_name, locality in (("sharded2-local", True),
-                                ("sharded2", False)):
+    for path_name, locality in paths:
         if per_shard < MIN_SHARD_FLOWS:
-            rec = {"n_flows": n, "n_epochs": sh_ne, "variant": "single",
+            rec = {"n_flows": n, "n_epochs": sh_ne, "variant": variant,
                    "path": path_name, "skipped": True,
                    "reason": f"flows_per_shard {per_shard} < "
                              f"{MIN_SHARD_FLOWS}"}
@@ -339,7 +385,8 @@ def _sharded_points(n: int, ne: int, mode: str, points: list,
             print("  ", json.dumps(rec))
             continue
         try:
-            res = _sharded_point(n, sh_ne, n_devices, locality=locality)
+            res = _sharded_point(n, sh_ne, n_devices, locality=locality,
+                                 kind=kind, k=k)
         except (RuntimeError, subprocess.TimeoutExpired, OSError,
                 json.JSONDecodeError, KeyError, IndexError) as e:
             if mode == "smoke" and locality:
@@ -351,7 +398,7 @@ def _sharded_points(n: int, ne: int, mode: str, points: list,
             # garbage
             print(f"  {path_name} point failed:", str(e)[:200])
             continue
-        rec = _point(n, sh_ne, variant="single", path=path_name,
+        rec = _point(n, sh_ne, variant=variant, path=path_name,
                      warm_s=res["warm_s"])
         rates[path_name] = rec["flow_epochs_per_s"]
         if locality:
@@ -360,15 +407,15 @@ def _sharded_points(n: int, ne: int, mode: str, points: list,
             rec["n_links"] = res["n_links"]
             rec["n_boundary"] = res["n_boundary"]
             rec["psum_payload_shrink"] = round(shrink, 1)
-            if shrink < 10.0:
+            if shrink < min_shrink:
                 raise SystemExit(
-                    f"boundary psum payload guard failed at n={n}: "
-                    f"{res['n_boundary']} boundary links vs "
+                    f"boundary psum payload guard failed at n={n} "
+                    f"({kind}): {res['n_boundary']} boundary links vs "
                     f"{full_payload} full buffer (shrink {shrink:.1f}x "
-                    "< 10x)")
+                    f"< {min_shrink}x)")
         points.append(rec)
     if len(rates) == 2:
-        speedups[f"sharded_locality_vs_full:{n}"] = round(
+        speedups[f"sharded_locality_vs_full:{variant}:{n}"] = round(
             rates["sharded2-local"] / rates["sharded2"], 2)
 
 
@@ -390,7 +437,7 @@ def scaling_curve(mode: str = "full") -> dict:
                 continue            # headline contrast configs only
             if multipath and mode == "smoke":
                 continue
-            net, params, ii, lb = _scenario(n, multipath)
+            net, params, ii, lb, _ = _scenario(n, multipath)
             fast_net = fl.with_layout(net, trim=True) if multipath else net
             cold, warm = _time_simulate(fast_net, params, ne,
                                         is_inter=ii, lb=lb)
@@ -407,6 +454,24 @@ def scaling_curve(mode: str = "full") -> dict:
         # sharded flow axis (2 CPU shards; single-path scenario)
         _sharded_points(n, ne, mode, points, speedups)
 
+    # fat-tree points (the paper's actual topology — PAPER §5.1): the
+    # pod-structured permutation/inter mix at FAT_TREE_PATHS ECMP paths,
+    # single-device layout path + the locality-sharded flow axis whose
+    # plan groups flows by destination pod (boundary = agg/core/WAN cut).
+    # Smoke runs k=4 small; quick/full run the k=8 / 100k-flow headline.
+    ft_k, ft_n = (4, 12_000) if mode == "smoke" else (8, 100_000)
+    ft_ne = 300 if mode == "smoke" else 200
+    variant = f"fat_tree_k{ft_k}"
+    net, params, ii, lb, _ = _scenario(ft_n, True, "fat_tree", ft_k)
+    fast_net = fl.with_layout(net, trim=True)
+    cold, warm = _time_simulate(fast_net, params, ft_ne, is_inter=ii, lb=lb)
+    points.append(_point(ft_n, ft_ne, variant=variant, path="layout",
+                         warm_s=warm, cold_s=cold))
+    ft_paths = ((("sharded2-local", True),) if mode == "smoke" else
+                (("sharded2-local", True), ("sharded2", False)))
+    _sharded_points(ft_n, ft_ne, mode, points, speedups, kind="fat_tree",
+                    k=ft_k, variant=variant, paths=ft_paths)
+
     entry = {
         "meta": {
             "generated": datetime.datetime.now(
@@ -416,7 +481,9 @@ def scaling_curve(mode: str = "full") -> dict:
             "cpu_count": os.cpu_count(),
             "jax": jax.__version__,
             "scenario": "scenarios.dumbbell_scenario, "
-                        "n_bottleneck=n_flows/64, multipath=n_wan=4",
+                        "n_bottleneck=n_flows/64, multipath=n_wan=4; "
+                        "scenarios.fat_tree_spec permutation mix, "
+                        f"n_paths={FAT_TREE_PATHS}",
         },
         "points": points,
         "speedup_layout_vs_reference": speedups,
@@ -425,7 +492,7 @@ def scaling_curve(mode: str = "full") -> dict:
     if mode == "full":
         # acceptance: a completed 1M-flow x 1k-epoch run on the fast path
         n, ne = 1_000_000, 1_000
-        net, params, _, _ = _scenario(n, False)
+        net, params, _, _, _ = _scenario(n, False)
         t0 = time.time()
         final, _ = simulate(net, params, n_epochs=ne)
         jax.block_until_ready(final.cwnd)

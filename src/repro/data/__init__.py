@@ -5,17 +5,40 @@ data stream — no data-loader state in checkpoints.  `ShardedPipeline` builds
 each global batch directly as a sharded jax.Array (one host callback per
 addressable shard — the same pattern a multi-host input pipeline uses),
 with a background prefetch thread keeping `depth` batches in flight.
+
+Prefetch threads and interpreter exit: a pipeline that is never `close()`d
+leaves its daemon thread producing batches forever, and if that thread is
+inside the XLA runtime while CPython tears the process down, the C++ side
+aborts with "terminate called without an active exception" AFTER an
+otherwise green exit.  Every live pipeline is therefore tracked in a weak
+set and stopped by an atexit hook (atexit runs before interpreter
+teardown, so the threads are joined while the runtime is still whole).
+Prefer `close()` (or `with ShardedPipeline(...) as pipe:`) — the hook is
+the crash-proofing backstop, not the API.
 """
 from __future__ import annotations
 
+import atexit
 import queue
 import threading
+import weakref
 from typing import Iterator, Optional
 
 import jax
 import numpy as np
 
 from repro.configs.base import ModelConfig
+
+_LIVE_PIPELINES: "weakref.WeakSet" = weakref.WeakSet()
+
+
+def _close_all_pipelines() -> None:
+    """atexit backstop: stop every still-running prefetch thread."""
+    for pipe in list(_LIVE_PIPELINES):
+        pipe.close()
+
+
+atexit.register(_close_all_pipelines)
 
 
 def synth_batch(cfg: ModelConfig, step: int, batch: int, seq: int,
@@ -52,6 +75,7 @@ class ShardedPipeline:
         self._step = start_step
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._worker, daemon=True)
+        _LIVE_PIPELINES.add(self)
         self._thread.start()
 
     def _make(self, step: int) -> dict:
@@ -87,3 +111,19 @@ class ShardedPipeline:
         except queue.Empty:
             pass
         self._thread.join(timeout=2)
+        if self._thread.is_alive():
+            # the worker re-checks _stop every <= 0.5 s put attempt, so it
+            # can only be finishing one batch build — wait it out rather
+            # than leaving a thread inside the XLA runtime at interpreter
+            # teardown (the C++ abort this close path exists to prevent)
+            self._thread.join(timeout=60)
+        if not self._thread.is_alive():
+            # a thread that STILL hasn't joined stays in the weak set so
+            # the atexit backstop gets another chance at teardown
+            _LIVE_PIPELINES.discard(self)
+
+    def __enter__(self) -> "ShardedPipeline":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

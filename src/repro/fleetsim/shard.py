@@ -133,12 +133,14 @@ def shard_scenario(net: L.FluidNet, params: FleetParams, *,
                    lb: Optional[LbParams] = None,
                    churn: Optional[ChurnParams] = None,
                    mesh=None, locality: bool = True,
-                   plan=None) -> ShardedFleet:
+                   plan=None, link_tier=None) -> ShardedFleet:
     """Compile (net, params, ...) against a locality ShardPlan.
 
     `locality=False` reproduces the PR-3 contiguous-block sharding (full
     link buffer exchanged every epoch) — kept for A/B benchmarking.  An
-    explicit `plan` overrides both.
+    explicit `plan` overrides both.  `link_tier` (a (n_links,) locality
+    array, e.g. FleetScenario.link_tier) feeds the planner's tier score
+    on multi-tier topologies like the fat tree.
     """
     from repro.scenarios.compile_fleetsim import plan_shards
     mesh = mesh if mesh is not None else flow_mesh()
@@ -147,7 +149,8 @@ def shard_scenario(net: L.FluidNet, params: FleetParams, *,
     routes3 = np.asarray(net.routes if net.routes.ndim == 3
                          else net.routes[:, None, :])
     if plan is None:
-        plan = (plan_shards(routes3, net.n_links, n_dev) if locality
+        plan = (plan_shards(routes3, net.n_links, n_dev,
+                            link_tier=link_tier) if locality
                 else _contiguous_plan(n_real, net.n_links, n_dev))
     if plan.n_shards != n_dev or plan.n_real != n_real:
         raise ValueError(
@@ -335,6 +338,7 @@ def steady_state_sharded(net: L.FluidNet, params: FleetParams, *,
                          state0: Optional[FleetState] = None,
                          mesh=None, backend: str = "auto",
                          locality: bool = True, plan=None,
+                         link_tier=None,
                          unroll: int = 1, seed: int = 0):
     """`cc.steady_state` with the flow axis sharded over `mesh` (default:
     all local devices) under a locality ShardPlan — one-shot convenience
@@ -344,7 +348,8 @@ def steady_state_sharded(net: L.FluidNet, params: FleetParams, *,
     permutation, per-shard layouts — is the only per-call host work; the
     executable itself is cached either way)."""
     sf = shard_scenario(net, params, is_inter=is_inter, lb=lb, churn=churn,
-                        mesh=mesh, locality=locality, plan=plan)
+                        mesh=mesh, locality=locality, plan=plan,
+                        link_tier=link_tier)
     return steady_state_prepared(sf, n_warm=n_warm, n_meas=n_meas,
                                  scheme=scheme, backend=backend,
                                  unroll=unroll, state0=state0, seed=seed)

@@ -28,8 +28,8 @@ import numpy as np
 from repro.fleetsim import cc as fleet_cc
 from repro.fleetsim import links as fl
 from repro.netsim.topology import MIB, MS, US
-from repro.scenarios import (Scenario, dumbbell_scenario, spawn_backlogged,
-                             to_fleetsim, to_netsim)
+from repro.scenarios import (Scenario, dumbbell_scenario, fat_tree_spec,
+                             spawn_backlogged, to_fleetsim, to_netsim)
 
 
 def netsim_scenario_rates(spec: Scenario, *, horizon: float = 45 * MS,
@@ -124,5 +124,39 @@ def compare_multipath_steady_state(n_intra: int, n_inter: int, *,
                              intra_rtt=intra_rtt, inter_rtt=inter_rtt,
                              multipath=True, n_wan=n_wan,
                              n_bottleneck=n_bottleneck, seed=seed)
+    return compare_scenario(spec, horizon=horizon, t0=t0,
+                            n_warm=n_warm, n_meas=n_meas)
+
+
+def compare_fat_tree_steady_state(k: int = 4, *,
+                                  n_intra_pod: int = 0, n_cross_pod: int = 6,
+                                  n_inter: int = 0, n_wan: int = 4,
+                                  n_paths: int = 4,
+                                  workload: str = "incast",
+                                  horizon: float = 45 * MS,
+                                  t0: float = 15 * MS,
+                                  n_warm: int = 200_000,
+                                  n_meas: int = 20_000,
+                                  seed: int = 1) -> dict:
+    """Fat-tree acceptance: ONE `fat_tree_spec` (the paper's two-DC k-ary
+    fat tree lifted through Net.path_link_names) compiled to both
+    simulators.  The default is the single-class cross-pod incast — six
+    flows converge on one victim downlink over 6-hop ECMP path-sets.
+
+    Tolerance note (the fat-tree entry in ROADMAP's fidelity-limit list):
+    on multi-tier paths the packet system builds TRANSIENT per-hop
+    queues out of packet bursts, so it marks on upstream hops the fluid
+    expectation (which sees zero occupancy on any under-capacity link)
+    never marks on.  Single-class incast presets agree to ~20-30% per
+    flow with the fluid utilization overshooting by ~10-15%; MIXED-class
+    per-flow comparison is outside the validated regime entirely — the
+    packet simulator's shares are biased toward short-path/short-RTT
+    classes (hop-composed burst marking + feedback delay) where the
+    fluid model converges to the Uno class-fair allocation.  Use class
+    aggregates there, not per-flow positions.
+    """
+    spec = fat_tree_spec(k=k, n_wan=n_wan, n_intra_pod=n_intra_pod,
+                         n_cross_pod=n_cross_pod, n_inter=n_inter,
+                         workload=workload, n_paths=n_paths, seed=seed)
     return compare_scenario(spec, horizon=horizon, t0=t0,
                             n_warm=n_warm, n_meas=n_meas)

@@ -248,14 +248,18 @@ class TwoDCFatTree(Net):
                         down_last))
             return out
         # cross-DC: up-core (16) x WAN link (n_wan) x down-core (16) — sample
+        # max_paths combo INDICES directly (materializing + shuffling all
+        # half^4 * n_wan tuples per host pair made 100k-flow fat-tree
+        # scenario builds take minutes)
         rng = random.Random((src * 131071 + dst) ^ 0xABCDEF)
-        combos = [(a, c, w, a2, c2)
-                  for a in range(half) for c in range(half)
-                  for w in range(self.n_wan)
-                  for a2 in range(half) for c2 in range(half)]
-        rng.shuffle(combos)
+        total = half * half * self.n_wan * half * half
+        picks = rng.sample(range(total), min(self.max_paths, total))
         wan_tag = "B0->B1" if sdc == 0 else "B1->B0"
-        for (a, c, w, a2, c2) in combos[: self.max_paths]:
+        for idx in picks:
+            idx, c2 = divmod(idx, half)
+            idx, a2 = divmod(idx, half)
+            idx, w = divmod(idx, self.n_wan)
+            a, c = divmod(idx, half)
             ci = a * half + c
             ci2 = a2 * half + c2
             out.append((

@@ -12,12 +12,32 @@ Both compilers share the spec's flow ordering and flow->bottleneck
 assignment, so cross-validation (repro.fleetsim.validate) compares
 per-flow rates positionally.  `dumbbell_scenario` builds the inter/intra
 dumbbell both simulators previously hand-rolled separately.
+
+Fat-tree scenarios (`fat_tree_spec`, repro.scenarios.fat_tree): the
+paper's two-DC k-ary fat-tree is lifted into the same spec via
+`netsim.topology.TwoDCFatTree.path_link_names` — pod-structured flow
+groups (intra-pod / cross-pod / inter-DC), "permutation" and "incast"
+workload presets, ECMP path-sets capped at `n_paths`, and per-link
+locality tiers (edge < agg < core < WAN) that `plan_shards` uses to
+group flows by destination pod so the sharded boundary is the
+agg/core/WAN cut.  Fluid-model caveats on multi-tier topologies: ECMP
+is modeled as a static (or adaptively weighted) rate SPLIT across the
+capped path-set, so per-flow hash-collision variance is absent (the
+fluid flow spreads where the packet flow picks one path per subflow),
+and per-hop queue coupling is first-order — every queue on a path sees
+the flow's full offered share simultaneously, where the packet system
+thins downstream arrivals through upstream bottlenecks.  Use netsim for
+collision/ordering/loss claims; use fleetsim for rate allocation and
+parameter sweeps at scale (see ROADMAP.md fidelity limits).
 """
 from repro.scenarios.compile_fleetsim import (FleetScenario, ShardPlan,
                                               fleet_arrays, plan_shards,
                                               to_fleetsim)
 from repro.scenarios.compile_netsim import (ScenarioNet, spawn_backlogged,
                                             to_netsim)
+from repro.scenarios.fat_tree import (TIER_AGG, TIER_CORE, TIER_EDGE,
+                                      TIER_WAN, fat_tree_spec,
+                                      link_tier_from_name, link_tiers)
 from repro.scenarios.spec import (ChurnSpec, FlowGroup, LbSpec, LinkSpec,
                                   Path, PathSet, Scenario,
                                   dumbbell_scenario)
@@ -25,6 +45,8 @@ from repro.scenarios.spec import (ChurnSpec, FlowGroup, LbSpec, LinkSpec,
 __all__ = [
     "ChurnSpec", "FlowGroup", "LbSpec", "LinkSpec", "Path", "PathSet",
     "Scenario", "dumbbell_scenario",
+    "TIER_EDGE", "TIER_AGG", "TIER_CORE", "TIER_WAN",
+    "fat_tree_spec", "link_tier_from_name", "link_tiers",
     "FleetScenario", "ShardPlan", "fleet_arrays", "plan_shards",
     "to_fleetsim",
     "ScenarioNet", "spawn_backlogged", "to_netsim",

@@ -19,6 +19,7 @@ loads entirely locally and psums only the trailing boundary slice.
 """
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple, Optional
 
 import jax.numpy as jnp
@@ -41,6 +42,8 @@ class FleetScenario(NamedTuple):
     lb: Optional[LbParams]           # None -> static split, no EC overhead
     churn: Optional[ChurnParams]     # None -> every flow backlogged
     seed: int
+    link_tier: Optional[np.ndarray] = None   # (n_links,) locality tiers
+    # (host-side; feeds plan_shards — None on single-tier topologies)
 
 
 def _flow_adaptive(g) -> bool:
@@ -149,8 +152,10 @@ def to_fleetsim(spec: Scenario, **make_params_kw) -> FleetScenario:
                             mean_on=jnp.asarray(mean_on, jnp.float32),
                             mean_off=jnp.asarray(mean_off, jnp.float32))
 
+    from repro.scenarios.fat_tree import link_tiers
     return FleetScenario(net=net, params=params, is_inter=is_inter,
-                         lb=lb, churn=churn, seed=spec.seed)
+                         lb=lb, churn=churn, seed=spec.seed,
+                         link_tier=link_tiers(spec))
 
 
 # ------------------------------------------------ locality shard planning
@@ -198,18 +203,29 @@ class ShardPlan(NamedTuple):
         return inv
 
 
-def _home_links(routes3: np.ndarray, n_links: int,
-                n_shards: int) -> np.ndarray:
+def _home_links(routes3: np.ndarray, n_links: int, n_shards: int,
+                link_tier: Optional[np.ndarray] = None):
     """Pick each flow's "home" link — the hop that best localizes it.
 
-    Preference: the most-shared link that is NOT a hub (a link touched by
-    >= ceil(n_flows / n_shards) route entries can never be private to one
-    shard once its flows overflow a shard, so grouping by it buys
-    nothing).  Flows whose every hop is a hub fall back to their rarest
-    hop, which still co-locates flows sharing that hub.  On the standard
-    dumbbell this resolves to the receiver downlink for BOTH flow classes
-    (uplinks are one-flow, the WAN pipe is a hub), leaving the WAN
-    link(s) as the only boundary.
+    Returns (home, no_nonhub): the chosen link per flow plus the mask of
+    flows that had NO non-hub hop to choose from.
+
+    Without tiers, the preference is the most-shared link that is NOT a
+    hub (a link touched by >= ceil(n_flows / n_shards) route entries can
+    never be private to one shard once its flows overflow a shard, so
+    grouping by it buys nothing); flows whose every hop is a hub fall
+    back to their rarest hop.  On the standard dumbbell this resolves to
+    the receiver downlink for BOTH flow classes (uplinks are one-flow,
+    the WAN pipe is a hub), leaving the WAN link(s) as the only boundary.
+
+    With `link_tier` (a (n_links,) locality array, edge < agg < core <
+    WAN — e.g. repro.scenarios.fat_tree.link_tiers), the score is
+    lexicographic (non-hub first, then LOWEST tier, then LATEST hop):
+    every flow homes on its most receiver-side edge link, so a multipath
+    fat-tree — where a shared-entry count alone makes every hop look like
+    a hub and the rarest hop is an arbitrary agg/core link — groups by
+    destination pod and the shard boundary collapses to the agg/core/WAN
+    cut.
     """
     n = routes3.shape[0]
     pidx = np.where(routes3 >= 0, routes3, n_links).reshape(n, -1)
@@ -218,41 +234,77 @@ def _home_links(routes3: np.ndarray, n_links: int,
     hub_ext = np.concatenate(
         [counts >= max(2, -(-n // n_shards)), [True]])
     c = counts_ext[pidx]                          # (n, p*h)
-    score = np.where((c > 0) & ~hub_ext[pidx], c, -1)
-    home = pidx[np.arange(n), np.argmax(score, axis=1)]
-    no_nonhub = score.max(axis=1) < 0
-    if np.any(no_nonhub):
-        rare = np.where(c > 0, c, np.iinfo(np.int64).max)
-        fb = pidx[np.arange(n), np.argmin(rare, axis=1)]
-        home = np.where(no_nonhub, fb, home)
-    return np.where(home >= n_links, 0, home)     # routeless flows -> link 0
+    nonhub_score = np.where((c > 0) & ~hub_ext[pidx], c, -1)
+    no_nonhub = nonhub_score.max(axis=1) < 0
+
+    if link_tier is not None:
+        tiers = np.asarray(link_tier, np.int64)
+        if tiers.shape != (n_links,):
+            raise ValueError(
+                f"link_tier must have shape ({n_links},), got {tiers.shape}")
+        t_span = int(tiers.max() - tiers.min()) + 2 if n_links else 2
+        tier_ext = np.concatenate([tiers - tiers.min(), [t_span - 1]])
+        ph = pidx.shape[1]
+        # lexicographic argmin over (is_hub, tier, prefer-latest-hop);
+        # padding entries (c == 0) are pushed past every real key
+        key = (hub_ext[pidx].astype(np.int64) * t_span + tier_ext[pidx]) \
+            * (ph + 1) + (ph - np.arange(ph))
+        key = np.where(c > 0, key, np.iinfo(np.int64).max)
+        home = pidx[np.arange(n), np.argmin(key, axis=1)]
+    else:
+        home = pidx[np.arange(n), np.argmax(nonhub_score, axis=1)]
+        if np.any(no_nonhub):
+            rare = np.where(c > 0, c, np.iinfo(np.int64).max)
+            fb = pidx[np.arange(n), np.argmin(rare, axis=1)]
+            home = np.where(no_nonhub, fb, home)
+    # routeless flows -> link 0
+    return np.where(home >= n_links, 0, home), no_nonhub
 
 
-def plan_shards(routes, n_links: int, n_shards: int) -> ShardPlan:
+def plan_shards(routes, n_links: int, n_shards: int,
+                link_tier: Optional[np.ndarray] = None) -> ShardPlan:
     """Partition flows by link locality into `n_shards` balanced shards.
 
-    Flows are sorted by home link and cut into equal contiguous chunks
-    (each padded to the common row count with inert flows), so a home
-    group larger than one shard simply straddles the cut and its link is
-    classified boundary.  Boundary status is then derived from the ACTUAL
-    assignment — a link is private iff flows of at most one shard touch
-    it — so the relabeled id space is correct whatever the heuristic did.
+    Flows are sorted by home link (`_home_links`; `link_tier` enables the
+    locality-tier score for multi-tier topologies like the fat tree) and
+    cut into equal contiguous chunks (each padded to the common row count
+    with inert flows), so a home group larger than one shard simply
+    straddles the cut and its link is classified boundary.  Boundary
+    status is then derived from the ACTUAL assignment — a link is private
+    iff flows of at most one shard touch it — so the relabeled id space
+    is correct whatever the heuristic did.
+
+    Degenerate case: when EVERY flow's every hop is a hub and no tiers
+    are given, the home grouping carries no locality signal at all (the
+    rarest-hop pick is arbitrary), so flows are dealt round-robin into
+    shards instead — balanced real-flow counts by construction — with a
+    warning suggesting `link_tier`.
     """
     r = np.asarray(routes)
     r3 = r if r.ndim == 3 else r[:, None, :]
     n = r3.shape[0]
     if n_shards < 1:
         raise ValueError(f"n_shards must be >= 1, got {n_shards}")
-    home = _home_links(r3, n_links, n_shards)
-    order = np.argsort(home, kind="stable")
+    home, no_nonhub = _home_links(r3, n_links, n_shards, link_tier)
     rows = -(-n // n_shards)
     gather = np.full((n_shards, rows), n, np.int32)
-    for s in range(n_shards):
-        chunk = order[s * rows:(s + 1) * rows]
-        gather[s, :chunk.shape[0]] = chunk
-
     flow_shard = np.empty(n, np.int32)
-    flow_shard[order] = np.minimum(np.arange(n) // rows, n_shards - 1)
+    if link_tier is None and n and no_nonhub.all() and n_shards > 1:
+        warnings.warn(
+            "plan_shards: every hop of every flow is a hub — no home link "
+            "localizes anything; dealing flows round-robin into balanced "
+            "shards (pass link_tier for locality grouping on multi-tier "
+            "topologies)", RuntimeWarning, stacklevel=2)
+        flow_shard[:] = np.arange(n, dtype=np.int32) % n_shards
+        for s in range(n_shards):
+            chunk = np.arange(s, n, n_shards, dtype=np.int32)
+            gather[s, :chunk.shape[0]] = chunk
+    else:
+        order = np.argsort(home, kind="stable")
+        for s in range(n_shards):
+            chunk = order[s * rows:(s + 1) * rows]
+            gather[s, :chunk.shape[0]] = chunk
+        flow_shard[order] = np.minimum(np.arange(n) // rows, n_shards - 1)
     flat = r3.reshape(n, -1)
     valid = flat >= 0
     touched = np.zeros((n_shards, n_links), bool)

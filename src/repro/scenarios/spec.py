@@ -40,6 +40,12 @@ class LinkSpec(NamedTuple):
     (cap_bdps * class BDP); aggregated pipes (n parallel links modeled as
     one) set it to the aggregation factor so per-byte marking matches the
     disaggregated layout exactly.
+
+    `tier` is the locality tier used by the shard planner
+    (repro.scenarios.plan_shards): 0 = most local (host/edge), higher =
+    more shared (agg < core < WAN).  On a single-tier topology (the
+    dumbbell) leave it 0 — the planner then uses its hub-count heuristic
+    alone.
     """
     name: str
     rate: float                  # service rate (bytes/ns)
@@ -47,6 +53,7 @@ class LinkSpec(NamedTuple):
     qcap: float = 1 * MIB        # physical queue capacity (bytes)
     wan: bool = False            # inter-DC link: phantom cap uses inter BDP
     vcap_scale: float = 1.0
+    tier: int = 0                # locality tier (edge < agg < core < WAN)
 
 
 class LbSpec(NamedTuple):

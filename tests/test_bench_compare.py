@@ -1,0 +1,70 @@
+"""benchmarks/compare.py report semantics: measured -> skipped transitions
+must surface the lost value, and garbage (sub-1 fe/s) old values must not
+fabricate a plausible ratio through max(old, 1)."""
+import pytest
+
+from benchmarks.compare import compare_last_two
+
+
+def _entry(sha, points):
+    return {"meta": {"git_sha": sha, "generated": "t", "mode": "quick"},
+            "points": points}
+
+
+def _pt(n, path, fes=None, skipped=False, variant="single"):
+    p = {"n_flows": n, "variant": variant, "path": path}
+    if skipped:
+        p.update(skipped=True, reason="flows_per_shard too small")
+    else:
+        p["flow_epochs_per_s"] = fes
+    return p
+
+
+def test_measured_to_skipped_transition_is_flagged(capsys):
+    hist = [_entry("aaa", [_pt(1000, "layout", 5_000_000)]),
+            _entry("bbb", [_pt(1000, "layout", skipped=True)])]
+    compare_last_two(hist)
+    out = capsys.readouterr().out
+    assert "5.00M" in out                      # the prior value survives
+    assert "was measured in previous entry" in out
+
+
+def test_skipped_to_skipped_stays_plain(capsys):
+    hist = [_entry("aaa", [_pt(1000, "layout", skipped=True)]),
+            _entry("bbb", [_pt(1000, "layout", skipped=True)])]
+    compare_last_two(hist)
+    out = capsys.readouterr().out
+    assert "skipped (flows_per_shard too small)" in out
+    assert "was measured" not in out
+
+
+def test_sub_1_fes_old_value_does_not_fake_ratio(capsys):
+    hist = [_entry("aaa", [_pt(1000, "layout", 0.4)]),
+            _entry("bbb", [_pt(1000, "layout", 2_000_000)])]
+    compare_last_two(hist)
+    out = capsys.readouterr().out
+    assert "n/a" in out
+    # the old max(old, 1) path printed ratio == new (e.g. "2000000.00x")
+    assert "2000000" not in out
+
+
+def test_normal_ratio_and_regression_flag(capsys):
+    hist = [_entry("aaa", [_pt(1000, "layout", 4_000_000),
+                           _pt(1000, "reference", 1_000_000)]),
+            _entry("bbb", [_pt(1000, "layout", 2_000_000),
+                           _pt(1000, "reference", 1_100_000)])]
+    compare_last_two(hist)
+    out = capsys.readouterr().out
+    assert "( 0.50x)  <-- regression" in out
+    assert "( 1.10x)" in out
+
+
+def test_fat_tree_variant_points_join_on_variant(capsys):
+    hist = [_entry("aaa", [_pt(12_000, "layout", 3_000_000,
+                               variant="fat_tree_k4")]),
+            _entry("bbb", [_pt(12_000, "layout", 3_300_000,
+                               variant="fat_tree_k4")])]
+    compare_last_two(hist)
+    out = capsys.readouterr().out
+    assert "fat_tree_k4/layout" in out
+    assert "( 1.10x)" in out

@@ -1,0 +1,346 @@
+"""Fat-tree scenarios end-to-end: TwoDCFatTree path metadata, the
+fat_tree_spec scenario builder (ordering, determinism, both compilers),
+and the locality-tier shard planning that makes the fat tree shardable
+(boundary = agg/core/WAN cut; round-robin fallback on all-hub plans)."""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.netsim.topology import TwoDCFatTree
+from repro.scenarios import (TIER_AGG, TIER_EDGE, TIER_WAN, fat_tree_spec,
+                             fleet_arrays, link_tier_from_name, link_tiers,
+                             plan_shards, to_fleetsim, to_netsim)
+
+
+# --------------------------------------------- Net.path_link_names coverage
+
+def test_path_link_names_cardinality_and_resolution():
+    """Every (src, dst) path-set has <= max_paths paths and every name
+    resolves to a link of the net."""
+    net = TwoDCFatTree(k=4, n_wan=4, max_paths=6)
+    pairs = [(0, 1),              # same edge
+             (0, 2),              # same pod, different edge
+             (0, 5),              # same DC, different pod
+             (0, net.hosts_per_dc + 3),      # cross-DC
+             (net.hosts_per_dc + 1, 2)]      # cross-DC, reverse direction
+    for src, dst in pairs:
+        names = net.path_link_names(src, dst)
+        assert 1 <= len(names) <= net.max_paths, (src, dst)
+        assert len(set(names)) == len(names)         # no duplicate paths
+        for path in names:
+            for name in path:
+                assert name in net.links, name
+
+
+def test_path_link_names_shapes_intra_vs_inter():
+    """Hop counts by class: 2 (same edge), 4 (same pod), 6 (cross-pod),
+    9 (cross-DC incl. border + WAN); endpoints are the host links."""
+    net = TwoDCFatTree(k=4, n_wan=4, max_paths=8)
+    half = 2
+
+    same_edge = net.path_link_names(0, 1)
+    assert [len(p) for p in same_edge] == [2]
+    same_pod = net.path_link_names(0, 2)
+    assert [len(p) for p in same_pod] == [4] * half
+    cross_pod = net.path_link_names(0, 5)
+    assert [len(p) for p in cross_pod] == [6] * (half * half)
+    inter = net.path_link_names(0, net.hosts_per_dc)
+    assert all(len(p) == 9 for p in inter)
+    for ps, dst in [(same_edge, 1), (same_pod, 2), (cross_pod, 5),
+                    (inter, net.hosts_per_dc)]:
+        for p in ps:
+            assert p[0] == "h0->e"
+            assert p[-1] == f"e->h{dst}"
+    # cross-DC paths traverse exactly one WAN link, in the right direction
+    for p in inter:
+        assert sum("B0->B1" in name for name in p) == 1
+    back = net.path_link_names(net.hosts_per_dc, 0)
+    for p in back:
+        assert sum("B1->B0" in name for name in p) == 1
+
+
+def test_path_link_names_deterministic_inter_sampling():
+    """Cross-DC ECMP sampling is a pure function of (seed, src, dst)."""
+    a = TwoDCFatTree(k=4, n_wan=4, max_paths=5, seed=3)
+    b = TwoDCFatTree(k=4, n_wan=4, max_paths=5, seed=3)
+    for dst in (a.hosts_per_dc, a.hosts_per_dc + 7):
+        assert a.path_link_names(0, dst) == b.path_link_names(0, dst)
+
+
+# ------------------------------------------------------- fat_tree_spec
+
+def test_fat_tree_spec_flow_ordering_intra_first():
+    spec = fat_tree_spec(k=4, n_wan=4, n_intra_pod=3, n_cross_pod=2,
+                         n_inter=4, seed=0)
+    assert [g.name for g in spec.groups] == ["intra_pod", "cross_pod",
+                                             "inter"]
+    assert [g.inter for g in spec.groups] == [False, False, True]
+    order = [(g.name, k) for _, g, k in spec.flow_groups()]
+    assert order[:3] == [("intra_pod", 0), ("intra_pod", 1),
+                        ("intra_pod", 2)]
+    assert order[-1] == ("inter", 3)
+    assert spec.n_flows == 9
+    # compiled is_inter matches the declaration order positionally
+    _, _, _, is_inter = fleet_arrays(spec)
+    assert np.asarray(is_inter).tolist() == [False] * 5 + [True] * 4
+
+
+def test_fat_tree_spec_deterministic_under_seed():
+    a = fat_tree_spec(k=4, n_flows=40, seed=7)
+    b = fat_tree_spec(k=4, n_flows=40, seed=7)
+    assert a == b
+    c = fat_tree_spec(k=4, n_flows=40, seed=8)
+    assert c != a
+
+
+def test_fat_tree_spec_compiles_to_both_simulators():
+    spec = fat_tree_spec(k=4, n_wan=4, n_flows=24, n_paths=4, seed=2)
+    fs = to_fleetsim(spec)
+    assert fs.net.routes.shape[0] == 24
+    assert fs.net.routes.shape[1] <= 4          # ECMP cap honored
+    assert fs.lb is not None                    # inter group is adaptive
+    assert fs.link_tier is not None
+    ns = to_netsim(spec)
+    assert set(ns.links) == {l.name for l in spec.links}
+    # WAN phantom capacity classes agree with the spec flags
+    wan = [l for l in spec.links if l.wan]
+    assert len(wan) == 2 * 4                    # both directions x n_wan
+    assert all("B0->B1" in l.name or "B1->B0" in l.name for l in wan)
+
+
+def test_fat_tree_spec_n_flows_mix_split():
+    spec = fat_tree_spec(k=4, n_flows=10, mix=(0.25, 0.25, 0.5), seed=0)
+    assert [g.n for g in spec.groups] == [2, 3, 5] or \
+        [g.n for g in spec.groups] == [3, 2, 5]
+    assert spec.n_flows == 10
+
+
+def test_fat_tree_incast_converges_on_victim():
+    spec = fat_tree_spec(k=4, n_flows=30, workload="incast", seed=1)
+    victim_down = "e->h0"                       # victim host(0,0,0,0)
+    for _, g, k in spec.flow_groups():
+        for path in g.path_set(k):
+            assert path[-1] == victim_down
+
+
+def test_fat_tree_permutation_no_self_flows():
+    spec = fat_tree_spec(k=4, n_flows=64, seed=5)
+    for _, g, k in spec.flow_groups():
+        for path in g.path_set(k):
+            src_up, dst_down = path[0], path[-1]
+            assert src_up != dst_down
+            assert src_up.split("->")[0][1:] != dst_down.split("->")[1][1:]
+
+
+def test_link_tiers_classification():
+    assert link_tier_from_name("h17->e") == TIER_EDGE
+    assert link_tier_from_name("e->h203") == TIER_EDGE
+    assert link_tier_from_name("d0p3e1->a0") == TIER_AGG
+    assert link_tier_from_name("d1p0a1->e0") == TIER_AGG
+    assert link_tier_from_name("d0p3a1->c3") == 2
+    assert link_tier_from_name("d1c12->p0a3") == 2
+    assert link_tier_from_name("d0c5->B") == TIER_WAN
+    assert link_tier_from_name("d1B->c2") == TIER_WAN
+    assert link_tier_from_name("B0->B1.3") == TIER_WAN
+    spec = fat_tree_spec(k=4, n_wan=4, n_flows=8, seed=0)
+    tiers = link_tiers(spec)
+    assert tiers is not None and tiers.shape == (len(spec.links),)
+    # the dumbbell has no tier info -> None (planner falls back cleanly)
+    from repro.scenarios import dumbbell_scenario
+    assert link_tiers(dumbbell_scenario(2, 2)) is None
+
+
+# --------------------------------------- tiered locality shard planning
+
+def _boundary_tiers(fs, plan):
+    return fs.link_tier[plan.new2old[plan.n_links - plan.n_boundary:]]
+
+
+def test_plan_boundary_is_agg_core_cut_on_permutation():
+    """Single-round cross-pod permutation (each host sends and receives
+    exactly one flow): with pod-aligned shards the partition is PERFECT
+    (boundary empty — pod-to-pod traffic is disjoint per shard), and with
+    shards finer than a pod the boundary is EXACTLY the agg/core cut —
+    no edge link is ever shared between shards."""
+    spec = fat_tree_spec(k=4, n_wan=4, n_cross_pod=32, seed=3)
+    fs = to_fleetsim(spec)
+    routes = np.asarray(fs.net.routes)
+    for pod_aligned_shards in (4, 8):   # >= 1 whole dst pod per shard
+        pod_aligned = plan_shards(routes, fs.net.n_links,
+                                  pod_aligned_shards,
+                                  link_tier=fs.link_tier)
+        assert pod_aligned.n_boundary == 0
+    plan = plan_shards(routes, fs.net.n_links, 16, link_tier=fs.link_tier)
+    assert plan.n_boundary > 0
+    bt = _boundary_tiers(fs, plan)
+    assert int(bt.min()) >= TIER_AGG
+    # and every edge link sits in some shard's private range
+    priv = fs.link_tier[plan.new2old[:plan.n_links - plan.n_boundary]]
+    n_edge = int((fs.link_tier == TIER_EDGE).sum())
+    assert int((priv == TIER_EDGE).sum()) == n_edge
+
+
+def test_plan_tiered_beats_rarest_hop_on_multipath_inter():
+    """The motivating regression: on a multipath inter-DC fat tree every
+    hop is 'shared', the old rarest-hop fallback scattered flows across
+    arbitrary core links, and the boundary exploded.  The tier score
+    groups by destination pod instead."""
+    spec = fat_tree_spec(k=4, n_wan=4, n_inter=64, n_paths=8, seed=3)
+    fs = to_fleetsim(spec)
+    routes = np.asarray(fs.net.routes)
+    tiered = plan_shards(routes, fs.net.n_links, 2,
+                         link_tier=fs.link_tier)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        plain = plan_shards(routes, fs.net.n_links, 2)
+    assert tiered.n_boundary < plain.n_boundary
+    assert tiered.n_boundary <= fs.net.n_links // 4
+
+
+def test_plan_tiered_mixed_keeps_downlinks_private():
+    """Mixed intra/cross/inter traffic: receiver downlinks stay private
+    (flows home on them), so any edge-tier boundary links are sender
+    uplinks whose flows straddle shards."""
+    spec = fat_tree_spec(k=4, n_wan=4, n_flows=256, seed=3)
+    fs = to_fleetsim(spec)
+    plan = plan_shards(np.asarray(fs.net.routes), fs.net.n_links, 2,
+                       link_tier=fs.link_tier)
+    names = [l.name for l in spec.links]
+    edge_boundary = [
+        names[old] for old in plan.new2old[plan.n_links - plan.n_boundary:]
+        if fs.link_tier[old] == TIER_EDGE]
+    assert all(n.startswith("h") for n in edge_boundary), edge_boundary
+
+
+def test_plan_tiered_validates_tier_shape():
+    spec = fat_tree_spec(k=4, n_wan=4, n_flows=16, seed=0)
+    fs = to_fleetsim(spec)
+    with pytest.raises(ValueError, match="link_tier"):
+        plan_shards(np.asarray(fs.net.routes), fs.net.n_links, 2,
+                    link_tier=np.zeros(3, np.int32))
+
+
+# ------------------------------------------- all-hub round-robin fallback
+
+def test_plan_all_hub_falls_back_to_round_robin_with_warning():
+    """Every flow's every hop a hub and no tiers: the planner must warn
+    and deal flows round-robin — balanced real-flow counts (difference
+    <= 1), not whatever the rarest-hop sort produced."""
+    n, n_links, n_shards = 10, 2, 4
+    routes = np.tile(np.array([0, 1], np.int32), (n, 1))   # all share both
+    with pytest.warns(RuntimeWarning, match="round-robin"):
+        plan = plan_shards(routes, n_links, n_shards)
+    real_per_shard = [(plan.gather[s] < plan.n_real).sum()
+                      for s in range(n_shards)]
+    assert max(real_per_shard) - min(real_per_shard) <= 1
+    # the permutation + relabeling invariants still hold
+    flat = plan.flat_gather
+    assert sorted(flat[flat < n].tolist()) == list(range(n))
+    assert sorted(plan.new2old.tolist()) == list(range(n_links))
+    assert plan.n_boundary == n_links       # everything genuinely shared
+
+
+def test_cross_validation_fat_tree_incast():
+    """Acceptance: fat_tree_spec(k=4) compiled to BOTH simulators, the
+    cross-pod incast preset — fluid steady-state per-flow rates within
+    the documented fat-tree tolerance of the packet simulator (~30% per
+    flow, utilization within 0.15; looser than the dumbbell's 15%
+    because the fluid model carries no per-hop transient queues — see
+    compare_fat_tree_steady_state's docstring and ROADMAP)."""
+    from repro.fleetsim.validate import compare_fat_tree_steady_state
+    res = compare_fat_tree_steady_state()
+    assert res["max_rel_err"] < 0.35, res
+    assert abs(res["util_fluid"] - res["util_netsim"]) < 0.15, res
+
+
+def test_sharded_fat_tree_one_device_mesh_matches_single():
+    """The whole sharded pipeline (tiered plan, permutation, relabeling,
+    stacked layouts, halo over a WIDE boundary slice, reassembly) on a
+    fat-tree spec with adaptive LB must reproduce the plain steady state
+    on a 1-device mesh — runs in-process on any host."""
+    from repro.fleetsim import steady_state
+    from repro.fleetsim.shard import flow_mesh, steady_state_sharded
+    spec = fat_tree_spec(k=4, n_wan=4, n_flows=24, n_paths=4,
+                         workload="incast", seed=2)
+    fs = to_fleetsim(spec)
+    _, r1 = steady_state(fs.net, fs.params, n_warm=2000, n_meas=500,
+                         is_inter=fs.is_inter, lb=fs.lb)
+    _, r2 = steady_state_sharded(fs.net, fs.params, n_warm=2000,
+                                 n_meas=500, is_inter=fs.is_inter,
+                                 lb=fs.lb, mesh=flow_mesh(1),
+                                 link_tier=fs.link_tier)
+    np.testing.assert_allclose(np.asarray(r2), np.asarray(r1), atol=1e-5)
+
+
+@pytest.mark.slow
+def test_sharded_fat_tree_matches_single_device():
+    """4 CPU shards on the fat tree: the tiered plan's agg/core/WAN halo
+    (a boundary slice hundreds of links wide, unlike the dumbbell's 2)
+    still reproduces the single-device steady state to float-sum
+    tolerance, with per-link queue state reassembled from the owners."""
+    import json
+    import subprocess
+    import sys
+    code = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, numpy as np, json
+from repro.fleetsim import steady_state
+from repro.fleetsim.shard import steady_state_sharded
+from repro.scenarios import fat_tree_spec, plan_shards, to_fleetsim
+
+fs = to_fleetsim(fat_tree_spec(k=4, n_wan=4, n_flows=30, n_paths=4,
+                               seed=5))
+s1, r1 = steady_state(fs.net, fs.params, n_warm=4000, n_meas=1000,
+                      is_inter=fs.is_inter, lb=fs.lb)
+# chaos yardstick: the adaptive-LB dynamics on 9-hop paths amplify pure
+# float-summation-order differences (phantom queues near load == drain
+# integrate rate noise over thousands of epochs); two single-device
+# backends bound the noise floor any sharded run can be held to
+s1b, r1b = steady_state(fs.net, fs.params, n_warm=4000, n_meas=1000,
+                        is_inter=fs.is_inter, lb=fs.lb,
+                        backend="reference")
+s2, r2 = steady_state_sharded(fs.net, fs.params, n_warm=4000, n_meas=1000,
+                              is_inter=fs.is_inter, lb=fs.lb,
+                              link_tier=fs.link_tier)
+plan = plan_shards(np.asarray(fs.net.routes), fs.net.n_links, 4,
+                   link_tier=fs.link_tier)
+out = {
+  "err": float(np.max(np.abs(np.asarray(r1) - np.asarray(r2)))),
+  "noise": float(np.max(np.abs(np.asarray(r1) - np.asarray(r1b)))),
+  "scale": float(np.max(np.abs(np.asarray(r1)))),
+  "err_q": float(np.max(np.abs(np.asarray(s1.q_phantom) -
+                               np.asarray(s2.q_phantom)))),
+  "noise_q": float(np.max(np.abs(np.asarray(s1.q_phantom) -
+                                 np.asarray(s1b.q_phantom)))),
+  "q_scale": float(np.max(np.asarray(s1.q_phantom))),
+  "n_boundary": plan.n_boundary, "n_links": plan.n_links,
+}
+print(json.dumps(out))
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    res = json.loads(out.stdout.strip().splitlines()[-1])
+    # the sharded run must sit at the same noise floor as a single-device
+    # backend swap (pure reduction-order chaos), not above it
+    tol = max(1e-4 * max(1.0, res["scale"]), 3.0 * res["noise"])
+    assert res["err"] < tol, res
+    tol_q = max(2e-3 * max(1.0, res["q_scale"]), 3.0 * res["noise_q"])
+    assert res["err_q"] <= tol_q, res
+    assert 0 < res["n_boundary"] < res["n_links"]
+
+
+def test_plan_all_hub_no_warning_cases():
+    """No round-robin warning when tiers are given, when a single shard
+    is requested, or on plans with private structure."""
+    routes = np.tile(np.array([0, 1], np.int32), (10, 1))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", RuntimeWarning)
+        plan_shards(routes, 2, 4, link_tier=np.array([0, 1]))
+        plan_shards(routes, 2, 1)
+        # a dumbbell-ish plan (private uplinks) never hits the fallback
+        r2 = np.stack([np.arange(10, dtype=np.int32),
+                       np.full(10, 10, np.int32)], axis=1)
+        plan_shards(r2, 11, 2)

@@ -190,6 +190,7 @@ def _shards_touching(routes, n_links, plan):
     return touched
 
 
+@pytest.mark.filterwarnings("ignore:plan_shards:RuntimeWarning")
 @pytest.mark.parametrize("n_shards", [2, 3, 4])
 def test_plan_shards_invariants(n_shards):
     """gather is a padded permutation of the flows, the link relabeling is

@@ -62,18 +62,26 @@ def test_restart_drill(tmp_path):
     sup = ft.Supervisor(ft.FTConfig(ckpt_dir=str(tmp_path), ckpt_every=3,
                                     async_ckpt=False), state_template=state)
 
+    pipes = []
+
     def batches(start=0):
         pipe = data.ShardedPipeline(CFG, batch=2, seq=16, start_step=start)
-        return iter(pipe)
+        pipes.append(pipe)          # closed below: a leaked prefetch thread
+        return iter(pipe)           # aborts interpreter teardown (see data)
 
-    with pytest.raises(ft.InjectedFailure):
-        sup.run(state, step, batches(), n_steps=10,
-                inject=ft.fail_at(7))
-    assert ckpt.latest_step(tmp_path) == 5          # ckpts at steps 2 and 5
+    try:
+        with pytest.raises(ft.InjectedFailure):
+            sup.run(state, step, batches(), n_steps=10,
+                    inject=ft.fail_at(7))
+        assert ckpt.latest_step(tmp_path) == 5      # ckpts at steps 2 and 5
 
-    sup2 = ft.Supervisor(ft.FTConfig(ckpt_dir=str(tmp_path), ckpt_every=3,
-                                     async_ckpt=False), state_template=state)
-    state2, last = sup2.run(_state(), step, batches(6), n_steps=10)
+        sup2 = ft.Supervisor(ft.FTConfig(ckpt_dir=str(tmp_path),
+                                         ckpt_every=3, async_ckpt=False),
+                             state_template=state)
+        state2, last = sup2.run(_state(), step, batches(6), n_steps=10)
+    finally:
+        for pipe in pipes:
+            pipe.close()
     assert last == 10
     assert any(e["kind"] == "resume" and e["step"] == 5 for e in sup2.events)
 
@@ -96,6 +104,40 @@ def test_data_determinism():
     b3 = data.synth_batch(CFG, 6, 4, 32, seed=1)
     np.testing.assert_array_equal(b1["inputs"], b2["inputs"])
     assert not np.array_equal(b1["inputs"], b3["inputs"])
+
+
+def test_leaked_pipeline_exits_cleanly():
+    """Regression: a ShardedPipeline that is never close()d used to leave
+    its daemon prefetch thread inside the XLA runtime at interpreter exit,
+    aborting the process with "terminate called without an active
+    exception" AFTER a green run.  The atexit backstop in repro.data must
+    keep the exit clean."""
+    code = """
+import jax
+from repro import data
+from repro.configs.base import reduced
+from repro.configs.registry import get_config
+cfg = reduced(get_config("smollm-135m"))
+pipes = [data.ShardedPipeline(cfg, batch=2, seq=16) for _ in range(3)]
+for p in pipes:
+    next(p)                     # threads hot, touching jax per batch
+print("ran")                    # exit WITHOUT close(): atexit must cover us
+"""
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=300)
+    assert out.returncode == 0, (out.returncode, out.stderr[-2000:])
+    assert "terminate called" not in out.stderr
+    assert "ran" in out.stdout
+
+
+def test_pipeline_close_all_backstop():
+    """The atexit hook stops every live prefetch thread (and is idempotent
+    with an explicit close)."""
+    p = data.ShardedPipeline(CFG, batch=2, seq=16)
+    assert p._thread.is_alive()
+    data._close_all_pipelines()
+    assert not p._thread.is_alive()
+    p.close()                     # explicit close after the hook is a no-op
 
 
 def test_pipeline_order_and_restart():
