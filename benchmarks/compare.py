@@ -4,10 +4,15 @@ The benchmark file is a trajectory (one appended entry per
 `fleetsim_sweep --scaling` run, keyed by git SHA + date).  This tool joins
 the last two entries on (n_flows, variant, path) and prints flow-epochs/s
 old -> new with the ratio, flagging regressions; points skipped or missing
-on either side are listed as such.  `--all` prints the whole trajectory of
+on either side are listed as such.  Points carrying a reliability config
+(the recovery-sweep grid records its EC geometry, debounce, NACK quantum
+and loss-MD knobs under "rel") are only compared when those knobs match —
+otherwise the pair is reported incomparable, naming the changed knobs,
+instead of printing a ratio that would misread a configuration change as
+a performance delta.  `--all` prints the whole trajectory of
 one metric per config instead.  Exit code is always 0 — this is a report,
 not a gate (the CI gates are the smoke step's wall-clock timeout and the
-boundary-payload guard inside fleetsim_sweep).
+boundary-payload + fast-path guards inside fleetsim_sweep).
 """
 from __future__ import annotations
 
@@ -26,6 +31,14 @@ def _fmt(v: float) -> str:
 
 def _points(entry: dict) -> dict:
     return {_key(p): p for p in entry.get("points", [])}
+
+
+def _rel_diff(ra, rb) -> str:
+    """Name the reliability knobs that differ between two points."""
+    if ra is None or rb is None:
+        return "rel config " + ("added" if ra is None else "removed")
+    keys = [k for k in sorted(set(ra) | set(rb)) if ra.get(k) != rb.get(k)]
+    return ", ".join(f"{k}: {ra.get(k)} -> {rb.get(k)}" for k in keys)
 
 
 def compare_last_two(hist: list) -> None:
@@ -54,6 +67,14 @@ def compare_last_two(hist: list) -> None:
             continue
         if a is None or a.get("skipped"):
             print(f"  {name}: new  {_fmt(b['flow_epochs_per_s'])} fe/s")
+            continue
+        if a.get("rel") != b.get("rel"):
+            # a recovery point timed under different (k, r) / debounce /
+            # quantum knobs measures a different state machine — a ratio
+            # would read config drift as a perf delta
+            print(f"  {name}: reliability config changed "
+                  f"({_rel_diff(a.get('rel'), b.get('rel'))}) — "
+                  "incomparable")
             continue
         old, new = a["flow_epochs_per_s"], b["flow_epochs_per_s"]
         if old < 1.0:

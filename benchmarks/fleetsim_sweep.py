@@ -32,6 +32,14 @@ Acceptance targets:
     pod-grouping tiered ShardPlan.  The psum payload-shrink guard is
     parameterized per scenario kind (MIN_PSUM_SHRINK): 10x on the
     dumbbell's 2-link boundary, 1.5x on the fat-tree's agg/core/WAN cut.
+  * ISSUE 6: a loss-recovery point — one jitted recovery_sweep grid
+    (dynamic EC + NACK state machine, overload x debounce) whose entry
+    records the reliability config (EC geometry, debounce, NACK quantum,
+    loss MD) so compare.py refuses to diff runs with different recovery
+    knobs; plus the smoke-mode fast-path guard asserting the
+    reliability-DISABLED 10k layout point holds its throughput vs the
+    last comparable trajectory entry (rel=None compiles the machine out
+    — the guard keeps that claim honest).
 
 Reports: jitted single-scenario rate (compile time separated out), the same
 1k-flow scenario's steady utilization/fairness as a sanity check, the
@@ -225,8 +233,11 @@ def _dump_scenario(n_flows: int, kind: str = "dumbbell",
         _DUMP_DIR.append(pathlib.Path(
             tempfile.mkdtemp(prefix="fleetsim_bench_")))
     path = _DUMP_DIR[0] / f"scn_{kind}_{n_flows}.npz"
+    # None-valued optional fields (layout, p_loss on lossless nets) would
+    # pickle as object arrays the allow_pickle=False load refuses
     arrays = {f"net_{f}": np.asarray(getattr(net, f))
-              for f in net._fields if f != "layout"}
+              for f in net._fields
+              if f != "layout" and getattr(net, f) is not None}
     arrays.update({f"par_{f}": np.asarray(getattr(params, f))
                    for f in params._fields})
     if tier is not None:
@@ -288,7 +299,7 @@ from repro.fleetsim.state import FleetParams, LbParams
 from repro.fleetsim.shard import shard_scenario, steady_state_prepared
 z = np.load({str(scn)!r})
 net = FluidNet(**{{f: z["net_" + f]
-                   for f in FluidNet._fields if f != "layout"}})
+                   for f in FluidNet._fields if "net_" + f in z}})
 p = FleetParams(**{{f: z["par_" + f] for f in FleetParams._fields}})
 jnp = jax.numpy
 tier = z["link_tier"] if "link_tier" in z else None
@@ -322,6 +333,86 @@ print(json.dumps({{"warm_s": best, "n_links": int(sf.plan.n_links),
 # layout-path epoch counts per size (reference runs use ~1/4 of these so
 # the slow scatter path doesn't dominate benchmark wall-clock)
 _CURVE_EPOCHS = {1_000: 20_000, 10_000: 2_000, 100_000: 200, 1_000_000: 40}
+
+# recovery-sweep grid for the trajectory point (ISSUE 6): one EC geometry
+# x two overloads x two debounce settings — small enough for the CI smoke
+# step, wide enough that a broken NACK/retransmit path shows up as a
+# zeroed retx/rec ratio rather than only as a crash
+_RECOVERY_GRID = {"overloads": (1.5, 3.0), "ec_configs": ((8, 2),),
+                  "debounce_rtts": (0.0, 1.0)}
+
+# smoke-mode fast-path guard: the 10k-flow layout point (reliability
+# DISABLED — the pre-existing hot path) must not lose more than this
+# fraction of throughput vs the last comparable trajectory entry (same
+# mode + cpu_count; cross-machine entries are not comparable).  Looser
+# than the 10% local acceptance bar because shared CI runners are noisy.
+_SMOKE_GUARD_RATIO = float(os.environ.get("FLEETSIM_SMOKE_GUARD", "0.7"))
+
+
+def _recovery_point(mode: str) -> dict:
+    """Time one jitted recovery_sweep grid and record its reliability
+    config alongside the throughput — entries with different (k, r) /
+    debounce / quantum knobs are flagged incomparable by compare.py."""
+    from repro.fleetsim.sweeps import recovery_sweep
+    n_inter = 2_000 if mode == "smoke" else 20_000
+    n_warm = 4_000 if mode == "smoke" else 20_000
+    n_meas = 1_000 if mode == "smoke" else 10_000
+    kw = dict(_RECOVERY_GRID, n_inter=n_inter, n_warm=n_warm,
+              n_meas=n_meas)
+    t0 = time.time()
+    res = recovery_sweep(**kw)
+    jax.block_until_ready(res["rates"])
+    cold = time.time() - t0
+    t0 = time.time()
+    res = recovery_sweep(**kw)
+    jax.block_until_ready(res["rates"])
+    warm = time.time() - t0
+    cells = int(res["util"].size)
+    rec = _point(n_inter, cells * (n_warm + n_meas), variant="recovery",
+                 path="grid", warm_s=warm, cold_s=cold)
+    rec["cells"] = cells
+    rec["rel"] = res["rel_config"]
+    rec["util_range"] = [round(float(np.min(res["util"])), 4),
+                         round(float(np.max(res["util"])), 4)]
+    rec["retx_ratio_max"] = round(float(np.max(res["retx_ratio"])), 5)
+    rec["rec_ratio_max"] = round(float(np.max(res["rec_ratio"])), 5)
+    if not np.isfinite(np.asarray(res["util"])).all():
+        raise SystemExit("recovery sweep produced non-finite utilization")
+    return rec
+
+
+def _guard_fast_path(entry: dict, hist: list) -> None:
+    """Smoke-mode regression guard for the reliability-DISABLED hot path:
+    compare the 10k/single/layout point against the most recent prior
+    entry measured on a comparable host.  The reliability machinery is
+    compiled out entirely when rel is None — this guard is what keeps
+    that claim honest run over run."""
+    key = (10_000, "single", "layout")
+    cur = {(p["n_flows"], p.get("variant", "single"), p["path"]): p
+           for p in entry["points"]}.get(key)
+    if cur is None or cur.get("skipped"):
+        return
+    meta = entry["meta"]
+    for prev in reversed(hist):
+        pm = prev.get("meta", {})
+        if pm.get("mode") != meta["mode"] or \
+                pm.get("cpu_count") != meta["cpu_count"]:
+            continue
+        old = {(p["n_flows"], p.get("variant", "single"), p["path"]): p
+               for p in prev.get("points", [])}.get(key)
+        if old is None or old.get("skipped"):
+            continue
+        ratio = cur["flow_epochs_per_s"] / max(old["flow_epochs_per_s"], 1)
+        print(f"  fast-path guard: {old['flow_epochs_per_s']} -> "
+              f"{cur['flow_epochs_per_s']} fe/s ({ratio:.2f}x, floor "
+              f"{_SMOKE_GUARD_RATIO}x vs {pm.get('git_sha', '?')})")
+        if ratio < _SMOKE_GUARD_RATIO:
+            raise SystemExit(
+                f"layout fast-path regression: {ratio:.2f}x < "
+                f"{_SMOKE_GUARD_RATIO}x vs entry {pm.get('git_sha', '?')}")
+        return
+    print("  fast-path guard: no comparable prior entry (mode/cpu) — "
+          "skipped")
 
 
 def _git_sha() -> str:
@@ -472,6 +563,11 @@ def scaling_curve(mode: str = "full") -> dict:
     _sharded_points(ft_n, ft_ne, mode, points, speedups, kind="fat_tree",
                     k=ft_k, variant=variant, paths=ft_paths)
 
+    # loss-recovery grid (ISSUE 6): dynamic EC + NACK state machine under
+    # vmap — its reliability config rides along in the entry so config
+    # changes are never misread as perf deltas
+    points.append(_recovery_point(mode))
+
     entry = {
         "meta": {
             "generated": datetime.datetime.now(
@@ -505,6 +601,9 @@ def scaling_curve(mode: str = "full") -> dict:
         }
         print("  run_1m:", json.dumps(entry["run_1m"]))
 
+    hist = load_history()
+    if mode == "smoke":
+        _guard_fast_path(entry, hist)
     _append_history(entry)
     print(f"appended entry {entry['meta']['git_sha']} to {BENCH_PATH}")
     return entry

@@ -16,13 +16,20 @@ adaptive path weights + static-EC overhead; ChurnParams adds open-loop
 Poisson on/off flow churn.  Topologies come from the shared scenario layer
 (repro.scenarios) — one spec compiles to this simulator AND to
 repro.netsim, and repro.fleetsim.validate cross-checks the fluid steady
-state against the packet simulator on small scenarios.
+state against the packet simulator on small scenarios.  The `rel` axis
+(RelParams / RelState, repro.fleetsim.reliability) adds the dynamic
+EC + NACK loss-recovery state machine: per-flow loss composed from link
+queue overflow, EC parity recovery below the (k, r) window, and a
+batched/debounced NACK retransmit loop whose traffic re-enters the
+offered load.
 """
 from repro.fleetsim.cc import (SCHEMES, make_step, simulate, steady_state,
                                update_split)
 from repro.fleetsim.links import (LOAD_BACKENDS, FluidNet, RouteLayout,
                                   compute_layout, dumbbell, link_epoch,
                                   uniform_split, with_layout)
+from repro.fleetsim.reliability import (RelParams, RelState, init_rel_state,
+                                        make_rel_params, recovery_split)
 from repro.fleetsim.shard import (ShardedFleet, shard_scenario,
                                   steady_state_prepared,
                                   steady_state_sharded)
@@ -34,6 +41,8 @@ __all__ = [
     "SCHEMES", "make_step", "simulate", "steady_state", "update_split",
     "LOAD_BACKENDS", "FluidNet", "RouteLayout", "compute_layout",
     "dumbbell", "link_epoch", "uniform_split", "with_layout",
+    "RelParams", "RelState", "init_rel_state", "make_rel_params",
+    "recovery_split",
     "ShardedFleet", "shard_scenario", "steady_state_prepared",
     "steady_state_sharded",
     "ChurnParams", "FleetParams", "FleetState", "LbParams",

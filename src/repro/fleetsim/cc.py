@@ -33,14 +33,34 @@ sends nothing and its controller state is frozen; turning ON restarts it
 like a fresh flow (cwnd = BDP, clean accumulators) — this makes
 app-limited senders and approximate FCT questions expressible.
 
+The reliability axis (RelParams/RelState, repro.fleetsim.reliability;
+fluid analogue of netsim's EC framing + SmartAckNack receivers): when a
+scenario carries `rel`, each epoch derives a per-flow loss fraction from
+queue overflow (links.drop_prob composed along the flow's paths), splits
+it into parity-recovered vs NACK-bound payload via the dynamic-EC window
+pmf, runs the batched-NACK/debounce counters, and feeds the retransmit
+backlog back into the wire rate — so `offered_load` sees retransmissions
+as real traffic and a NACK batch fires a loss-driven multiplicative
+decrease (`loss_md`).  Goodput then uses the dynamic split instead of the
+static `lb.ec_eff` tax: payload delivered + payload recovered from parity
++ retransmitted payload (retransmissions carry data only, no parity).
+With `rel=None` the whole machine vanishes at trace time — the compiled
+step is the same program as before the axis existed.
+
 Fluid-model fidelity limits (vs repro.netsim, recorded in ROADMAP.md):
 marking is the RED expectation (no per-packet randomness), feedback is a
 first-order lag rather than an exact delay line, queues see *offered* load
 (upstream bottlenecks do not thin downstream arrivals), the scalar
-controller's fast-increase / slow-start transients are omitted, churned
+controller's fast increase is windowed (clean-window streak on the epoch
+clock) rather than per-ACK, churned
 flows restart instantaneously (no slow-start ramp) with exponential rather
 than empirical size/holding distributions, and repathing moves rate weight
-without packet reordering or NACK/timeout signalling.
+without packet reordering.  The reliability axis captures expected loss
+rates, parity-window recovery fractions, NACK batching cadence and
+retransmit-load feedback, but not per-packet effects: packet reordering,
+selective-repeat hole tracking, receiver block timers / exponential
+backoff, or loss burstiness beyond the per-epoch expectation (netsim
+remains the oracle for those — fleetsim.validate cross-checks the rates).
 """
 from __future__ import annotations
 
@@ -52,6 +72,7 @@ import jax.numpy as jnp
 
 from repro.core.unocc import gentle_md_scale, md_ecn_gain, md_factor
 from repro.fleetsim import links as L
+from repro.fleetsim import reliability as R
 from repro.fleetsim.state import (ChurnParams, FleetParams, FleetState,
                                   LbParams, init_state)
 
@@ -74,8 +95,12 @@ def _merge_flow_state(cond: jnp.ndarray, a: FleetState,
     out = {}
     for f in FleetState._fields:
         av = getattr(a, f)
-        if f in _NON_FLOW_FIELDS:
+        if f in _NON_FLOW_FIELDS or av is None:
             out[f] = av
+            continue
+        if hasattr(av, "_fields"):  # nested per-flow pytree (RelState)
+            out[f] = jax.tree.map(
+                lambda x, y: jnp.where(cond, x, y), av, getattr(b, f))
             continue
         c = cond if av.ndim == 1 else cond[:, None]
         out[f] = jnp.where(c, av, getattr(b, f))
@@ -104,7 +129,8 @@ def update_split(split: jnp.ndarray, path_frac: jnp.ndarray,
 def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
               is_inter: Optional[jnp.ndarray] = None,
               lb: Optional[LbParams] = None,
-              churn: Optional[ChurnParams] = None, *,
+              churn: Optional[ChurnParams] = None,
+              rel: Optional[R.RelParams] = None, *,
               axis_name: Optional[str] = None, backend: str = "auto",
               halo: Optional[int] = None,
               churn_map: Optional[jnp.ndarray] = None,
@@ -112,7 +138,14 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
     """Build the per-epoch transition: state -> (state', goodput).
 
     `lb=None` freezes the split at its initial value (static spraying) and
-    reports raw goodput; `churn=None` keeps every flow backlogged.
+    reports raw goodput; `churn=None` keeps every flow backlogged;
+    `rel=None` skips the loss/recovery machine entirely (no loss arrays are
+    even computed — the trace is identical to the pre-reliability step).
+    With `rel` set, the wire rate is cwnd-rate + retransmit rate, the loss
+    fraction from links.drop_prob drives reliability.rel_epoch, a NACK
+    batch applies `rel.loss_md`, and goodput uses the dynamic EC split —
+    `rel.ec_eff` supersedes `lb.ec_eff` (the compiler folds the static
+    efficiency of non-reliability flows into `rel.ec_eff`).
     `axis_name` names a shard_map mesh axis the flow dimension is sharded
     over (per-epoch reduction of the partial link loads — repro.fleetsim
     .shard); `halo` shrinks that reduction to the trailing boundary links
@@ -140,7 +173,7 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
     fresh = None
     if churn is not None:
         fresh = init_state(params, net.n_links, n_paths=net.n_paths,
-                           split0=L.uniform_split(net))
+                           split0=L.uniform_split(net), rel=rel)
 
     def step(state: FleetState, _):
         p = params
@@ -148,20 +181,35 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
         actf = act.astype(jnp.float32)
         # ---- network: loads, queues, marks, delays ----------------------
         rate = actf * state.cwnd / p.rtt
+        if rel is None:
+            wire = rate
+        else:   # retransmit backlog drains onto the wire as real traffic
+            rtx = R.rtx_rate(rel, state.rel, rate, p.rtt)
+            wire = rate + rtx
         split = state.split
-        le = L.link_epoch(net, rate, split, state.q_phys, state.q_phantom,
-                          axis_name=axis_name, backend=backend, halo=halo)
+        le = L.link_epoch(net, wire, split, state.q_phys, state.q_phantom,
+                          axis_name=axis_name, backend=backend, halo=halo,
+                          with_loss=rel is not None)
         q_phys, q_phantom = le.q_phys, le.q_phantom
         sub_frac = le.sub_frac
         if single:   # split-weighted sums collapse to one product per flow
             s1 = split[:, 0]
-            goodput = rate * (s1 * le.sub_scale[:, 0])
+            sc = s1 * le.sub_scale[:, 0]
             inst_frac = s1 * sub_frac[:, 0]
             inst_delay = s1 * le.sub_delay[:, 0]
         else:
-            goodput = rate * jnp.sum(split * le.sub_scale, axis=1)
+            sc = jnp.sum(split * le.sub_scale, axis=1)
             inst_frac = jnp.sum(split * sub_frac, axis=1)
             inst_delay = jnp.sum(split * le.sub_delay, axis=1)
+        goodput = wire * sc
+        rel_new, nack_fire, recovered = state.rel, None, None
+        if rel is not None:
+            if single:
+                lf = s1 * le.sub_loss[:, 0]
+            else:
+                lf = jnp.sum(split * le.sub_loss, axis=1)
+            rel_new, nack_fire, recovered = R.rel_epoch(
+                rel, state.rel, rate, rtx, wire, lf, net.dt, p.rtt)
         # Feedback lag: a sender observes congestion one flow-RTT late (marks
         # ride the data+ACK round trip).  First-order filter with time
         # constant = flow RTT — exact for intra flows (rtt == dt), and for
@@ -194,8 +242,27 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
 
         # ---- additive increase (continuous, on unmarked bytes) ----------
         ai_gain = p.mtu if scheme == "dctcp" else p.alpha
-        cwnd = state.cwnd + ai_gain * acked * (1.0 - frac) / \
+        inc = ai_gain * acked * (1.0 - frac) / \
             jnp.maximum(state.cwnd, 1.0)
+        if scheme == "uno":
+            # Fast increase (UnoCC / SMaRTT lineage, core.unocc OnAck):
+            # after >= 3 fully clean windows while well below the last
+            # congested cwnd, grow by the unmarked acked bytes themselves
+            # (doubling per RTT) until the first mark arrives.  Without it
+            # the fluid flow recovers from a deep (QA or loss-signal)
+            # collapse at alpha-AI pace, O(BDP/alpha) RTTs slower than the
+            # packet sender — the dominant infidelity under loss-driven
+            # cuts on mark-free paths.  FI keys off the INSTANTANEOUS mark
+            # fraction (the per-ACK ECN bit, which ends crisply when the
+            # phantom queue empties), not the lagged `frac`: the lag
+            # filter's exponential tail would keep "marked" true for many
+            # epochs after congestion clears, chasing fi_ceiling down to
+            # the collapsed cwnd and locking FI out permanently.
+            m_fi = inst_frac > _FRAC_EPS
+            fi_on = state.fi_active & ~m_fi
+            inc = jnp.where(fi_on, jnp.maximum(inc, acked * (1.0 - frac)),
+                            inc)
+        cwnd = state.cwnd + inc
 
         # ---- window reaction --------------------------------------------
         ecn_ewma = jnp.where(
@@ -239,6 +306,27 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
             win_dmax = jnp.where(fire, 0.0, win_dmax)
         cc_countdown = jnp.where(fire, p.cc_period, state.cc_countdown - 1)
 
+        # ---- fast-increase bookkeeping (UnoCC only) ---------------------
+        fi_clean = state.fi_clean
+        fi_active = state.fi_active
+        fi_ceiling = state.fi_ceiling
+        if scheme == "uno":
+            fi_active = fi_on        # marks mid-window already disengaged
+            # window close (core.unocc._end_epoch): a clean window extends
+            # the streak and may engage FI — only well below the last cwnd
+            # that saw congestion (re-probing at the old ceiling just
+            # oscillates against the phantom marks); a marked window resets
+            # the streak and pins the ceiling at the congested cwnd.
+            fi_clean = jnp.where(fire, jnp.where(m_fi, 0,
+                                                 state.fi_clean + 1),
+                                 state.fi_clean)
+            engage = (fi_clean >= 3) & (cwnd < 0.7 * fi_ceiling)
+            fi_active = jnp.where(fire, ~m_fi & (fi_active | engage),
+                                  fi_active)
+            fi_ceiling = jnp.where(fire & m_fi,
+                                   jnp.maximum(cwnd, 4.0 * p.min_cwnd),
+                                   state.fi_ceiling)
+
         # ---- Quick-Adapt (UnoCC only; Alg 1 OnQA) -----------------------
         qa_acked = state.qa_acked + acked
         qa_prev = state.qa_prev_acked
@@ -265,6 +353,15 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
             qa_acked = jnp.where(tick, 0.0, qa_acked)
             qa_countdown = jnp.where(tick, p.qa_period, qa_countdown)
 
+        # ---- reliability: NACK-driven multiplicative decrease -----------
+        # `nack_fire` is already rate-limited to one cut per flow RTT
+        # (reliability.rel_epoch md_cd); the post-QA skip additionally
+        # suppresses it, as the packet sender's on_loss_signal honours
+        # _skip_until.
+        if rel is not None:
+            cwnd = jnp.where(nack_fire & can_md,
+                             jnp.maximum(cwnd * rel.loss_md, p.min_cwnd),
+                             cwnd)
         cwnd = jnp.clip(cwnd, p.min_cwnd, p.max_cwnd)
 
         # ---- lb axis: adaptive subflow weights --------------------------
@@ -272,7 +369,15 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
         if lb is not None:
             split_new, bad_count = update_split(split, path_frac, bad_count,
                                                 pmask, lb)
-            goodput = goodput * lb.ec_eff       # parity bytes carry no payload
+            if rel is None:
+                goodput = goodput * lb.ec_eff   # parity bytes carry no payload
+        if rel is not None:
+            # dynamic EC split: delivered payload (parity fraction of the
+            # CC stream is overhead, retransmits are pure data) + payload
+            # decoded locally from parity.  rel.ec_eff carries the static
+            # efficiency for non-reliability flows, superseding lb.ec_eff.
+            goodput = goodput * rel.ec_eff + rtx * sc * (1.0 - rel.ec_eff) \
+                + recovered
 
         new = FleetState(
             cwnd=cwnd, ecn_ewma=ecn_ewma, md_scale=md_scale,
@@ -283,8 +388,9 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
             cc_countdown=cc_countdown,
             qa_acked=qa_acked, qa_prev_acked=qa_prev,
             qa_deficits=qa_deficits, qa_countdown=qa_countdown, skip=skip,
+            fi_clean=fi_clean, fi_active=fi_active, fi_ceiling=fi_ceiling,
             split=split_new, path_frac=path_frac, bad_count=bad_count,
-            active=act, key=state.key)
+            active=act, key=state.key, rel=rel_new)
 
         # ---- churn: freeze OFF flows, restart fresh on OFF->ON ----------
         if churn is not None:
@@ -307,18 +413,19 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
     return step
 
 
-def _default_state(net: L.FluidNet, params: FleetParams, seed: int = 0):
+def _default_state(net: L.FluidNet, params: FleetParams, seed: int = 0,
+                   rel=None):
     return init_state(params, net.n_links, n_paths=net.n_paths,
-                      split0=L.uniform_split(net), seed=seed)
+                      split0=L.uniform_split(net), seed=seed, rel=rel)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("scheme", "n_epochs", "record",
                                     "backend"))
 def _simulate(net, params, state0, is_inter, lb, churn, scheme, n_epochs,
-              record, backend="auto"):
+              record, backend="auto", rel=None):
     step = make_step(net, params, scheme, is_inter, lb=lb, churn=churn,
-                     backend=backend)
+                     rel=rel, backend=backend)
     if record:
         return jax.lax.scan(step, state0, None, length=n_epochs)
     final, _ = jax.lax.scan(lambda s, x: (step(s, x)[0], None),
@@ -331,20 +438,23 @@ def simulate(net: L.FluidNet, params: FleetParams, *, n_epochs: int,
              is_inter: Optional[jnp.ndarray] = None,
              lb: Optional[LbParams] = None,
              churn: Optional[ChurnParams] = None,
+             rel: Optional[R.RelParams] = None,
              seed: int = 0, record: bool = False, backend: str = "auto"):
     """Run `n_epochs` epochs; returns (final_state, goodput_trajectory).
 
     `goodput_trajectory` is (n_epochs, n_flows) bytes/ns when `record`,
     else None.  Jit-compiled; recompiles only on new (scheme, n_epochs,
-    record, backend, shapes, lb/churn presence).  `seed` fixes the churn
-    PRNG; `backend` picks the link-aggregation path (links.LOAD_BACKENDS).
+    record, backend, shapes, lb/churn/rel presence).  `seed` fixes the
+    churn PRNG; `backend` picks the link-aggregation path
+    (links.LOAD_BACKENDS); `rel` turns on the loss/recovery machine
+    (reliability.make_rel_params).
     """
     if state0 is None:
-        state0 = _default_state(net, params, seed)
+        state0 = _default_state(net, params, seed, rel)
     if is_inter is None:
         is_inter = jnp.zeros_like(params.bdp, bool)
     return _simulate(net, params, state0, is_inter, lb, churn, scheme,
-                     n_epochs, record, backend)
+                     n_epochs, record, backend, rel)
 
 
 @functools.partial(jax.jit,
@@ -353,7 +463,8 @@ def simulate(net: L.FluidNet, params: FleetParams, *, n_epochs: int,
                                     "unroll"))
 def steady_state_core(net, params, state0, is_inter, scheme, n_warm, n_meas,
                       lb=None, churn=None, backend="auto", axis_name=None,
-                      halo=None, churn_map=None, churn_n=None, unroll=1):
+                      halo=None, churn_map=None, churn_n=None, unroll=1,
+                      rel=None):
     """Warm up, then return (final_state, mean goodput over n_meas epochs).
 
     The measurement pass accumulates a running sum in the carry instead of
@@ -367,8 +478,8 @@ def steady_state_core(net, params, state0, is_inter, scheme, n_warm, n_meas,
     per-epoch dispatch — numerics are unchanged (same per-epoch op order,
     just loop restructuring)."""
     step = make_step(net, params, scheme, is_inter, lb=lb, churn=churn,
-                     backend=backend, axis_name=axis_name, halo=halo,
-                     churn_map=churn_map, churn_n=churn_n)
+                     rel=rel, backend=backend, axis_name=axis_name,
+                     halo=halo, churn_map=churn_map, churn_n=churn_n)
     state, _ = jax.lax.scan(lambda s, x: (step(s, x)[0], None),
                             state0, None, length=n_warm, unroll=unroll)
 
@@ -388,11 +499,12 @@ def steady_state(net: L.FluidNet, params: FleetParams, *, n_warm: int,
                  state0: Optional[FleetState] = None,
                  is_inter: Optional[jnp.ndarray] = None,
                  lb: Optional[LbParams] = None,
-                 churn: Optional[ChurnParams] = None, seed: int = 0,
+                 churn: Optional[ChurnParams] = None,
+                 rel: Optional[R.RelParams] = None, seed: int = 0,
                  backend: str = "auto"):
     if state0 is None:
-        state0 = _default_state(net, params, seed)
+        state0 = _default_state(net, params, seed, rel)
     if is_inter is None:
         is_inter = jnp.zeros_like(params.bdp, bool)
     return steady_state_core(net, params, state0, is_inter, scheme,
-                             n_warm, n_meas, lb, churn, backend)
+                             n_warm, n_meas, lb, churn, backend, rel=rel)

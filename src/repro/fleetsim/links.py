@@ -101,7 +101,12 @@ class RouteLayout(NamedTuple):
 class FluidNet(NamedTuple):
     """Topology constants.  All (n_links,) float32 except `routes`/`dt`;
     `layout` is the optional compiled RouteLayout (None -> every link op
-    falls back to deriving indices from `routes` on the fly)."""
+    falls back to deriving indices from `routes` on the fly).  `p_loss`
+    (None on loss-free nets — the default trace carries no loss math) is
+    a per-link random per-byte drop probability, modeling corrupting WAN
+    segments independently of queue overflow: it thins each subflow's
+    delivered fraction AND joins the composed loss signal the reliability
+    axis recovers from."""
     cap: jnp.ndarray            # service rate (bytes/ns)
     qcap: jnp.ndarray           # physical queue capacity (bytes)
     ecn_lo: jnp.ndarray         # RED thresholds on the *marking* queue
@@ -112,6 +117,7 @@ class FluidNet(NamedTuple):
     routes: jnp.ndarray         # (n_flows, n_paths, max_hops) int32, -1 pad
     dt: jnp.ndarray             # scalar epoch period (ns)
     layout: Optional[RouteLayout] = None
+    p_loss: Optional[jnp.ndarray] = None  # (n_links,) random drop probability
 
     @property
     def n_links(self) -> int:
@@ -123,7 +129,10 @@ class FluidNet(NamedTuple):
 
 
 class LinkEpoch(NamedTuple):
-    """Everything one epoch of link physics produces."""
+    """Everything one epoch of link physics produces.
+
+    `p_drop`/`sub_loss` exist only when `link_epoch` ran `with_loss=True`
+    (the reliability axis); the default trace never materializes them."""
     load: jnp.ndarray        # (n_links,) offered load
     q_phys: jnp.ndarray      # (n_links,) stepped physical queues
     q_phantom: jnp.ndarray   # (n_links,) stepped phantom queues
@@ -131,6 +140,8 @@ class LinkEpoch(NamedTuple):
     sub_scale: jnp.ndarray   # (n_flows, n_paths) min over hops of cap/load
     sub_frac: jnp.ndarray    # (n_flows, n_paths) 1 - prod(1 - p) over hops
     sub_delay: jnp.ndarray   # (n_flows, n_paths) sum of q/cap over hops (ns)
+    p_drop: Optional[jnp.ndarray] = None    # (n_links,) queue-overflow drop
+    sub_loss: Optional[jnp.ndarray] = None  # (n_flows, n_paths) composed loss
 
 
 def _routes3(net: FluidNet) -> jnp.ndarray:
@@ -421,6 +432,32 @@ def step_queues(net: FluidNet, q_phys: jnp.ndarray, q_phantom: jnp.ndarray,
     return q_phys, q_phantom
 
 
+def drop_prob(net: FluidNet, q_phys_prev: jnp.ndarray,
+              load: jnp.ndarray) -> jnp.ndarray:
+    """(n_links,) per-byte drop probability from physical-queue overflow.
+
+    The pre-clip excess of `step_queues` — bytes the queue could not
+    absorb this epoch — as a fraction of the bytes that arrived:
+    max(q + (load - cap) * dt - qcap, 0) / (load * dt), clipped to [0, 1].
+    This is the loss signal the reliability axis composes along paths
+    (repro.fleetsim.reliability); it is exactly 0.0 whenever the queue
+    stays within capacity.  At saturation (full queue, load > cap) it
+    approaches 1 - cap/load — consistent with the FIFO goodput scale.
+    """
+    over = q_phys_prev + (load - net.cap) * net.dt - net.qcap
+    return jnp.clip(jnp.maximum(over, 0.0) /
+                    jnp.maximum(load * net.dt, _EPS), 0.0, 1.0)
+
+
+def subflow_loss_frac(net: FluidNet, p_drop: jnp.ndarray) -> jnp.ndarray:
+    """(n_flows, n_paths) loss fraction: 1 - prod over hops of (1 - p).
+
+    Same hop composition as `subflow_mark_frac`, on the overflow drop
+    probabilities instead of the RED marks."""
+    keep = jnp.concatenate([1.0 - p_drop, jnp.ones(1, p_drop.dtype)])
+    return 1.0 - jnp.prod(keep[_pad_idx(net)], axis=2)
+
+
 def mark_prob(net: FluidNet, q_phys: jnp.ndarray,
               q_phantom: jnp.ndarray) -> jnp.ndarray:
     """(n_links,) expected RED mark probability on the marking queue."""
@@ -459,7 +496,8 @@ def link_epoch(net: FluidNet, rates: jnp.ndarray, split: jnp.ndarray,
                q_phys: jnp.ndarray, q_phantom: jnp.ndarray, *,
                axis_name: Optional[str] = None,
                backend: str = "auto",
-               halo: Optional[int] = None) -> LinkEpoch:
+               halo: Optional[int] = None,
+               with_loss: bool = False) -> LinkEpoch:
     """One epoch of link physics in one call: offered load -> queue step ->
     mark probabilities -> the three link->flow gathers.
 
@@ -469,7 +507,24 @@ def link_epoch(net: FluidNet, rates: jnp.ndarray, split: jnp.ndarray,
     the sharded reduction to the trailing boundary links (see
     `offered_load`); queue/mark state on links outside this shard's reach
     is then stale, but no local flow reads it.
+
+    `with_loss=True` (a trace-time flag — the default trace pays zero
+    overhead) additionally computes the queue-overflow drop probabilities
+    from the PRE-step queues and composes them per subflow
+    (`p_drop`/`sub_loss`) for the reliability axis.  The loss gather runs
+    as a plain jnp gather on every backend, including pallas (the fused
+    kernel carries exactly three gathers).  Under sharding this needs no
+    extra exchange: p_drop reads the carried queues and post-halo loads,
+    both already correct on every link a local flow touches.
+
+    A net with `p_loss` (configured random loss) additionally thins
+    `sub_scale` by each subflow's survival through its lossy hops —
+    bytes dropped at random never reach the receiver even on
+    under-capacity links, unlike overflow loss which the FIFO cap/load
+    scale already excludes — and `with_loss` folds the random drops into
+    the composed `p_drop`/`sub_loss` loss signal.
     """
+    q_prev = q_phys
     load = offered_load(net, rates, split, axis_name=axis_name,
                         backend=backend, halo=halo)
     q_phys, q_phantom = step_queues(net, q_phys, q_phantom, load)
@@ -484,9 +539,17 @@ def link_epoch(net: FluidNet, rates: jnp.ndarray, split: jnp.ndarray,
         sub_scale = subflow_scale(net, load)
         sub_frac = subflow_mark_frac(net, p_link)
         sub_delay = subflow_delay(net, q_phys)
+    if net.p_loss is not None:
+        sub_scale = sub_scale * (1.0 - subflow_loss_frac(net, net.p_loss))
+    p_drop = sub_loss = None
+    if with_loss:
+        p_drop = drop_prob(net, q_prev, load)
+        if net.p_loss is not None:
+            p_drop = 1.0 - (1.0 - p_drop) * (1.0 - net.p_loss)
+        sub_loss = subflow_loss_frac(net, p_drop)
     return LinkEpoch(load=load, q_phys=q_phys, q_phantom=q_phantom,
                      p_link=p_link, sub_scale=sub_scale, sub_frac=sub_frac,
-                     sub_delay=sub_delay)
+                     sub_delay=sub_delay, p_drop=p_drop, sub_loss=sub_loss)
 
 
 # -------------------------------------------------------------------- builders

@@ -70,6 +70,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.fleetsim import links as L
 from repro.fleetsim.cc import steady_state_core
+from repro.fleetsim.reliability import RelParams, RelState
 from repro.fleetsim.state import (ChurnParams, FleetParams, FleetState,
                                   LbParams, init_state)
 from repro.sharding import shard_map
@@ -117,6 +118,7 @@ class ShardedFleet(NamedTuple):
     churn: Optional[ChurnParams]
     churn_map: Optional[jnp.ndarray]  # (S, rows) original flow id per row
     own: jnp.ndarray              # (S, n_links) link-ownership masks
+    rel: Optional[RelParams] = None   # flow axis permuted + padded
 
 
 def _take_links(net: L.FluidNet, new2old: jnp.ndarray) -> L.FluidNet:
@@ -125,13 +127,15 @@ def _take_links(net: L.FluidNet, new2old: jnp.ndarray) -> L.FluidNet:
         cap=net.cap[new2old], qcap=net.qcap[new2old],
         ecn_lo=net.ecn_lo[new2old], ecn_hi=net.ecn_hi[new2old],
         drain=net.drain[new2old], vcap=net.vcap[new2old],
-        use_phantom=net.use_phantom[new2old])
+        use_phantom=net.use_phantom[new2old],
+        p_loss=None if net.p_loss is None else net.p_loss[new2old])
 
 
 def shard_scenario(net: L.FluidNet, params: FleetParams, *,
                    is_inter: Optional[jnp.ndarray] = None,
                    lb: Optional[LbParams] = None,
                    churn: Optional[ChurnParams] = None,
+                   rel: Optional[RelParams] = None,
                    mesh=None, locality: bool = True,
                    plan=None, link_tier=None) -> ShardedFleet:
     """Compile (net, params, ...) against a locality ShardPlan.
@@ -140,7 +144,9 @@ def shard_scenario(net: L.FluidNet, params: FleetParams, *,
     link buffer exchanged every epoch) — kept for A/B benchmarking.  An
     explicit `plan` overrides both.  `link_tier` (a (n_links,) locality
     array, e.g. FleetScenario.link_tier) feeds the planner's tier score
-    on multi-tier topologies like the fat tree.
+    on multi-tier topologies like the fat tree.  `rel` (RelParams) is
+    permuted like the other flow-axis parameter families; padding rows
+    are force-disabled so the reliability machine stays inert on them.
     """
     from repro.scenarios.compile_fleetsim import plan_shards
     mesh = mesh if mesh is not None else flow_mesh()
@@ -181,6 +187,10 @@ def shard_scenario(net: L.FluidNet, params: FleetParams, *,
         is_inter = jnp.zeros(n_real, bool)
     ii_p = is_inter[gc] & realj
     lb_p = None if lb is None else jax.tree.map(lambda a: a[gc], lb)
+    rel_p = None
+    if rel is not None:
+        rel_p = jax.tree.map(lambda a: a[gc], rel)._replace(
+            enabled=rel.enabled[gc] & realj)
     churn_p = cmap = None
     if churn is not None:
         churn_p = ChurnParams(churned=churn.churned[gc] & realj,
@@ -198,26 +208,29 @@ def shard_scenario(net: L.FluidNet, params: FleetParams, *,
     return ShardedFleet(plan=plan, mesh=mesh, net=net_p, layouts=layouts,
                         params=params_p, is_inter=ii_p, lb=lb_p,
                         churn=churn_p, churn_map=cmap,
-                        own=jnp.asarray(own))
+                        own=jnp.asarray(own), rel=rel_p)
 
 
-def _net_spec() -> L.FluidNet:
+def _net_spec(has_ploss: bool = False) -> L.FluidNet:
     """PartitionSpec tree for FluidNet: routes sharded, links replicated."""
     return L.FluidNet(cap=P(), qcap=P(), ecn_lo=P(), ecn_hi=P(), drain=P(),
                       vcap=P(), use_phantom=P(), routes=P(AXIS), dt=P(),
-                      layout=None)
+                      layout=None, p_loss=P() if has_ploss else None)
 
 
-def _state_spec() -> FleetState:
-    """PartitionSpec tree for FleetState: link state + PRNG key replicated."""
-    return FleetState(**{
-        f: P() if f in _REPLICATED else P(AXIS)
-        for f in FleetState._fields})
+def _state_spec(has_rel: bool = False) -> FleetState:
+    """PartitionSpec tree for FleetState: link state + PRNG key replicated.
+    The nested RelState (when present) is per-flow, so fully sharded."""
+    specs = {f: P() if f in _REPLICATED else P(AXIS)
+             for f in FleetState._fields if f != "rel"}
+    specs["rel"] = RelState(**{f: P(AXIS) for f in RelState._fields}) \
+        if has_rel else None
+    return FleetState(**specs)
 
 
 @functools.lru_cache(maxsize=64)
 def _compiled(mesh, scheme, n_warm, n_meas, backend, halo, unroll, churn_n,
-              has_lb, has_churn):
+              has_lb, has_churn, has_rel, has_ploss=False):
     """Build + cache the jitted shard_map'd steady-state executable.
 
     PR 3 rebuilt this closure (and its jit wrapper) inside every call, so
@@ -230,6 +243,8 @@ def _compiled(mesh, scheme, n_warm, n_meas, backend, halo, unroll, churn_n,
     param_spec = FleetParams(**{f: P(AXIS) for f in FleetParams._fields})
     lb_spec = None if not has_lb else LbParams(
         **{f: P(AXIS) for f in LbParams._fields})
+    rel_spec = None if not has_rel else RelParams(
+        **{f: P(AXIS) for f in RelParams._fields})
     churn_spec = cmap_spec = None
     if has_churn:
         churn_spec = ChurnParams(
@@ -237,14 +252,14 @@ def _compiled(mesh, scheme, n_warm, n_meas, backend, halo, unroll, churn_n,
         cmap_spec = P(AXIS)
 
     def local(net_l, lay_l, params_l, state0_l, ii_l, lb_l, churn_l,
-              cmap_l, own_l):
+              cmap_l, own_l, rel_l):
         net_l = net_l._replace(layout=jax.tree.map(lambda a: a[0], lay_l))
         final, rates = steady_state_core(
             net_l, params_l, state0_l, ii_l, scheme=scheme, n_warm=n_warm,
             n_meas=n_meas, lb=lb_l, churn=churn_l, backend=backend,
             axis_name=AXIS, halo=halo,
             churn_map=None if cmap_l is None else cmap_l[0],
-            churn_n=churn_n, unroll=unroll)
+            churn_n=churn_n, unroll=unroll, rel=rel_l)
         # reassemble globally-correct link state from each link's owner
         own = own_l[0]
         return final._replace(
@@ -254,10 +269,10 @@ def _compiled(mesh, scheme, n_warm, n_meas, backend, halo, unroll, churn_n,
                 jnp.where(own, final.q_phantom, 0.0), AXIS)), rates
 
     f = shard_map(local, mesh,
-                  in_specs=(_net_spec(), lay_spec, param_spec,
-                            _state_spec(), P(AXIS), lb_spec, churn_spec,
-                            cmap_spec, P(AXIS)),
-                  out_specs=(_state_spec(), P(AXIS)),
+                  in_specs=(_net_spec(has_ploss), lay_spec, param_spec,
+                            _state_spec(has_rel), P(AXIS), lb_spec,
+                            churn_spec, cmap_spec, P(AXIS), rel_spec),
+                  out_specs=(_state_spec(has_rel), P(AXIS)),
                   check_vma=False)
     return jax.jit(f, donate_argnums=(3,))
 
@@ -271,10 +286,12 @@ def _permute_state(state: FleetState, flow_idx: jnp.ndarray,
     out = {}
     for f in FleetState._fields:
         v = getattr(state, f)
-        if f == "key":
+        if f == "key" or v is None:
             out[f] = v
         elif f in _REPLICATED:
             out[f] = v[link_idx]
+        elif hasattr(v, "_fields"):  # nested per-flow pytree (RelState)
+            out[f] = jax.tree.map(lambda a: a[flow_idx], v)
         else:
             out[f] = v[flow_idx]
     return FleetState(**out)
@@ -286,8 +303,7 @@ def _unalias(state: FleetState) -> FleetState:
     aliased pytree trips XLA's double-donation check, so the one state we
     donate per run is copied leaf-by-leaf first — the copy is what
     donation then saves on every fused scan step."""
-    return FleetState(**{f: jnp.array(getattr(state, f), copy=True)
-                         for f in FleetState._fields})
+    return jax.tree.map(lambda x: jnp.array(x, copy=True), state)
 
 
 def steady_state_prepared(sf: ShardedFleet, *, n_warm: int, n_meas: int,
@@ -305,10 +321,14 @@ def steady_state_prepared(sf: ShardedFleet, *, n_warm: int, n_meas: int,
     plan, net = sf.plan, sf.net
     if state0 is None:
         state0 = init_state(sf.params, net.n_links, n_paths=net.n_paths,
-                            split0=L.uniform_split(net), seed=seed)
+                            split0=L.uniform_split(net), seed=seed,
+                            rel=sf.rel)
     else:
         if state0.cwnd.shape[0] != plan.n_real:
             raise ValueError("state0 flow count does not match the plan")
+        if (state0.rel is None) != (sf.rel is None):
+            raise ValueError("state0 rel state does not match the "
+                             "scenario's RelParams presence")
         gflat = plan.flat_gather
         real = gflat < plan.n_real
         gc = jnp.asarray(np.where(real, gflat, 0))
@@ -321,9 +341,11 @@ def steady_state_prepared(sf: ShardedFleet, *, n_warm: int, n_meas: int,
     run = _compiled(sf.mesh, scheme, n_warm, n_meas, backend,
                     plan.n_boundary, unroll,
                     None if sf.churn is None else plan.n_real,
-                    sf.lb is not None, sf.churn is not None)
+                    sf.lb is not None, sf.churn is not None,
+                    sf.rel is not None, net.p_loss is not None)
     final, rates = run(net, sf.layouts, sf.params, _unalias(state0),
-                       sf.is_inter, sf.lb, sf.churn, sf.churn_map, sf.own)
+                       sf.is_inter, sf.lb, sf.churn, sf.churn_map, sf.own,
+                       sf.rel)
 
     inv = jnp.asarray(plan.inverse_flow)
     return (_permute_state(final, inv, jnp.asarray(plan.old2new)),
@@ -335,6 +357,7 @@ def steady_state_sharded(net: L.FluidNet, params: FleetParams, *,
                          is_inter: Optional[jnp.ndarray] = None,
                          lb: Optional[LbParams] = None,
                          churn: Optional[ChurnParams] = None,
+                         rel: Optional[RelParams] = None,
                          state0: Optional[FleetState] = None,
                          mesh=None, backend: str = "auto",
                          locality: bool = True, plan=None,
@@ -348,7 +371,7 @@ def steady_state_sharded(net: L.FluidNet, params: FleetParams, *,
     permutation, per-shard layouts — is the only per-call host work; the
     executable itself is cached either way)."""
     sf = shard_scenario(net, params, is_inter=is_inter, lb=lb, churn=churn,
-                        mesh=mesh, locality=locality, plan=plan,
+                        rel=rel, mesh=mesh, locality=locality, plan=plan,
                         link_tier=link_tier)
     return steady_state_prepared(sf, n_warm=n_warm, n_meas=n_meas,
                                  scheme=scheme, backend=backend,

@@ -17,6 +17,12 @@ Two optional parameter families ride next to FleetParams:
     persistent marking) plus a static-EC goodput overhead (k/(k+r)).
   * ChurnParams — open-loop Poisson on/off flow churn: per-flow active
     masks with exponential on/off holding times, deterministically seeded.
+  * RelParams / RelState (repro.fleetsim.reliability) — the dynamic
+    reliability axis: a per-flow loss/recovery state machine (queue-overflow
+    loss signal, dynamic-EC parity recovery, NACK batching + debounce,
+    retransmit backlog re-entering offered load).  When a scenario carries
+    it, `FleetState.rel` holds the machine's carry and the static `ec_eff`
+    tax above is superseded by the dynamic split (see reliability.py).
 """
 from __future__ import annotations
 
@@ -92,11 +98,15 @@ class FleetState(NamedTuple):
     qa_deficits: jnp.ndarray    # int32 consecutive deficient QA windows
     qa_countdown: jnp.ndarray   # int32 epochs until the next QA tick
     skip: jnp.ndarray           # int32 epochs of MD/QA skip left (post-QA)
+    fi_clean: jnp.ndarray       # int32 consecutive clean (unmarked) windows
+    fi_active: jnp.ndarray      # bool: fast increase engaged (UnoCC FI)
+    fi_ceiling: jnp.ndarray     # last cwnd that saw congestion (FI bound)
     split: jnp.ndarray          # (n_flows, n_paths) subflow rate weights
     path_frac: jnp.ndarray      # (n_flows, n_paths) lagged per-path marks
     bad_count: jnp.ndarray      # (n_flows, n_paths) int32 bad-epoch streak
     active: jnp.ndarray         # (n_flows,) bool churn mask (True = sending)
     key: jnp.ndarray            # PRNG key driving the churn transitions
+    rel: Optional["RelState"] = None  # reliability machine carry (or None)
 
 
 def make_params(bdp, rtt, intra_bdp: float, intra_rtt: float, *,
@@ -170,7 +180,7 @@ def make_churn_params(n_flows: int, *, mean_on: float, mean_off: float,
 def init_state(params: FleetParams, n_links: int,
                cwnd0: Optional[jnp.ndarray] = None, *,
                n_paths: int = 1, split0: Optional[jnp.ndarray] = None,
-               seed: int = 0) -> FleetState:
+               seed: int = 0, rel=None) -> FleetState:
     """Line-rate start (cwnd = BDP), empty queues — matches UnoCC.__init__.
 
     `split0` is the initial (n_flows, n_paths) subflow weight matrix; it is
@@ -178,6 +188,8 @@ def init_state(params: FleetParams, n_links: int,
     uniform default over all n_paths slots would put weight on padding
     paths, which bypass every queue, for flows with fewer valid paths).
     `seed` fixes the churn PRNG so identical specs reproduce exactly.
+    `rel` is the scenario's RelParams; when given, the reliability machine
+    starts idle (`reliability.init_rel_state`).
     """
     n = params.bdp.shape[0]
     f0 = jnp.zeros(n, jnp.float32)
@@ -199,8 +211,16 @@ def init_state(params: FleetParams, n_links: int,
         cc_countdown=params.cc_period,
         qa_acked=f0, qa_prev_acked=f0, qa_deficits=i0,
         qa_countdown=params.qa_period, skip=i0,
+        fi_clean=i0, fi_active=jnp.zeros(n, bool),
+        fi_ceiling=params.max_cwnd,
         split=jnp.asarray(split0, jnp.float32),
         path_frac=jnp.zeros((n, split0.shape[1]), jnp.float32),
         bad_count=jnp.zeros((n, split0.shape[1]), jnp.int32),
         active=jnp.ones(n, bool),
-        key=jax.random.PRNGKey(seed))
+        key=jax.random.PRNGKey(seed),
+        rel=None if rel is None else _init_rel(rel))
+
+
+def _init_rel(rel):
+    from repro.fleetsim.reliability import init_rel_state
+    return init_rel_state(rel)

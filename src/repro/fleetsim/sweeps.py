@@ -1,25 +1,37 @@
 """Scenario sweeps: `vmap` whole fluid simulations across parameter grids.
 
-A "scenario" is (FluidNet, FleetParams, is_inter[, LbParams[, ChurnParams]])
-— pure pytrees of arrays (repro.scenarios.FleetScenario tuples work
-directly).  Scenarios that share shapes (same n_flows / n_paths / n_links /
-max_hops) stack along a leading axis and one `jit(vmap(steady_state_core))`
-call sweeps the whole grid: RTT ratios x phantom drain fractions, flow-count
-mixes, load levels, churn duty cycles — heatmaps the per-packet simulator
-cannot reach (its wall-clock per cell is minutes; a fluid cell is
-milliseconds).
+A "scenario" is (FluidNet, FleetParams, is_inter[, LbParams[, ChurnParams
+[, RelParams]]]) — pure pytrees of arrays; `repro.scenarios.FleetScenario`
+instances are accepted directly.  Scenarios that share shapes (same
+n_flows / n_paths / n_links / max_hops) stack along a leading axis and one
+`jit(vmap(steady_state_core))` call sweeps the whole grid: RTT ratios x
+phantom drain fractions, flow-count mixes, load levels, churn duty cycles,
+loss-recovery configs — heatmaps the per-packet simulator cannot reach
+(its wall-clock per cell is minutes; a fluid cell is milliseconds).
 
 Numeric knobs (RTT, drain, caps, even route link-ids) may vary freely across
-the grid; only array *shapes* must match, and the LB / churn axes must be
-present on all scenarios or none.  Flow-count mixes therefore keep the total
-flow count fixed and flip flows between intra and inter profiles.
+the grid; only array *shapes* must match, and the LB / churn / reliability
+axes must be present on all scenarios or none.  Flow-count mixes therefore
+keep the total flow count fixed and flip flows between intra and inter
+profiles.
+
+`run_grid(mesh=...)` additionally shards the FLOW axis of every grid cell
+under one locality ShardPlan (repro.fleetsim.shard) while the grid axis
+vmaps inside each shard — vmapped sweeps at 100k+ flows then pay the same
+boundary-only halo exchange as single-scenario sharded runs, with
+`link_tier` (or the cells' FleetScenario.link_tier) feeding the planner's
+tier score.  The plan is shared, so every cell must route identically
+(the concrete sweeps here vary caps/params/rel, never routes); grids with
+differing routes fall back to the single-device vmap path with a warning.
 """
 from __future__ import annotations
 
-from typing import Sequence
+import warnings
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.fleetsim import links as fl
 from repro.fleetsim.cc import steady_state_core
@@ -74,62 +86,244 @@ def jain(rates: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
 
 
 def _norm_scenario(sc):
-    """(net, params, is_inter[, lb[, churn]]) -> 5-tuple with None padding."""
+    """Scenario -> (net, params, is_inter, lb, churn, rel) with None padding.
+
+    Accepts a FleetScenario instance (any NamedTuple with these field
+    names) or a bare (net, params, is_inter[, lb[, churn[, rel]]]) tuple.
+    """
+    if hasattr(sc, "net") and hasattr(sc, "params"):
+        return (sc.net, sc.params, sc.is_inter, getattr(sc, "lb", None),
+                getattr(sc, "churn", None), getattr(sc, "rel", None))
     sc = tuple(sc)
     if not 3 <= len(sc) <= 6:
         raise ValueError(f"scenario tuple of length {len(sc)}")
     net, params, ii = sc[:3]
     lb = sc[3] if len(sc) > 3 else None
     churn = sc[4] if len(sc) > 4 else None
-    return net, params, ii, lb, churn
+    rel = sc[5] if len(sc) > 5 else None
+    return net, params, ii, lb, churn, rel
 
 
 def stack_scenarios(scenarios: Sequence[tuple]):
     """Stack same-shape scenario pytrees on a leading axis.
 
-    Returns (nets, params, is_inter, lb, churn); the LB / churn slots are
-    None when absent (they must be present on all scenarios or none).
+    Returns (nets, params, is_inter, lb, churn, rel); the LB / churn /
+    reliability slots are None when absent (each must be present on all
+    scenarios or none).
     """
-    nets, params, inters, lbs, churns = zip(
+    nets, params, inters, lbs, churns, rels = zip(
         *(_norm_scenario(s) for s in scenarios))
-    for tag, xs in (("lb", lbs), ("churn", churns)):
+    for tag, xs in (("lb", lbs), ("churn", churns), ("rel", rels)):
         if any(x is None for x in xs) != all(x is None for x in xs):
             raise ValueError(f"{tag} must be set on all scenarios or none")
     stk = lambda *xs: jnp.stack(xs)
     return (jax.tree.map(stk, *nets), jax.tree.map(stk, *params),
             jnp.stack(inters),
             None if lbs[0] is None else jax.tree.map(stk, *lbs),
-            None if churns[0] is None else jax.tree.map(stk, *churns))
+            None if churns[0] is None else jax.tree.map(stk, *churns),
+            None if rels[0] is None else jax.tree.map(stk, *rels))
 
 
 def run_grid(scenarios: Sequence[tuple], *, scheme: str = "uno",
-             n_warm: int = 50_000, n_meas: int = 10_000, seed: int = 0):
+             n_warm: int = 50_000, n_meas: int = 10_000, seed: int = 0,
+             mesh=None, link_tier=None, unroll: int = 1,
+             backend: str = "auto"):
     """Sweep all scenarios in one vmapped call.
 
     Returns (final_states, rates): each leaf carries a leading scenario
     axis; `rates` is (n_scenarios, n_flows) mean steady goodput in bytes/ns.
     Churn PRNGs are derived from `seed` + the scenario index, so a grid is
     reproducible end to end.
+
+    `mesh` shards the flow axis of every cell over the mesh devices under
+    ONE locality ShardPlan (the grid axis vmaps inside each shard);
+    `link_tier` feeds the planner — when omitted it is taken from the
+    first FleetScenario cell that carries one.  The shared plan requires
+    identical routes across cells; grids that vary routes fall back to the
+    single-device vmap path with a warning.
     """
-    nets, params, inters, lb, churn = stack_scenarios(scenarios)
+    if mesh is not None:
+        out = _run_grid_sharded(scenarios, scheme, n_warm, n_meas, seed,
+                                mesh, link_tier, unroll, backend)
+        if out is not None:
+            return out
+    nets, params, inters, lb, churn, rel = stack_scenarios(scenarios)
     n_links = nets.cap.shape[1]
     n_paths = nets.routes.shape[2] if nets.routes.ndim == 4 else 1
     # vmap the initial-state construction over the stacked grid instead of
     # a per-scenario Python loop + re-stack (one traced init, no host loop)
     seeds = seed + jnp.arange(len(scenarios), dtype=jnp.int32)
-    state0 = jax.vmap(
-        lambda p, s0, sd: init_state(p, n_links, n_paths=n_paths,
-                                     split0=s0, seed=sd)
-    )(params, jax.vmap(fl.uniform_split)(nets), seeds)
+    splits = jax.vmap(fl.uniform_split)(nets)
+    if rel is None:
+        state0 = jax.vmap(
+            lambda p, s0, sd: init_state(p, n_links, n_paths=n_paths,
+                                         split0=s0, seed=sd)
+        )(params, splits, seeds)
+    else:
+        state0 = jax.vmap(
+            lambda p, s0, sd, r: init_state(p, n_links, n_paths=n_paths,
+                                            split0=s0, seed=sd, rel=r)
+        )(params, splits, seeds, rel)
 
-    def one(net, p, s0, ii, lb_i, churn_i):
+    def one(net, p, s0, ii, lb_i, churn_i, rel_i):
         return steady_state_core(net, p, s0, ii, scheme, n_warm, n_meas,
-                                 lb_i, churn_i)
+                                 lb_i, churn_i, backend, rel=rel_i)
 
     axes = (0, 0, 0, 0, None if lb is None else 0,
-            None if churn is None else 0)
+            None if churn is None else 0, None if rel is None else 0)
     return jax.jit(jax.vmap(one, in_axes=axes))(nets, params, state0,
-                                                inters, lb, churn)
+                                                inters, lb, churn, rel)
+
+
+def _run_grid_sharded(scenarios, scheme, n_warm, n_meas, seed, mesh,
+                      link_tier, unroll, backend):
+    """Flow-sharded grid sweep: one ShardPlan, grid vmapped inside shards.
+
+    Returns None (after warning) when the cells' routes differ — the
+    caller then takes the single-device vmap path.  Results come back in
+    the ORIGINAL flow/link order with padding stripped, same contract as
+    the vmap path.
+    """
+    from jax.sharding import PartitionSpec as P
+    from repro.fleetsim import shard as sh
+    from repro.sharding import shard_map
+
+    norm = [_norm_scenario(s) for s in scenarios]
+    for tag, i in (("lb", 3), ("churn", 4), ("rel", 5)):
+        xs = [nm[i] for nm in norm]
+        if any(x is None for x in xs) != all(x is None for x in xs):
+            raise ValueError(f"{tag} must be set on all scenarios or none")
+    r0 = np.asarray(norm[0][0].routes)
+    if any(not np.array_equal(r0, np.asarray(nm[0].routes))
+           for nm in norm[1:]):
+        warnings.warn(
+            "run_grid(mesh=...) needs identical routes across grid cells "
+            "to share one ShardPlan; falling back to the single-device "
+            "vmap path", RuntimeWarning, stacklevel=3)
+        return None
+    if link_tier is None:
+        for s in scenarios:
+            link_tier = getattr(s, "link_tier", None)
+            if link_tier is not None:
+                break
+
+    # compile the shared plan + permuted routes + per-shard layouts ONCE
+    # (cell 0), then permute each cell's value arrays against it
+    net0, params0, ii0, lb0, churn0, rel0 = norm[0]
+    sf0 = sh.shard_scenario(net0, params0, is_inter=ii0, lb=lb0,
+                            churn=churn0, rel=rel0, mesh=mesh,
+                            link_tier=link_tier)
+    plan = sf0.plan
+    gflat = plan.flat_gather
+    real = gflat < plan.n_real
+    gc = jnp.asarray(np.where(real, gflat, 0))
+    realj = jnp.asarray(real)
+    new2old = jnp.asarray(plan.new2old)
+
+    def permute_cell(nm):
+        net, params, ii, lb, churn, rel = nm
+        net_p = sh._take_links(net, new2old)._replace(
+            routes=sf0.net.routes, layout=None)
+        params_p = jax.tree.map(lambda a: a[gc], params)
+        ii_p = ii[gc] & realj
+        lb_p = None if lb is None else jax.tree.map(lambda a: a[gc], lb)
+        rel_p = None if rel is None else \
+            jax.tree.map(lambda a: a[gc], rel)._replace(
+                enabled=rel.enabled[gc] & realj)
+        churn_p = None
+        if churn is not None:
+            churn_p = churn._replace(churned=churn.churned[gc] & realj,
+                                     mean_on=churn.mean_on[gc],
+                                     mean_off=churn.mean_off[gc])
+        return net_p, params_p, ii_p, lb_p, churn_p, rel_p
+
+    cells = [permute_cell(nm) for nm in norm]
+    stk = lambda *xs: jnp.stack(xs)
+    nets = jax.tree.map(stk, *(c[0] for c in cells))
+    params = jax.tree.map(stk, *(c[1] for c in cells))
+    inters = jnp.stack([c[2] for c in cells])
+    lb = None if cells[0][3] is None else \
+        jax.tree.map(stk, *(c[3] for c in cells))
+    churn = None if cells[0][4] is None else \
+        jax.tree.map(stk, *(c[4] for c in cells))
+    rel = None if cells[0][5] is None else \
+        jax.tree.map(stk, *(c[5] for c in cells))
+
+    n_links = plan.n_links
+    n_paths = nets.routes.shape[2] if nets.routes.ndim == 4 else 1
+    seeds = seed + jnp.arange(len(scenarios), dtype=jnp.int32)
+    splits = jax.vmap(fl.uniform_split)(nets)  # zero on inert padding rows
+
+    def init_cell(p, s0, sd, r):
+        return init_state(p, n_links, n_paths=n_paths, split0=s0, seed=sd,
+                          rel=r)
+
+    if rel is None:
+        state0 = jax.vmap(lambda p, s0, sd: init_cell(p, s0, sd, None))(
+            params, splits, seeds)
+    else:
+        state0 = jax.vmap(init_cell)(params, splits, seeds, rel)
+
+    churn_n = None if churn is None else plan.n_real
+    has = lambda x: x is not None
+    g = lambda spec: jax.tree.map(lambda s: P(None, *s), spec)
+
+    def local(nets_l, lay_l, params_l, state0_l, ii_l, lb_l, churn_l,
+              cmap_l, own_l, rel_l):
+        lay = jax.tree.map(lambda a: a[0], lay_l)
+        own = own_l[0]
+        cmap = None if cmap_l is None else cmap_l[0]
+
+        def one(net_c, p_c, s0_c, ii_c, lb_c, churn_c, rel_c):
+            net_c = net_c._replace(layout=lay)
+            final, rates = steady_state_core(
+                net_c, p_c, s0_c, ii_c, scheme=scheme, n_warm=n_warm,
+                n_meas=n_meas, lb=lb_c, churn=churn_c, backend=backend,
+                axis_name=sh.AXIS, halo=plan.n_boundary, churn_map=cmap,
+                churn_n=churn_n, unroll=unroll, rel=rel_c)
+            return final._replace(
+                q_phys=jax.lax.psum(
+                    jnp.where(own, final.q_phys, 0.0), sh.AXIS),
+                q_phantom=jax.lax.psum(
+                    jnp.where(own, final.q_phantom, 0.0), sh.AXIS)), rates
+
+        axes = (0, 0, 0, 0, 0 if has(lb_l) else None,
+                0 if has(churn_l) else None, 0 if has(rel_l) else None)
+        return jax.vmap(one, in_axes=axes)(
+            nets_l, params_l, state0_l, ii_l, lb_l, churn_l, rel_l)
+
+    from repro.fleetsim.reliability import RelParams
+    from repro.fleetsim.state import ChurnParams, FleetParams, LbParams
+    AXIS = sh.AXIS
+    lay_spec = fl.RouteLayout(
+        **{f: P(AXIS) for f in fl.RouteLayout._fields})
+    param_spec = g(FleetParams(
+        **{f: P(AXIS) for f in FleetParams._fields}))
+    lb_spec = None if lb is None else g(LbParams(
+        **{f: P(AXIS) for f in LbParams._fields}))
+    rel_spec = None if rel is None else g(RelParams(
+        **{f: P(AXIS) for f in RelParams._fields}))
+    churn_spec = cmap_spec = None
+    if churn is not None:
+        churn_spec = g(ChurnParams(
+            **{f: P(AXIS) for f in ChurnParams._fields}))
+        cmap_spec = P(AXIS)
+    state_spec = g(sh._state_spec(rel is not None))
+
+    f = shard_map(local, mesh,
+                  in_specs=(g(sh._net_spec(nets.p_loss is not None)),
+                            lay_spec, param_spec,
+                            state_spec, g(P(AXIS)), lb_spec, churn_spec,
+                            cmap_spec, P(AXIS), rel_spec),
+                  out_specs=(state_spec, g(P(AXIS))),
+                  check_vma=False)
+    final, rates = jax.jit(f)(nets, sf0.layouts, params, state0, inters,
+                              lb, churn, sf0.churn_map, sf0.own, rel)
+
+    inv = jnp.asarray(plan.inverse_flow)
+    old2new = jnp.asarray(plan.old2new)
+    final = jax.vmap(lambda s: sh._permute_state(s, inv, old2new))(final)
+    return final, rates[:, inv]
 
 
 # ------------------------------------------------------------ concrete sweeps
@@ -158,7 +352,7 @@ def fairness_sweep(rtt_ratios: Sequence[float],
                 n_intra, n_inter, rate=rate, intra_rtt=intra_rtt,
                 inter_rtt=ratio * intra_rtt, drain_frac=drain,
                 multipath=multipath, n_wan=n_wan))
-            scen.append((fs.net, fs.params, fs.is_inter, fs.lb, fs.churn))
+            scen.append(fs)
     _, rates = run_grid(scen, scheme=scheme, n_warm=n_warm, n_meas=n_meas)
     ii = jnp.arange(n_intra + n_inter) >= n_intra
     mean_inter = jnp.mean(rates[:, ii], axis=1) if n_inter else \
@@ -256,8 +450,7 @@ def churn_sweep(duty_fracs: Sequence[float],
             fs = to_fleetsim(dumbbell_scenario(
                 n_flows, 0, rate=rate, intra_rtt=intra_rtt,
                 intra_churn=churn, seed=seed))
-            scen.append((fs.net, fs.params, fs.is_inter,
-                         fs.lb, fs.churn))
+            scen.append(fs)
     _, rates = run_grid(scen, scheme=scheme, n_warm=n_warm, n_meas=n_meas,
                         seed=seed)
     return {
@@ -268,4 +461,97 @@ def churn_sweep(duty_fracs: Sequence[float],
         "util": (fleet_sum(rates, axis=1) / rate).reshape(shape),
         "expected_on": jnp.full(
             shape, n_flows) * jnp.asarray(duty_fracs)[:, None],
+    }
+
+
+def recovery_sweep(overloads: Sequence[float],
+                   ec_configs: Sequence[tuple],
+                   debounce_rtts: Sequence[float], *, n_inter: int = 64,
+                   rate: float = fl.RATE_100G, intra_rtt: float = 14 * US,
+                   inter_rtt: float = 2 * fl.MS, qcap: float = 64 * 1024,
+                   scheme: str = "uno", n_warm: int = 20_000,
+                   n_meas: int = 10_000, seed: int = 0, mesh=None,
+                   link_tier=None, unroll: int = 1) -> dict:
+    """Loss-recovery heatmap over (overload x EC geometry x NACK debounce).
+
+    Every cell is the same lossy inter-DC dumbbell — physical RED drops
+    (no phantom), a small `qcap`, and drop thresholds pushed to the tail
+    (`red_lo/hi = 0.85/0.98`) so the queue actually overflows — with the
+    downlink capacity scaled to `rate / overload`; only the bottleneck
+    pressure and the RelParams vary, so routes are identical and the grid
+    shards under one plan when `mesh` is given (satisfying run_grid's
+    sharded-path contract at 100k+ flows).
+
+    `ec_configs` are (k, r) pairs; `debounce_rtts` is the NACK holdoff in
+    units of the inter RTT (0.0 = fire every batch tick).  The NACK batch
+    period is pinned at a quarter RTT, matching netsim's default receiver
+    timeout, so fluid cells stay comparable to the packet oracle.
+
+    Returns (len(overloads), len(ec_configs), len(debounce_rtts)) arrays:
+    'util' (goodput / scaled bottleneck capacity), 'jain', 'retx_ratio'
+    (retransmitted / offered wire bytes), 'rec_ratio' (bytes recovered by
+    EC parity alone), 'loss_ratio', 'nacks' (total NACK batches fired),
+    'nack_lat' (mean per-flow recovery-latency EWMA, ns); plus
+    'rel_config', the resolved reliability knobs (EC geometries, debounce,
+    batch period, NACK quantum, loss MD) — benchmark entries persist it so
+    the compare tool can refuse to diff runs whose recovery configuration
+    changed (the numbers mean different machines then, not a regression).
+    """
+    from repro.fleetsim.reliability import make_rel_params
+    from repro.scenarios import dumbbell_scenario, to_fleetsim
+    base = to_fleetsim(dumbbell_scenario(
+        0, n_inter, rate=rate, intra_rtt=intra_rtt, inter_rtt=inter_rtt,
+        qcap=qcap, phantom=False, red_lo_frac=0.85, red_hi_frac=0.98,
+        seed=seed))
+    dt = float(base.net.dt)
+    down = base.net.cap.shape[0] - 1
+    period = max(int(round(0.25 * inter_rtt / dt)), 1)
+    shape = (len(overloads), len(ec_configs), len(debounce_rtts))
+    rels = {}
+    for ec in ec_configs:
+        for deb in debounce_rtts:
+            rels[(tuple(ec), float(deb))] = make_rel_params(
+                n_inter, ec=tuple(ec), nack_period=period,
+                nack_hold=int(round(deb * inter_rtt / dt)))
+    scen = []
+    for load in overloads:
+        if load <= 0:
+            raise ValueError(f"overload {load} must be positive")
+        net = base.net._replace(
+            cap=base.net.cap.at[down].mul(1.0 / load),
+            drain=base.net.drain.at[down].mul(1.0 / load))
+        for ec in ec_configs:
+            for deb in debounce_rtts:
+                scen.append((net, base.params, base.is_inter, base.lb,
+                             base.churn, rels[(tuple(ec), float(deb))]))
+    final, rates = run_grid(scen, scheme=scheme, n_warm=n_warm,
+                            n_meas=n_meas, seed=seed, mesh=mesh,
+                            link_tier=link_tier, unroll=unroll)
+    rs = final.rel
+    wire = jnp.maximum(fleet_sum(rs.wire_bytes, axis=1), 1.0)
+    loads = jnp.repeat(jnp.asarray(overloads, jnp.float32),
+                       len(ec_configs) * len(debounce_rtts))
+    return {
+        "overloads": jnp.asarray(overloads),
+        "ec_configs": tuple(tuple(ec) for ec in ec_configs),
+        "debounce_rtts": jnp.asarray(debounce_rtts),
+        "rates": rates.reshape(shape + (n_inter,)),
+        "jain": jain(rates).reshape(shape),
+        "util": (fleet_sum(rates, axis=1) * loads / rate).reshape(shape),
+        "retx_ratio": (fleet_sum(rs.rtx_bytes, axis=1) / wire)
+        .reshape(shape),
+        "rec_ratio": (fleet_sum(rs.rec_bytes, axis=1) / wire)
+        .reshape(shape),
+        "loss_ratio": (fleet_sum(rs.lost_bytes, axis=1) / wire)
+        .reshape(shape),
+        "nacks": fleet_sum(rs.nacks, axis=1).reshape(shape),
+        "nack_lat": jnp.mean(rs.lat_ewma, axis=1).reshape(shape),
+        "rel_config": {
+            "ec_configs": [list(map(int, ec)) for ec in ec_configs],
+            "debounce_rtts": [float(d) for d in debounce_rtts],
+            "nack_period_epochs": period,
+            "nack_quantum": float(next(iter(rels.values()))
+                                  .nack_quantum[0]),
+            "loss_md": float(next(iter(rels.values())).loss_md[0]),
+        },
     }

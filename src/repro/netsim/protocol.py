@@ -159,9 +159,14 @@ class Flow:
             x, y = ec
             self.n_blocks = math.ceil(self.n_data / x)
             self.n_parity = self.n_blocks * y
+            # interleaved layout: the short tail packet is the last DATA
+            # seq of the last block, not seq n_data - 1
+            self._last_data_seq = ((self.n_blocks - 1) * (x + y)
+                                   + self.block_data(self.n_blocks - 1) - 1)
         else:
             self.n_blocks = 1
             self.n_parity = 0
+            self._last_data_seq = self.n_data - 1
         self.n_pkts = self.n_data + self.n_parity
         self.nack_timeout = (nack_timeout if nack_timeout is not None
                              else max(0.25 * base_rtt, 100_000.0))
@@ -186,31 +191,42 @@ class Flow:
 
     # ------------------------------------------------------------- framing
 
+    # Interleaved per-block layout (UnoRC, paper §4.2): block b occupies
+    # the CONTIGUOUS seq range [b*(x+y), ...) — its x data packets first,
+    # its y parity packets right behind them.  The in-order sender then
+    # emits every block's parity together with its data, so the receiver
+    # can decode a lossy block one block-serialization after it started —
+    # appending all parity at the flow tail (the previous layout) made
+    # mid-stream recovery impossible for long flows: every block with one
+    # data loss sat on the NACK timer instead of its parity.
+
     def block_of(self, seq: int) -> int:
         if self.ec is None:
             return -1
         x, y = self.ec
-        if seq < self.n_data:
-            return seq // x
-        return (seq - self.n_data) // y
+        return seq // (x + y)
 
     def block_seqs(self, b: int):
         """All seqs (data + parity) of block b."""
-        x, y = self.ec
-        lo = b * x
-        hi = min(lo + x, self.n_data)
-        data = range(lo, hi)
-        par = range(self.n_data + b * y, self.n_data + (b + 1) * y)
-        return list(data) + list(par)
+        _, y = self.ec
+        lo = b * (self.ec[0] + y)
+        return list(range(lo, lo + self.block_data(b) + y))
 
     def block_data(self, b: int) -> int:
         """Number of packets needed to decode block b (its data count)."""
-        x, y = self.ec
+        x, _ = self.ec
         lo = b * x
         return min(lo + x, self.n_data) - lo
 
+    def is_parity_seq(self, seq: int) -> bool:
+        if self.ec is None:
+            return False
+        x, y = self.ec
+        b = seq // (x + y)
+        return seq - b * (x + y) >= self.block_data(b)
+
     def _pkt_size(self, seq: int) -> int:
-        if seq == self.n_data - 1 and self.size % self.mtu:
+        if seq == self._last_data_seq and self.size % self.mtu:
             return self.size % self.mtu
         return self.mtu
 
@@ -281,7 +297,7 @@ class Flow:
         b = self.block_of(seq)
         path, subflow = self.router.path_for(self.n_sent, b)
         pkt = Packet(self, seq, size, path, subflow, b,
-                     is_parity=seq >= self.n_data, retx=int(retx))
+                     is_parity=self.is_parity_seq(seq), retx=int(retx))
         pkt.send_time = self.sim.now
         if seq not in self.unacked:
             self.inflight += size

@@ -69,11 +69,14 @@ def spawn(net: Net, src: int, dst: int, size: int, *, cc_scheme: str,
           start_t: float = 0.0, rng: Optional[random.Random] = None,
           n_subflows: int = 8, on_done=None, mtu: int = 4096,
           trace_rate: bool = False, cc_kw: Optional[dict] = None,
-          router_salt: Optional[int] = None) -> Flow:
+          router_salt: Optional[int] = None,
+          nack_timeout: Optional[float] = None) -> Flow:
     """`router_salt` pins the router's hash/PRNG identity.  The default is
     the process-global Flow id, so ECMP/subflow choices differ between two
     otherwise-identical runs in one process; workload generators that
-    promise seed-reproducibility pass an explicit per-flow salt instead."""
+    promise seed-reproducibility pass an explicit per-flow salt instead.
+    `nack_timeout` overrides the receiver's block-recovery timer (default
+    max(rtt/4, 100us) — see protocol.Flow)."""
     paths = net.paths(src, dst)
     is_inter = net.is_inter(src, dst)
     bdp = net.bdp(src, dst)
@@ -86,7 +89,8 @@ def spawn(net: Net, src: int, dst: int, size: int, *, cc_scheme: str,
         rng=rng, base_rtt=base_rtt, n_subflows=n_subflows)
     f = Flow(net.sim, net, src, dst, size, cc, router, mtu=mtu,
              ec=ec if is_inter else None, start_t=start_t,
-             base_rtt=base_rtt, on_done=on_done, is_inter=is_inter)
+             base_rtt=base_rtt, on_done=on_done, is_inter=is_inter,
+             nack_timeout=nack_timeout)
     if trace_rate:
         f.rate_trace = []
     return f

@@ -1,7 +1,7 @@
 """repro.scenarios — ONE declarative spec drives BOTH simulators.
 
 A Scenario (links + flow groups over explicit path-sets + inter/intra
-tags + optional LB / churn) compiles to:
+tags + optional LB / churn / reliability) compiles to:
 
   * the packet simulator: `to_netsim(spec)` -> repro.netsim ScenarioNet,
     `spawn_backlogged(net, ...)` -> Flows;
@@ -39,12 +39,12 @@ from repro.scenarios.fat_tree import (TIER_AGG, TIER_CORE, TIER_EDGE,
                                       TIER_WAN, fat_tree_spec,
                                       link_tier_from_name, link_tiers)
 from repro.scenarios.spec import (ChurnSpec, FlowGroup, LbSpec, LinkSpec,
-                                  Path, PathSet, Scenario,
+                                  Path, PathSet, RelSpec, Scenario,
                                   dumbbell_scenario)
 
 __all__ = [
     "ChurnSpec", "FlowGroup", "LbSpec", "LinkSpec", "Path", "PathSet",
-    "Scenario", "dumbbell_scenario",
+    "RelSpec", "Scenario", "dumbbell_scenario",
     "TIER_EDGE", "TIER_AGG", "TIER_CORE", "TIER_WAN",
     "fat_tree_spec", "link_tier_from_name", "link_tiers",
     "FleetScenario", "ShardPlan", "fleet_arrays", "plan_shards",

@@ -1,5 +1,5 @@
 """Scenario -> fluid model: build the (FluidNet, FleetParams, is_inter,
-LbParams, ChurnParams) pytrees repro.fleetsim steps on.
+LbParams, ChurnParams, RelParams) pytrees repro.fleetsim steps on.
 
 The route tensor is (n_flows, n_paths, max_hops) int32 with -1 padding on
 both the hop axis (short paths) and the path axis (flows with fewer paths
@@ -44,6 +44,10 @@ class FleetScenario(NamedTuple):
     seed: int
     link_tier: Optional[np.ndarray] = None   # (n_links,) locality tiers
     # (host-side; feeds plan_shards — None on single-tier topologies)
+    rel: Optional[object] = None     # RelParams (None -> static-EC only):
+    # present when any inter group carries a RelSpec; its ec_eff also
+    # folds in the static LbSpec.ec efficiency of groups WITHOUT a
+    # RelSpec, since make_step skips lb.ec_eff entirely when rel is set
 
 
 def _flow_adaptive(g) -> bool:
@@ -94,10 +98,15 @@ def fleet_arrays(spec: Scenario):
     bdp = spec.rate * rtt
     is_inter = jnp.asarray([g.inter for _, g, _ in spec.flow_groups()], bool)
 
+    p_loss = None
+    if any(l.p_loss > 0.0 for l in spec.links):
+        p_loss = jnp.asarray([l.p_loss for l in spec.links], jnp.float32)
+
     net = FluidNet(cap=cap, qcap=qcap, ecn_lo=ecn_lo, ecn_hi=ecn_hi,
                    drain=drain, vcap=vcap, use_phantom=use_phantom,
                    routes=routes,
-                   dt=jnp.float32(spec.epoch_period_frac * spec.intra_rtt))
+                   dt=jnp.float32(spec.epoch_period_frac * spec.intra_rtt),
+                   p_loss=p_loss)
     # compile the RouteLayout once per scenario, here, so every consumer
     # (steady_state, sweeps.run_grid stacking, validate) steps on the
     # precomputed indices + sorted CSR view instead of re-deriving them
@@ -152,10 +161,51 @@ def to_fleetsim(spec: Scenario, **make_params_kw) -> FleetScenario:
                             mean_on=jnp.asarray(mean_on, jnp.float32),
                             mean_off=jnp.asarray(mean_off, jnp.float32))
 
+    rel = _compile_rel(spec, net)
+
     from repro.scenarios.fat_tree import link_tiers
     return FleetScenario(net=net, params=params, is_inter=is_inter,
                          lb=lb, churn=churn, seed=spec.seed,
-                         link_tier=link_tiers(spec))
+                         link_tier=link_tiers(spec), rel=rel)
+
+
+def _compile_rel(spec: Scenario, net: FluidNet):
+    """Per-flow RelParams from the groups' RelSpecs (None when no inter
+    group carries one).
+
+    Time-valued knobs round to the epoch clock: `nack_period` defaults to
+    the netsim NACK timeout (max(rtt/4, 100us)) so one spec means the
+    same cadence in both simulators.  Groups WITHOUT a RelSpec ride along
+    disabled, but their static `LbSpec.ec` efficiency is folded into
+    `rel.ec_eff` — make_step consults only rel.ec_eff once rel exists.
+    """
+    if not any(g.rel is not None and g.inter for g in spec.groups):
+        return None
+    from repro.fleetsim.reliability import make_rel_params, stack_rel_params
+    dt = float(net.dt)
+    rows = []
+    for g in spec.groups:
+        if g.n == 0:
+            continue
+        r = g.rel if g.inter else None
+        if r is not None:
+            rtt_g = g.rtt if g.rtt is not None else (
+                spec.inter_rtt if g.inter else spec.intra_rtt)
+            period = r.nack_period if r.nack_period is not None \
+                else max(0.25 * rtt_g, 100_000.0)
+            rows.append(make_rel_params(
+                g.n, ec=r.ec,
+                nack_period=max(int(round(period / dt)), 1),
+                nack_hold=int(round(r.debounce / dt)),
+                loss_md=r.loss_md, rtx_cap=r.rtx_cap))
+        else:
+            row = make_rel_params(g.n, enabled=np.zeros(g.n, bool))
+            k_r = g.lb.ec if g.inter else None
+            if k_r is not None:
+                row = row._replace(ec_eff=jnp.full(
+                    g.n, k_r[0] / (k_r[0] + k_r[1]), jnp.float32))
+            rows.append(row)
+    return stack_rel_params(rows)
 
 
 # ------------------------------------------------ locality shard planning

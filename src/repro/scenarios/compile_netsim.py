@@ -25,10 +25,17 @@ class ScenarioNet(Net):
         sim = Simulator(spec.seed if seed is None else seed)
         super().__init__(sim, 1 + spec.n_flows, spec.intra_rtt,
                          spec.inter_rtt, spec.rate)
-        for l in spec.links:
+        for li, l in enumerate(spec.links):
             ln = self._mk_link(l.name, l.rate, l.delay, int(l.qcap))
             ln.ecn_min = spec.red_lo_frac * l.qcap
             ln.ecn_max = spec.red_hi_frac * l.qcap
+            if l.p_loss > 0.0:
+                # Bernoulli random loss, rng pinned to (spec seed, link id)
+                # so two compilations of one spec drop identically
+                rng = random.Random(((spec.seed if seed is None else seed)
+                                     << 16) ^ li)
+                ln.loss_fn = (lambda r, p: lambda pkt, now:
+                              r.random() < p)(rng, l.p_loss)
             if l.wan:
                 self.wan_links.append(ln)
             if spec.phantom:
@@ -84,7 +91,10 @@ def spawn_backlogged(net: ScenarioNet, *, cc_scheme: str, size: int,
     """One long flow per spec flow, in spec order (cross-validation driver).
 
     Router kind / subflow count / EC come from each group's LbSpec unless
-    `lb` overrides the kind globally.  The rng is seeded from the spec so
+    `lb` overrides the kind globally; a group's RelSpec (dynamic
+    reliability) overrides the EC geometry and sets the receiver's NACK
+    timeout, so the packet run exercises the same recovery config the
+    fluid reliability machine models.  The rng is seeded from the spec so
     two spawns of the same spec route identically.
     """
     from repro.netsim import workloads as W
@@ -92,9 +102,12 @@ def spawn_backlogged(net: ScenarioNet, *, cc_scheme: str, size: int,
     rng = random.Random(spec.seed)
     flows = []
     for i, g, _ in spec.flow_groups():
+        ec = g.rel.ec if g.rel is not None else g.lb.ec
+        nack_timeout = g.rel.nack_period if g.rel is not None else None
         flows.append(W.spawn(
             net, 1 + i, 0, size, cc_scheme=cc_scheme,
-            lb=lb if lb is not None else g.lb.kind, ec=g.lb.ec,
+            lb=lb if lb is not None else g.lb.kind, ec=ec,
             n_subflows=g.lb.n_subflows, rng=rng, trace_rate=trace_rate,
-            cc_kw=cc_kw, router_salt=(spec.seed << 20) ^ i))
+            cc_kw=cc_kw, router_salt=(spec.seed << 20) ^ i,
+            nack_timeout=nack_timeout))
     return flows

@@ -15,7 +15,10 @@ per group.  Compilers:
 Both compilers consume the same flow ordering (groups in declaration order,
 flows within a group in index order), so "which flows share a bottleneck"
 is decided once, here, and cross-validation (repro.fleetsim.validate) can
-compare per-flow rates positionally.
+compare per-flow rates positionally.  A group's optional `RelSpec` compiles
+to the fluid reliability machine (repro.fleetsim.reliability) AND the
+packet receiver's EC framing/NACK timeout, making netsim the oracle for
+the fluid loss-recovery dynamics.
 
 Units follow the repo convention: ns / bytes / bytes-per-ns.
 """
@@ -46,6 +49,12 @@ class LinkSpec(NamedTuple):
     more shared (agg < core < WAN).  On a single-tier topology (the
     dumbbell) leave it 0 — the planner then uses its hub-count heuristic
     alone.
+
+    `p_loss` is a configured random per-packet/per-byte drop probability
+    (corrupting WAN segments, paper Table 1) — independent of queue
+    overflow.  netsim attaches a Bernoulli loss_fn seeded from the spec;
+    fleetsim folds it into the delivered fraction and the reliability
+    axis's composed loss signal (FluidNet.p_loss).
     """
     name: str
     rate: float                  # service rate (bytes/ns)
@@ -54,6 +63,7 @@ class LinkSpec(NamedTuple):
     wan: bool = False            # inter-DC link: phantom cap uses inter BDP
     vcap_scale: float = 1.0
     tier: int = 0                # locality tier (edge < agg < core < WAN)
+    p_loss: float = 0.0          # configured random drop probability
 
 
 class LbSpec(NamedTuple):
@@ -81,6 +91,27 @@ class ChurnSpec(NamedTuple):
     mean_off: float
 
 
+class RelSpec(NamedTuple):
+    """Dynamic reliability (EC + NACK recovery) for one flow group.
+
+    Supersedes the static `LbSpec.ec` goodput tax with the full recovery
+    state machine (repro.fleetsim.reliability) in the fluid compiler, and
+    sets the packet receiver's EC framing + NACK timeout in the netsim
+    compiler.  Like `LbSpec.ec` it applies to INTER-DC groups only (paper
+    §4.2: EC/NACK never runs intra-DC); on an intra group it is ignored.
+
+    `nack_period`/`debounce` are TIME values (ns); the fluid compiler
+    rounds them to epochs, netsim maps `nack_period` onto the flow's
+    nack_timeout.  `nack_period=None` defaults to a quarter of the flow
+    RTT (netsim protocol.Flow's default NACK timeout).
+    """
+    ec: Tuple[int, int] = (8, 2)
+    nack_period: Optional[float] = None   # ns between NACK batch ticks
+    debounce: float = 0.0                 # ns of holdoff after a NACK fires
+    loss_md: float = 0.5                  # cwnd factor on a NACK event
+    rtx_cap: float = 1.0                  # retransmit rate cap vs CC rate
+
+
 class FlowGroup(NamedTuple):
     """`n` flows sharing a traffic class.
 
@@ -95,6 +126,7 @@ class FlowGroup(NamedTuple):
     rtt: Optional[float] = None
     lb: LbSpec = LbSpec()
     churn: Optional[ChurnSpec] = None
+    rel: Optional[RelSpec] = None
 
     def path_set(self, i: int) -> PathSet:
         return self.path_sets[i if len(self.path_sets) > 1 else 0]
@@ -180,6 +212,8 @@ def dumbbell_scenario(n_intra: int, n_inter: int, *,
                       inter_lb: Optional[LbSpec] = None,
                       intra_churn: Optional[ChurnSpec] = None,
                       inter_churn: Optional[ChurnSpec] = None,
+                      inter_rel: Optional[RelSpec] = None,
+                      wan_p_loss: float = 0.0,
                       seed: int = 0, name: str = "dumbbell") -> Scenario:
     """The shared inter/intra dumbbell: one spec for netsim AND fleetsim.
 
@@ -202,12 +236,13 @@ def dumbbell_scenario(n_intra: int, n_inter: int, *,
     links = [LinkSpec(f"up{i}", rate, d_inb, qcap) for i in range(n_intra)]
     if multipath:
         wan_names = [f"wan{w}" for w in range(n_wan)]
-        links += [LinkSpec(w, rate, wan_delay, qcap, wan=True)
+        links += [LinkSpec(w, rate, wan_delay, qcap, wan=True,
+                           p_loss=wan_p_loss)
                   for w in wan_names]
     else:
         wan_names = ["wan"]
         links += [LinkSpec("wan", n_wan * rate, wan_delay, qcap, wan=True,
-                           vcap_scale=float(n_wan))]
+                           vcap_scale=float(n_wan), p_loss=wan_p_loss)]
     links += [LinkSpec(f"down{j}", rate, d_inb, qcap)
               for j in range(n_bottleneck)]
 
@@ -227,7 +262,7 @@ def dumbbell_scenario(n_intra: int, n_inter: int, *,
             inter=True,
             lb=inter_lb or LbSpec(kind="unolb" if multipath else "rps",
                                   n_subflows=n_wan),
-            churn=inter_churn))
+            churn=inter_churn, rel=inter_rel))
 
     return Scenario(
         name=name, links=tuple(links), groups=tuple(groups), rate=rate,

@@ -59,6 +59,31 @@ def test_normal_ratio_and_regression_flag(capsys):
     assert "( 1.10x)" in out
 
 
+def test_rel_config_change_is_incomparable(capsys):
+    ra = {"ec_configs": [[8, 2]], "debounce_rtts": [0.0, 1.0],
+          "nack_quantum": 4096.0}
+    rb = dict(ra, ec_configs=[[4, 1]])
+    a, b = _pt(2000, "grid", 9_000_000, variant="recovery"), \
+        _pt(2000, "grid", 2_000_000, variant="recovery")
+    a["rel"], b["rel"] = ra, rb
+    compare_last_two([_entry("aaa", [a]), _entry("bbb", [b])])
+    out = capsys.readouterr().out
+    assert "incomparable" in out
+    assert "ec_configs" in out                 # the changed knob is named
+    assert "x)" not in out                     # and no ratio is printed
+
+
+def test_same_rel_config_still_compares(capsys):
+    rel = {"ec_configs": [[8, 2]], "debounce_rtts": [0.0]}
+    a, b = _pt(2000, "grid", 2_000_000, variant="recovery"), \
+        _pt(2000, "grid", 2_200_000, variant="recovery")
+    a["rel"], b["rel"] = rel, dict(rel)
+    compare_last_two([_entry("aaa", [a]), _entry("bbb", [b])])
+    out = capsys.readouterr().out
+    assert "( 1.10x)" in out
+    assert "incomparable" not in out
+
+
 def test_fat_tree_variant_points_join_on_variant(capsys):
     hist = [_entry("aaa", [_pt(12_000, "layout", 3_000_000,
                                variant="fat_tree_k4")]),

@@ -70,10 +70,16 @@ def test_path_mark_frac_composes_hops():
 
 def test_ai_matches_scalar_alpha_per_epoch():
     """Clean network: cwnd grows by ~alpha per epoch, exactly like the
-    scalar UnoCC AI invariant (tests/test_unocc.py::test_ai_per_rtt...)."""
+    scalar UnoCC AI invariant (tests/test_unocc.py::test_ai_per_rtt...).
+
+    cwnd starts ABOVE 0.7x the initial FI ceiling (= max_cwnd): below it
+    the fast increase engages after 3 clean windows and growth is
+    exponential, not alpha — see test_reliability's FI regression test.
+    max_cwnd is pinned to 1 BDP so that FI-free region stays under the
+    line rate (above BDP the link caps acked bytes and scales AI down)."""
     net, bdp, rtt = dumbbell(1, 0, drain_frac=10.0)   # marks unreachable
-    p = make_params(bdp, rtt, INTRA_BDP, INTRA_RTT)
-    s0 = init_state(p, net.n_links, cwnd0=0.5 * bdp)
+    p = make_params(bdp, rtt, INTRA_BDP, INTRA_RTT, max_cwnd_bdps=1.0)
+    s0 = init_state(p, net.n_links, cwnd0=0.8 * p.max_cwnd)
     n = 100
     final, _ = simulate(net, p, n_epochs=n, state0=s0)
     grown = float(final.cwnd[0] - s0.cwnd[0])

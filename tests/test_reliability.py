@@ -1,0 +1,327 @@
+"""Dynamic EC + NACK reliability axis (repro.fleetsim.reliability).
+
+Four layers, cheapest first:
+
+  * closed-form checks of the binomial recovery split against a numpy
+    reference (exact zeros at q == 0, the rec + nack = q*k/n identity,
+    the parity window never crediting more than r losses);
+  * the state machine driven open-loop (quantum gating, batch period,
+    debounce holdoff, the once-per-RTT loss_md gate);
+  * compiled end-to-end invariants: the zero-loss reliability trace is
+    bit-identical to the static-EC trace, the configured p_loss channel
+    thins goodput by the path survival, fast increase recovers a
+    collapsed window at FI pace, and `recovery_sweep` grids behave;
+  * (slow) the packet-simulator oracle: compare_recovery_steady_state
+    tolerances pinned, and the sharded recovery grid matching vmap.
+"""
+import json
+import math
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fleetsim import reliability as R
+from repro.fleetsim import cc as fleet_cc
+from repro.scenarios import LbSpec, RelSpec, dumbbell_scenario, to_fleetsim
+from repro.scenarios.spec import MIB, MS, US
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ------------------------------------------------------ recovery split math
+
+def _split_reference(k, r, q):
+    """Numpy closed form: E[X * 1(X <= r)] and its complement, scaled."""
+    n = k + r
+    rec_w = sum(i * math.comb(n, i) * q**i * (1 - q) ** (n - i)
+                for i in range(r + 1))
+    nack_w = n * q - rec_w
+    return rec_w * k / n**2, nack_w * k / n**2
+
+
+@pytest.mark.parametrize("ec", [(8, 2), (4, 1), (10, 0), (8, 8)])
+@pytest.mark.parametrize("q", [0.0, 0.001, 0.02, 0.2, 0.7, 1.0])
+def test_recovery_split_matches_binomial_reference(ec, q):
+    rel = R.make_rel_params(3, ec=ec)
+    rec, nack = R.recovery_split(rel, jnp.full(3, q, jnp.float32))
+    ref_rec, ref_nack = _split_reference(*ec, q)
+    np.testing.assert_allclose(np.asarray(rec), ref_rec, rtol=2e-4,
+                               atol=1e-7)
+    np.testing.assert_allclose(np.asarray(nack), ref_nack, rtol=2e-4,
+                               atol=1e-7)
+
+
+def test_recovery_split_identity_and_window_bound():
+    rng = np.random.default_rng(0)
+    for k, r in [(8, 2), (6, 3), (12, 1), (4, 4)]:
+        rel = R.make_rel_params(64, ec=(k, r))
+        q = jnp.asarray(rng.uniform(0.0, 1.0, 64), jnp.float32)
+        rec, nack = R.recovery_split(rel, q)
+        rec, nack = np.asarray(rec), np.asarray(nack)
+        n = k + r
+        assert (rec >= 0).all() and (nack >= 0).all()
+        # every lost data byte is recovered or NACKed: rec + nack = q*k/n
+        np.testing.assert_allclose(rec + nack, np.asarray(q) * k / n,
+                                   rtol=1e-4, atol=1e-6)
+        # the parity window credits at most r losses per block
+        assert (rec * n * n / k <= r + 1e-4).all()
+
+
+def test_recovery_split_exact_zero_at_zero_loss_and_disabled():
+    rel = R.make_rel_params(4, ec=(8, 2),
+                            enabled=jnp.asarray([1, 1, 0, 0], bool))
+    rec, nack = R.recovery_split(rel, jnp.asarray([0.0, 0.3, 0.3, 0.0]))
+    # q == 0 must be EXACTLY 0.0 (bit-identity of the no-loss trace);
+    # disabled flows report (0, 0) regardless of q
+    assert float(rec[0]) == 0.0 and float(nack[0]) == 0.0
+    assert float(rec[2]) == 0.0 and float(nack[2]) == 0.0
+    assert float(rec[3]) == 0.0 and float(nack[3]) == 0.0
+    assert float(rec[1]) > 0.0 and float(nack[1]) > 0.0
+
+
+def test_make_rel_params_validates_geometry():
+    with pytest.raises(ValueError):
+        R.make_rel_params(1, ec=(0, 2))
+    with pytest.raises(ValueError):
+        R.make_rel_params(1, ec=(8, R.MAX_R + 1))
+
+
+# ------------------------------------------------------- state machine
+
+def _drive(rel, n_epochs, *, rate=1.0, q=0.2, dt=1000.0, rtt=10_000.0):
+    """Open-loop drive of rel_epoch; returns (states, fires) per epoch."""
+    st = R.init_rel_state(rel)
+    states, cuts = [], []
+    one = jnp.ones(1, jnp.float32)
+    for _ in range(n_epochs):
+        rtx = R.rtx_rate(rel, st, rate * one, rtt * one)
+        st, cut, _ = R.rel_epoch(rel, st, rate * one, rtx,
+                                 rate * one + rtx, q * one, dt, rtt * one)
+        states.append(st)
+        cuts.append(bool(cut[0]))
+    return states, cuts
+
+
+def test_nack_quantum_gates_fires():
+    # ec=(1, 0): every lost byte takes the NACK path (nack_frac == q)
+    rel = R.make_rel_params(1, ec=(1, 0), nack_period=1,
+                            nack_quantum=4096.0)
+    # 200 lost bytes/epoch: pending crosses the 4096-byte quantum only
+    # at epoch ceil(4096/200) = 21 — no NACK before that
+    states, _ = _drive(rel, 30, rate=1.0, q=0.2, dt=1000.0)
+    nacks = [float(s.nacks[0]) for s in states]
+    assert nacks[19] == 0.0
+    assert nacks[-1] >= 1.0
+    first = next(i for i, v in enumerate(nacks) if v > 0)
+    assert float(states[first].pending[0]) == 0.0      # drained on fire
+    assert float(states[first].backlog[0]) > 0.0
+
+
+def test_nack_period_and_debounce_spacing():
+    rel = R.make_rel_params(1, ec=(1, 0), nack_period=5, nack_hold=7,
+                            nack_quantum=1.0)
+    states, _ = _drive(rel, 60, rate=1.0, q=0.5, dt=1000.0)
+    nacks = np.array([float(s.nacks[0]) for s in states])
+    fires = np.flatnonzero(np.diff(nacks, prepend=0.0) > 0)
+    assert len(fires) >= 3
+    # holdoff: after a fire, no further fire for nack_hold epochs — AND
+    # the next fire still waits for a batch tick (period 5)
+    gaps = np.diff(fires)
+    assert (gaps >= 7).all()
+    assert (gaps % 5 == 0).all() or (gaps >= 5).all()
+
+
+def test_loss_md_cut_rate_limited_to_one_per_rtt():
+    # fire every tick (quantum 1, period 1, heavy loss) but the cut mask
+    # must be spaced >= rtt/dt = 10 epochs — the packet sender's
+    # once-per-RTT on_loss_signal guard
+    rel = R.make_rel_params(1, ec=(1, 0), nack_period=1, nack_quantum=1.0)
+    states, cuts = _drive(rel, 50, rate=1.0, q=0.5, dt=1000.0,
+                          rtt=10_000.0)
+    nacks = [float(s.nacks[0]) for s in states]
+    assert nacks[-1] > 10.0                      # NACK batches keep firing
+    cut_idx = np.flatnonzero(cuts)
+    assert len(cut_idx) >= 2
+    assert (np.diff(cut_idx) >= 10).all()
+
+
+def test_rel_state_observables_invariants():
+    rel = R.make_rel_params(1, ec=(8, 2), nack_period=3, nack_quantum=1.0)
+    states, _ = _drive(rel, 80, rate=2.0, q=0.1, dt=1000.0)
+    for field in ("rec_bytes", "rtx_bytes", "wire_bytes", "lost_bytes"):
+        vals = np.array([float(getattr(s, field)[0]) for s in states])
+        assert (vals >= 0.0).all()
+        assert (np.diff(vals) >= -1e-6).all()    # cumulative counters
+    assert all(float(s.rtx_ewma[0]) >= 0.0 for s in states)
+    assert all(float(s.backlog[0]) >= 0.0 for s in states)
+    last = states[-1]
+    assert float(last.lost_bytes[0]) <= float(last.wire_bytes[0])
+
+
+def test_rtx_rate_zero_on_empty_backlog_and_capped():
+    rel = R.make_rel_params(2, ec=(8, 2), rtx_cap=0.5)
+    st = R.init_rel_state(rel)
+    rate = jnp.asarray([1.0, 1.0], jnp.float32)
+    rtt = jnp.asarray([1000.0, 1000.0], jnp.float32)
+    assert float(R.rtx_rate(rel, st, rate, rtt).sum()) == 0.0
+    st = st._replace(backlog=jnp.asarray([1e9, 10.0], jnp.float32))
+    rtx = np.asarray(R.rtx_rate(rel, st, rate, rtt))
+    assert rtx[0] == pytest.approx(0.5)          # rtx_cap * rate
+    assert rtx[1] == pytest.approx(0.01)         # backlog / rtt
+
+
+# ------------------------------------------------- compiled end-to-end
+
+def _sim_traj(spec, n_epochs=4000):
+    fs = to_fleetsim(spec)
+    final, traj = fleet_cc.simulate(
+        fs.net, fs.params, n_epochs=n_epochs, scheme="uno",
+        is_inter=fs.is_inter, lb=fs.lb, churn=fs.churn, rel=fs.rel,
+        seed=fs.seed, record=True)
+    return fs, final, np.asarray(traj)
+
+
+def test_zero_loss_bit_identical_to_static_ec_path():
+    """With no loss anywhere (huge qcap, no p_loss) the reliability
+    machine must be exactly inert: its goodput trajectory is
+    bit-identical to the rel=None static-EC trace, and the machine's
+    pools/counters stay exactly zero."""
+    kw = dict(qcap=512 * MIB, seed=3)
+    s_rel = dumbbell_scenario(0, 4, inter_rel=RelSpec(ec=(8, 2)), **kw)
+    s_static = dumbbell_scenario(
+        0, 4, inter_lb=LbSpec(kind="rps", n_subflows=8, ec=(8, 2)), **kw)
+    fs, final, t_rel = _sim_traj(s_rel)
+    assert fs.rel is not None
+    fs2, _, t_static = _sim_traj(s_static)
+    assert fs2.rel is None
+    np.testing.assert_array_equal(t_rel, t_static)
+    for f in ("pending", "backlog", "rtx_bytes", "rec_bytes",
+              "lost_bytes", "nacks"):
+        assert float(np.abs(np.asarray(getattr(final.rel, f))).sum()) \
+            == 0.0, f
+
+
+def test_ploss_channel_thins_goodput_by_path_survival():
+    """Configured random loss on the WAN thins delivered goodput by the
+    survival probability even with the reliability machine absent —
+    it is a link property, not a rel-axis feature."""
+    base = dict(qcap=512 * MIB, seed=3)
+    _, _, t0 = _sim_traj(dumbbell_scenario(0, 2, **base))
+    spec = dumbbell_scenario(0, 2, wan_p_loss=0.1, **base)
+    fs, _, t1 = _sim_traj(spec)
+    assert fs.net.p_loss is not None
+    m0, m1 = t0[-500:].mean(), t1[-500:].mean()
+    assert m1 / m0 == pytest.approx(0.9, rel=0.02)
+
+
+def test_fast_increase_recovers_collapsed_window():
+    """UnoCC fast increase (new FleetState fi_* fields): a deeply
+    collapsed window on an uncongested path re-grows exponentially —
+    back near BDP orders of magnitude faster than alpha-AI (alpha =
+    0.001 * BDP) ever could."""
+    from repro.fleetsim import dumbbell, make_params
+    from repro.fleetsim.links import RATE_100G
+    from repro.fleetsim.state import init_state
+    net, bdp, rtt = dumbbell(1, 0)
+    p = make_params(bdp, rtt, RATE_100G * 14 * US, 14 * US)
+    s0 = init_state(p, net.n_links, cwnd0=bdp / 50.0)
+    final, _ = fleet_cc.simulate(net, p, n_epochs=10, scheme="uno",
+                                 state0=s0,
+                                 is_inter=jnp.zeros(1, bool))
+    # alpha-AI alone adds ~alpha = 0.001 * BDP per epoch: 10 epochs would
+    # leave cwnd near 0.03 BDP.  FI doubles per RTT after 3 clean windows,
+    # so crossing 0.9 BDP inside 10 epochs is FI-only.
+    assert float(final.cwnd[0]) >= 0.9 * float(p.bdp[0])
+    assert bool(final.fi_active[0]) or \
+        float(final.cwnd[0]) >= 0.7 * float(final.fi_ceiling[0])
+
+
+def test_recovery_sweep_smoke_grid():
+    from repro.fleetsim import sweeps
+    res = sweeps.recovery_sweep(
+        overloads=[1.5, 3.0], ec_configs=[(8, 2), (8, 0)],
+        debounce_rtts=[0.0, 1.0], n_inter=64,
+        n_warm=4000, n_meas=1000)
+    shape = (2, 2, 2)
+    for key in ("util", "jain", "retx_ratio", "rec_ratio", "loss_ratio",
+                "nacks", "nack_lat"):
+        assert res[key].shape == shape, key
+        assert np.isfinite(res[key]).all(), key
+    assert (res["retx_ratio"] >= 0).all()
+    assert (res["rec_ratio"] >= 0).all()
+    # parity-less EC (r=0) cannot recover anything locally
+    assert np.allclose(res["rec_ratio"][:, 1, :], 0.0, atol=1e-9)
+    # with parity, overflow loss recovers locally somewhere on the grid
+    assert res["rec_ratio"][:, 0, :].max() > 0.0
+    # on the parity-less slice every recovery is a NACK round trip whose
+    # modelled latency is deterministic in the holdoff: a 1-RTT debounce
+    # cannot DECREASE the recovery latency estimate
+    assert (res["nack_lat"][:, 1, 1] >= res["nack_lat"][:, 1, 0] - 1e-6) \
+        .all()
+
+
+# ------------------------------------------------------------ slow oracle
+
+def _run(code: str) -> dict:
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_recovery_sweep_sharded_matches_vmap():
+    """recovery_sweep(mesh=...) — the grid-prepended shard_map path —
+    must reproduce the single-device vmap grid exactly (same epochs,
+    same arithmetic, only the flow axis is device-split)."""
+    res = _run(r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, numpy as np, json
+jax.config.update("jax_platform_name", "cpu")
+from jax.sharding import Mesh
+from repro.fleetsim import sweeps
+from repro.fleetsim.shard import AXIS
+
+kw = dict(overloads=[1.5, 3.0], ec_configs=[(8, 2)],
+          debounce_rtts=[0.0, 1.0], n_inter=256,
+          n_warm=2000, n_meas=500)
+a = sweeps.recovery_sweep(**kw)
+mesh = Mesh(np.array(jax.devices()), (AXIS,))
+b = sweeps.recovery_sweep(mesh=mesh, **kw)
+out = {}
+for k in ("rates", "util", "retx_ratio", "rec_ratio", "nacks"):
+    out[k] = float(np.max(np.abs(np.asarray(a[k]) - np.asarray(b[k]))))
+print(json.dumps(out))
+""")
+    for k, v in res.items():
+        assert v <= 1e-5, (k, v)
+
+
+@pytest.mark.slow
+def test_cross_validation_recovery_tolerances():
+    """Pin the packet-oracle tolerances for the configured-loss regime
+    (see compare_recovery_steady_state's docstring for why overflow loss
+    is NOT comparable).  The recovery MATH is tight (loss fraction ==
+    p_loss, parity-recovery == the binomial closed form, retransmit
+    fraction == the expected NACK-path load); the rate EQUILIBRIUM is
+    loose — netsim's per-flow rates carry FI-ceiling hysteresis from
+    the start transient (a packet-luck effect the symmetric fluid
+    cannot express), calibrated at ~2.2x per-flow / ~1.7x aggregate."""
+    from repro.fleetsim import validate as V
+    ec, p_loss = (8, 2), 0.02
+    r = V.compare_recovery_steady_state(
+        n_inter=6, ec=ec, p_loss=p_loss,
+        n_warm=200_000, n_meas=200_000)
+    ref_rec, ref_nack = _split_reference(*ec, p_loss)
+    assert r["loss_fluid"] == pytest.approx(p_loss, rel=0.05)
+    assert r["rec_fluid"] == pytest.approx(ref_rec, rel=0.10)
+    assert r["retx_fluid"] == pytest.approx(ref_nack, rel=0.50)
+    assert r["retx_netsim"] < 2e-3               # no spurious NACK storms
+    ratio = r["util_fluid"] / max(r["util_netsim"], 1e-9)
+    assert 0.8 < ratio < 2.5
+    assert r["max_rel_err"] < 3.5
