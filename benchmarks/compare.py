@@ -10,15 +10,30 @@ and loss-MD knobs under "rel") are only compared when those knobs match —
 otherwise the pair is reported incomparable, naming the changed knobs,
 instead of printing a ratio that would misread a configuration change as
 a performance delta.  `--all` prints the whole trajectory of
-one metric per config instead.  Exit code is always 0 — this is a report,
-not a gate (the CI gates are the smoke step's wall-clock timeout and the
-boundary-payload + fast-path guards inside fleetsim_sweep).
+one metric per config instead.
+
+Most lines are a report, but the points named in `_FLOORS` are a GATE:
+the fat-tree layout point runs the PathTable-compressed hot path, and a
+drop below the floor ratio vs the last comparable entry (same mode and
+cpu_count — cross-machine numbers are noise) exits 1.  Everything else
+stays advisory (the other CI gates are the smoke step's wall-clock
+timeout and the boundary-payload + fast-path guards inside
+fleetsim_sweep).
 """
 from __future__ import annotations
 
 import sys
 
 from benchmarks.fleetsim_sweep import BENCH_PATH, load_history
+
+# per-point speedup floors, keyed like _key(): new >= floor * old or the
+# run exits 1.  Same 0.7 bar as the smoke fast-path guard — loose enough
+# for shared-runner noise, tight enough that losing the PathTable
+# compression (a ~4-5x cliff) can never slip through a green CI run.
+_FLOORS = {
+    (100_000, "fat_tree_k8", "layout"): 0.7,
+    (12_000, "fat_tree_k4", "layout"): 0.7,
+}
 
 
 def _key(p: dict) -> tuple:
@@ -41,12 +56,17 @@ def _rel_diff(ra, rb) -> str:
     return ", ".join(f"{k}: {ra.get(k)} -> {rb.get(k)}" for k in keys)
 
 
-def compare_last_two(hist: list) -> None:
+def compare_last_two(hist: list) -> list:
+    """Print the per-config deltas; return the list of floor violations
+    (empty when every gated point held its floor)."""
     prev, cur = hist[-2], hist[-1]
     pm, cm = prev.get("meta", {}), cur.get("meta", {})
     print(f"comparing {pm.get('git_sha', '?')} ({pm.get('generated', '?')}, "
           f"mode={pm.get('mode', '?')}) -> {cm.get('git_sha', '?')} "
           f"({cm.get('generated', '?')}, mode={cm.get('mode', '?')})")
+    comparable = (pm.get("mode") == cm.get("mode")
+                  and pm.get("cpu_count") == cm.get("cpu_count"))
+    violations = []
     pp, cp = _points(prev), _points(cur)
     for key in sorted(set(pp) | set(cp)):
         n, variant, path = key
@@ -84,7 +104,11 @@ def compare_last_two(hist: list) -> None:
                   "(ratio n/a: previous value < 1 fe/s)")
             continue
         ratio = new / old
+        floor = _FLOORS.get(key)
         flag = "  <-- regression" if ratio < 0.8 else ""
+        if floor is not None and comparable and ratio < floor:
+            flag = f"  <-- BELOW {floor}x FLOOR"
+            violations.append(f"{name}: {ratio:.2f}x < {floor}x floor")
         print(f"  {name}: {_fmt(old)} -> {_fmt(new)} fe/s "
               f"({ratio:5.2f}x){flag}")
     for e, label in ((prev, "prev"), (cur, "cur ")):
@@ -92,6 +116,7 @@ def compare_last_two(hist: list) -> None:
             r = e["run_1m"]
             print(f"  {label} run_1m: {r['wall_s']}s, "
                   f"{_fmt(r['flow_epochs_per_s'])} fe/s")
+    return violations
 
 
 def print_trajectory(hist: list) -> None:
@@ -124,7 +149,12 @@ def main(argv) -> int:
               "compare — run benchmarks.fleetsim_sweep --scaling to grow "
               "the trajectory")
         return 0
-    compare_last_two(hist)
+    violations = compare_last_two(hist)
+    if violations:
+        print("speedup floor violations:")
+        for v in violations:
+            print(f"  {v}")
+        return 1
     return 0
 
 

@@ -40,6 +40,18 @@ Acceptance targets:
     reliability-DISABLED 10k layout point holds its throughput vs the
     last comparable trajectory entry (rel=None compiles the machine out
     — the guard keeps that claim honest).
+  * ISSUE 7: the fat-tree layout point runs the PathTable-compressed
+    backend ("auto" selects it — the scenario compiler attaches the
+    unique-path-segment table on deep-multipath routes) and its entry
+    splits timing into spec_build_s / compile_s / warm_s and records
+    n_unique_paths next to n_flows so the dedupe ratio is visible in the
+    trajectory.  `--profile` wraps that point in jax.profiler and prints
+    the per-phase timings; `--check-equivalence` pins the pt backends to
+    the reference scatter on the smoke fat tree (CI runs it under a
+    2-forced-device mesh so the sharded/halo variant is covered too);
+    `--block` overrides the Pallas flow-block size (default: picked from
+    n_flows).  The smoke fast-path guard also covers the k=4 fat-tree
+    layout point so the compressed backend cannot silently regress.
 
 Reports: jitted single-scenario rate (compile time separated out), the same
 1k-flow scenario's steady utilization/fairness as a sanity check, the
@@ -49,6 +61,8 @@ for the figure registry (benchmarks.run).
 """
 from __future__ import annotations
 
+import argparse
+import contextlib
 import datetime
 import json
 import os
@@ -252,31 +266,68 @@ def _dump_scenario(n_flows: int, kind: str = "dumbbell",
 
 
 def _time_simulate(net, params, n_epochs, *, is_inter=None, lb=None,
-                   backend="auto", reps=3):
+                   backend="auto", block=None, reps=3):
     """(cold_s, best warm_s) for one jitted n_epochs run."""
     t0 = time.time()
     final, _ = simulate(net, params, n_epochs=n_epochs, is_inter=is_inter,
-                        lb=lb, backend=backend)
+                        lb=lb, backend=backend, block=block)
     jax.block_until_ready(final.cwnd)
     cold = time.time() - t0
     best = float("inf")
     for _ in range(reps):
         t0 = time.time()
         final, _ = simulate(net, params, n_epochs=n_epochs,
-                            is_inter=is_inter, lb=lb, backend=backend)
+                            is_inter=is_inter, lb=lb, backend=backend,
+                            block=block)
         jax.block_until_ready(final.cwnd)
         best = min(best, time.time() - t0)
     return cold, best
 
 
-def _point(n_flows, n_epochs, *, variant, path, warm_s, cold_s=None):
+def _point(n_flows, n_epochs, *, variant, path, warm_s, cold_s=None,
+           **extra):
     rec = {"n_flows": n_flows, "n_epochs": n_epochs, "variant": variant,
            "path": path, "warm_s": round(warm_s, 3),
            "flow_epochs_per_s": round(n_flows * n_epochs / warm_s)}
     if cold_s is not None:
         rec["cold_s"] = round(cold_s, 2)
+    rec.update(extra)
     print("  ", json.dumps(rec))
     return rec
+
+
+def _fat_tree_layout_point(ft_k: int, ft_n: int, ft_ne: int, *,
+                           backend: str = "auto", block=None,
+                           profile_dir=None) -> dict:
+    """Time the fat-tree layout point with its phases split out.
+
+    spec_build_s: scenario compile + trimmed-layout rebuild, including
+    the PathTable dedupe (0.0x when the cached scenario is reused);
+    compile_s: jit trace + compile, reported as cold_s - warm_s (it used
+    to hide inside cold_s); warm_s: the best warm scan.  The entry also
+    records n_unique_paths — the table's unique-segment count (null when
+    the scenario compiled flat) — next to n_flow_paths, so the dedupe
+    ratio is visible in the trajectory.  `profile_dir` wraps the timed
+    runs in jax.profiler.trace for TensorBoard-readable per-op detail.
+    """
+    t0 = time.time()
+    net, params, ii, lb, _ = _scenario(ft_n, True, "fat_tree", ft_k)
+    fast_net = fl.with_layout(net, trim=True)
+    spec_build = time.time() - t0
+    ctx = (jax.profiler.trace(profile_dir) if profile_dir
+           else contextlib.nullcontext())
+    with ctx:
+        cold, warm = _time_simulate(fast_net, params, ft_ne, is_inter=ii,
+                                    lb=lb, backend=backend, block=block)
+    pt = fast_net.layout.path_table
+    return _point(
+        ft_n, ft_ne, variant=f"fat_tree_k{ft_k}", path="layout",
+        warm_s=warm, cold_s=cold,
+        spec_build_s=round(spec_build, 2),
+        compile_s=round(max(cold - warm, 0.0), 2),
+        backend=backend,
+        n_unique_paths=None if pt is None else int(pt.n_segments),
+        n_flow_paths=int(np.prod(fast_net.routes.shape[:2])))
 
 
 def _sharded_point(n_flows: int, n_epochs: int, n_devices: int = 2,
@@ -381,38 +432,51 @@ def _recovery_point(mode: str) -> dict:
     return rec
 
 
+# smoke points the fast-path guard watches: the 10k dumbbell layout point
+# (the pre-existing hot path) and the k=4 fat-tree layout point (the
+# PathTable-compressed backend, ISSUE 7) — a broken table build would
+# otherwise only show as a silent throughput cliff
+_GUARD_KEYS = ((10_000, "single", "layout"),
+               (12_000, "fat_tree_k4", "layout"))
+
+
 def _guard_fast_path(entry: dict, hist: list) -> None:
     """Smoke-mode regression guard for the reliability-DISABLED hot path:
-    compare the 10k/single/layout point against the most recent prior
+    compare each guarded layout point against the most recent prior
     entry measured on a comparable host.  The reliability machinery is
     compiled out entirely when rel is None — this guard is what keeps
     that claim honest run over run."""
-    key = (10_000, "single", "layout")
-    cur = {(p["n_flows"], p.get("variant", "single"), p["path"]): p
-           for p in entry["points"]}.get(key)
-    if cur is None or cur.get("skipped"):
-        return
     meta = entry["meta"]
-    for prev in reversed(hist):
-        pm = prev.get("meta", {})
-        if pm.get("mode") != meta["mode"] or \
-                pm.get("cpu_count") != meta["cpu_count"]:
+    cur_pts = {(p["n_flows"], p.get("variant", "single"), p["path"]): p
+               for p in entry["points"]}
+    for key in _GUARD_KEYS:
+        cur = cur_pts.get(key)
+        if cur is None or cur.get("skipped"):
             continue
-        old = {(p["n_flows"], p.get("variant", "single"), p["path"]): p
-               for p in prev.get("points", [])}.get(key)
-        if old is None or old.get("skipped"):
-            continue
-        ratio = cur["flow_epochs_per_s"] / max(old["flow_epochs_per_s"], 1)
-        print(f"  fast-path guard: {old['flow_epochs_per_s']} -> "
-              f"{cur['flow_epochs_per_s']} fe/s ({ratio:.2f}x, floor "
-              f"{_SMOKE_GUARD_RATIO}x vs {pm.get('git_sha', '?')})")
-        if ratio < _SMOKE_GUARD_RATIO:
-            raise SystemExit(
-                f"layout fast-path regression: {ratio:.2f}x < "
-                f"{_SMOKE_GUARD_RATIO}x vs entry {pm.get('git_sha', '?')}")
-        return
-    print("  fast-path guard: no comparable prior entry (mode/cpu) — "
-          "skipped")
+        for prev in reversed(hist):
+            pm = prev.get("meta", {})
+            if pm.get("mode") != meta["mode"] or \
+                    pm.get("cpu_count") != meta["cpu_count"]:
+                continue
+            old = {(p["n_flows"], p.get("variant", "single"), p["path"]): p
+                   for p in prev.get("points", [])}.get(key)
+            if old is None or old.get("skipped"):
+                continue
+            ratio = cur["flow_epochs_per_s"] / \
+                max(old["flow_epochs_per_s"], 1)
+            print(f"  fast-path guard {key[1]}: "
+                  f"{old['flow_epochs_per_s']} -> "
+                  f"{cur['flow_epochs_per_s']} fe/s ({ratio:.2f}x, floor "
+                  f"{_SMOKE_GUARD_RATIO}x vs {pm.get('git_sha', '?')})")
+            if ratio < _SMOKE_GUARD_RATIO:
+                raise SystemExit(
+                    f"layout fast-path regression ({key[1]}): "
+                    f"{ratio:.2f}x < {_SMOKE_GUARD_RATIO}x vs entry "
+                    f"{pm.get('git_sha', '?')}")
+            break
+        else:
+            print(f"  fast-path guard {key[1]}: no comparable prior "
+                  "entry (mode/cpu) — skipped")
 
 
 def _git_sha() -> str:
@@ -510,12 +574,18 @@ def _sharded_points(n: int, ne: int, mode: str, points: list,
             rates["sharded2-local"] / rates["sharded2"], 2)
 
 
-def scaling_curve(mode: str = "full") -> dict:
+def scaling_curve(mode: str = "full", *, backend: str = "auto",
+                  block=None, profile_dir=None) -> dict:
     """Grow the n_flows scaling curve and append it to the
     BENCH_fleetsim.json trajectory.
 
     mode: "smoke" (CI: 10k flows only, short scan), "quick" (up to 100k),
     "full" (up to 1M + the completed 1M-flow x 1k-epoch run).
+    backend/block override the load backend and Pallas flow-block size on
+    the single-device layout points (default: "auto" picks the PathTable
+    backend where a table is attached, and the block is sized from
+    n_flows); profile_dir wraps the fat-tree layout point in
+    jax.profiler.trace.
     """
     sizes = {"smoke": [10_000], "quick": [1_000, 10_000, 100_000],
              "full": [1_000, 10_000, 100_000, 1_000_000]}[mode]
@@ -531,7 +601,8 @@ def scaling_curve(mode: str = "full") -> dict:
             net, params, ii, lb, _ = _scenario(n, multipath)
             fast_net = fl.with_layout(net, trim=True) if multipath else net
             cold, warm = _time_simulate(fast_net, params, ne,
-                                        is_inter=ii, lb=lb)
+                                        is_inter=ii, lb=lb,
+                                        backend=backend, block=block)
             points.append(_point(n, ne, variant=variant, path="layout",
                                  warm_s=warm, cold_s=cold))
             ref_ne = max(5, ne // 4)
@@ -547,17 +618,16 @@ def scaling_curve(mode: str = "full") -> dict:
 
     # fat-tree points (the paper's actual topology — PAPER §5.1): the
     # pod-structured permutation/inter mix at FAT_TREE_PATHS ECMP paths,
-    # single-device layout path + the locality-sharded flow axis whose
-    # plan groups flows by destination pod (boundary = agg/core/WAN cut).
-    # Smoke runs k=4 small; quick/full run the k=8 / 100k-flow headline.
+    # single-device layout path (PathTable-compressed backend via "auto")
+    # + the locality-sharded flow axis whose plan groups flows by
+    # destination pod (boundary = agg/core/WAN cut).  Smoke runs k=4
+    # small; quick/full run the k=8 / 100k-flow headline.
     ft_k, ft_n = (4, 12_000) if mode == "smoke" else (8, 100_000)
     ft_ne = 300 if mode == "smoke" else 200
     variant = f"fat_tree_k{ft_k}"
-    net, params, ii, lb, _ = _scenario(ft_n, True, "fat_tree", ft_k)
-    fast_net = fl.with_layout(net, trim=True)
-    cold, warm = _time_simulate(fast_net, params, ft_ne, is_inter=ii, lb=lb)
-    points.append(_point(ft_n, ft_ne, variant=variant, path="layout",
-                         warm_s=warm, cold_s=cold))
+    points.append(_fat_tree_layout_point(ft_k, ft_n, ft_ne, backend=backend,
+                                         block=block,
+                                         profile_dir=profile_dir))
     ft_paths = ((("sharded2-local", True),) if mode == "smoke" else
                 (("sharded2-local", True), ("sharded2", False)))
     _sharded_points(ft_n, ft_ne, mode, points, speedups, kind="fat_tree",
@@ -609,10 +679,170 @@ def scaling_curve(mode: str = "full") -> dict:
     return entry
 
 
-if __name__ == "__main__":
-    if "--scaling" in sys.argv or "--smoke" in sys.argv:
-        mode = "smoke" if "--smoke" in sys.argv else \
-            ("quick" if "--quick" in sys.argv else "full")
-        scaling_curve(mode)
+def check_equivalence(ft_k: int = 4, ft_n: int = 12_000) -> None:
+    """CI equivalence gate for the PathTable-compressed backends.
+
+    Builds the smoke fat-tree scenario, asserts the scenario compiler
+    attached a table (a silent fall-back to the flat CSR would make the
+    benchmark numbers lie), and pins the pt / pt_pallas offered loads to
+    the reference `.at[].add` scatter at <= 1e-6 normalized error plus
+    the full with_loss link_epoch (scale/mark/delay/loss gathers) to the
+    reference backend.  When >= 2 devices are visible (CI forces
+    --xla_force_host_platform_device_count=2 on this step) the pt-sharded
+    halo path is compared against the flat-sharded one too.  Any
+    violation is a SystemExit — this runs as a CI gate, not a report.
+    """
+    import jax.numpy as jnp
+    from repro.fleetsim.shard import shard_scenario, steady_state_prepared
+    from repro.kernels import ref as kref
+
+    net, params, ii, lb, tier = _scenario(ft_n, True, "fat_tree", ft_k)
+    fast_net = fl.with_layout(net, trim=True)
+    pt = fast_net.layout.path_table
+    if pt is None:
+        raise SystemExit(
+            "equivalence check: fat-tree scenario compiled WITHOUT a "
+            "PathTable — the auto-attach policy regressed")
+    n, p = fast_net.routes.shape[:2]
+    print(f"  fat_tree_k{ft_k} n={ft_n}: n_unique_paths="
+          f"{pt.n_segments} vs {n * p} flow-paths")
+
+    rng = np.random.default_rng(0)
+    rates = jnp.asarray(rng.uniform(0.1, 2.0, n), jnp.float32)
+    split = fl.normalize_split(
+        jnp.asarray(rng.uniform(0.0, 1.0, (n, p)), jnp.float32),
+        fl.path_mask(fast_net))
+    # ground truth in float64: at ~100k route entries the float32
+    # reference scatter itself drifts ~2e-6 normalized from the true sums
+    # (accumulated rounding), so gating the compressed backends against
+    # it at 1e-6 would fail on the REFERENCE's error — the f64 numpy
+    # scatter is the arbiter instead (pt measures ~2e-7 against it)
+    routes64 = np.asarray(fast_net.routes)
+    sub64 = (np.asarray(rates, np.float64)[:, None]
+             * np.asarray(split, np.float64))
+    n_l = int(fast_net.n_links)
+    true = np.zeros(n_l + 1)
+    np.add.at(true, np.where(routes64 >= 0, routes64, n_l).ravel(),
+              np.repeat(sub64.ravel(), routes64.shape[2]))
+    true = true[:n_l]
+    scale = max(1.0, float(np.abs(true).max()))
+    ref = np.asarray(kref.fleet_offered_load_ref(
+        fast_net.routes, rates, split, n_l)[:n_l])
+    print(f"  offered_load[reference f32] vs f64 truth: "
+          f"{float(np.abs(ref - true).max()) / scale:.2e} normalized")
+    for be in ("pt", "pt_pallas"):
+        got = np.asarray(fl.offered_load(fast_net, rates, split,
+                                         backend=be))
+        err = float(np.abs(got - true).max()) / scale
+        print(f"  offered_load[{be}] vs f64 truth: {err:.2e} normalized")
+        if err > 1e-6:
+            raise SystemExit(f"offered_load[{be}] off by {err:.2e} "
+                             "normalized (> 1e-6) vs f64 reference "
+                             "scatter")
+
+    # full epoch: compressed gathers (scale/mark/delay + loss thinning)
+    # vs the flat reference composition
+    qp = jnp.asarray(rng.uniform(0.0, 1.0, fast_net.n_links),
+                     jnp.float32) * fast_net.qcap
+    qv = jnp.asarray(rng.uniform(0.0, 1.0, fast_net.n_links),
+                     jnp.float32) * fast_net.vcap
+    ep_pt = fl.link_epoch(fast_net, rates, split, qp, qv, backend="pt",
+                          with_loss=True)
+    ep_ref = fl.link_epoch(fast_net, rates, split, qp, qv,
+                           backend="reference", with_loss=True)
+    for f in ep_pt._fields:
+        a, b = getattr(ep_pt, f), getattr(ep_ref, f)
+        if a is None:
+            continue
+        a, b = np.asarray(a), np.asarray(b)
+        s = max(1.0, float(np.abs(b).max()))
+        err = float(np.abs(a - b).max()) / s
+        if err > 1e-5:
+            raise SystemExit(f"link_epoch.{f} off by {err:.2e} "
+                             "normalized (> 1e-5) pt vs reference")
+    print("  link_epoch[pt] vs reference: all fields <= 1e-5 normalized")
+
+    if jax.device_count() < 2:
+        raise SystemExit(
+            "equivalence check needs >= 2 devices for the sharded/halo "
+            "variant — set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=2 before jax initializes")
+    kw = dict(n_warm=190, n_meas=10)
+    sf_pt = shard_scenario(net, params, is_inter=ii, lb=lb,
+                           link_tier=tier, path_table=True)
+    if sf_pt.layouts.path_table is None:
+        raise SystemExit("equivalence check: sharded fat tree compiled "
+                         "without per-shard PathTables")
+    _, r_pt = steady_state_prepared(sf_pt, **kw)
+    sf_flat = shard_scenario(net, params, is_inter=ii, lb=lb,
+                             link_tier=tier, path_table=False)
+    _, r_flat = steady_state_prepared(sf_flat, **kw)
+    r_pt, r_flat = np.asarray(r_pt), np.asarray(r_flat)
+    s = max(1.0, float(np.abs(r_flat).max()))
+    err = float(np.abs(r_pt - r_flat).max()) / s
+    print(f"  sharded steady state pt vs flat ({jax.device_count()} "
+          f"devices): {err:.2e} normalized")
+    if err > 1e-4:
+        raise SystemExit(f"sharded pt steady state off by {err:.2e} "
+                         "normalized (> 1e-4) vs flat sharding")
+    print("  equivalence check passed")
+
+
+def _main() -> None:
+    ap = argparse.ArgumentParser(
+        description="fleetsim throughput benchmark / scaling trajectory")
+    ap.add_argument("--scaling", action="store_true",
+                    help="run the full n_flows scaling curve and append "
+                         "it to BENCH_fleetsim.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke subset of --scaling (10k flows, k=4 "
+                         "fat tree, fast-path guards)")
+    ap.add_argument("--quick", action="store_true",
+                    help="with --scaling: stop at 100k flows")
+    ap.add_argument("--profile", action="store_true",
+                    help="profile the fat-tree layout point with "
+                         "jax.profiler.trace and print its phase split "
+                         "(spec_build_s / compile_s / warm_s)")
+    ap.add_argument("--profile-dir", default="results/profile",
+                    help="jax.profiler trace output dir for --profile "
+                         "(TensorBoard-readable; default %(default)s)")
+    ap.add_argument("--backend", default="auto",
+                    choices=list(fl.LOAD_BACKENDS),
+                    help="load backend for the layout points (default "
+                         "auto: PathTable-compressed where a table is "
+                         "attached)")
+    ap.add_argument("--block", type=int, default=None,
+                    help="Pallas flow-block size override (default: "
+                         "picked from n_flows)")
+    ap.add_argument("--check-equivalence", action="store_true",
+                    help="CI gate: pin the pt/pt_pallas backends to the "
+                         "reference scatter on the smoke fat tree "
+                         "(needs 2 forced host devices for the sharded "
+                         "variant)")
+    args = ap.parse_args()
+
+    if args.check_equivalence:
+        check_equivalence()
+    elif args.profile:
+        pathlib.Path(args.profile_dir).mkdir(parents=True, exist_ok=True)
+        ft_k, ft_n, ft_ne = (4, 12_000, 300) if args.smoke else \
+            (8, 100_000, 200)
+        rec = _fat_tree_layout_point(ft_k, ft_n, ft_ne,
+                                     backend=args.backend,
+                                     block=args.block,
+                                     profile_dir=args.profile_dir)
+        print(json.dumps({k: rec[k] for k in
+                          ("spec_build_s", "compile_s", "warm_s",
+                           "flow_epochs_per_s", "n_unique_paths")},
+                         indent=1))
+        print(f"profiler trace in {args.profile_dir}")
+    elif args.scaling or args.smoke:
+        mode = "smoke" if args.smoke else \
+            ("quick" if args.quick else "full")
+        scaling_curve(mode, backend=args.backend, block=args.block)
     else:
         print(json.dumps(run(quick=True), indent=1))
+
+
+if __name__ == "__main__":
+    _main()

@@ -25,8 +25,9 @@ offered load.
 """
 from repro.fleetsim.cc import (SCHEMES, make_step, simulate, steady_state,
                                update_split)
-from repro.fleetsim.links import (LOAD_BACKENDS, FluidNet, RouteLayout,
-                                  compute_layout, dumbbell, link_epoch,
+from repro.fleetsim.links import (LOAD_BACKENDS, FluidNet, PathTable,
+                                  RouteLayout, compute_layout,
+                                  compute_path_table, dumbbell, link_epoch,
                                   uniform_split, with_layout)
 from repro.fleetsim.reliability import (RelParams, RelState, init_rel_state,
                                         make_rel_params, recovery_split)
@@ -39,8 +40,9 @@ from repro.fleetsim.state import (ChurnParams, FleetParams, FleetState,
 
 __all__ = [
     "SCHEMES", "make_step", "simulate", "steady_state", "update_split",
-    "LOAD_BACKENDS", "FluidNet", "RouteLayout", "compute_layout",
-    "dumbbell", "link_epoch", "uniform_split", "with_layout",
+    "LOAD_BACKENDS", "FluidNet", "PathTable", "RouteLayout",
+    "compute_layout", "compute_path_table", "dumbbell", "link_epoch",
+    "uniform_split", "with_layout",
     "RelParams", "RelState", "init_rel_state", "make_rel_params",
     "recovery_split",
     "ShardedFleet", "shard_scenario", "steady_state_prepared",

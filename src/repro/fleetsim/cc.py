@@ -132,7 +132,7 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
               churn: Optional[ChurnParams] = None,
               rel: Optional[R.RelParams] = None, *,
               axis_name: Optional[str] = None, backend: str = "auto",
-              halo: Optional[int] = None,
+              halo: Optional[int] = None, block: Optional[int] = None,
               churn_map: Optional[jnp.ndarray] = None,
               churn_n: Optional[int] = None):
     """Build the per-epoch transition: state -> (state', goodput).
@@ -151,7 +151,8 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
     .shard); `halo` shrinks that reduction to the trailing boundary links
     of a locality-relabeled link id space (links.halo_exchange);
     `backend` picks the link-aggregation implementation (repro.fleetsim
-    .links.LOAD_BACKENDS).
+    .links.LOAD_BACKENDS); `block` overrides the Pallas backends'
+    flow-block size (None picks it from n_flows).
 
     `churn_map`/`churn_n` make churn exact under flow sharding: each shard
     draws the SAME global (churn_n,) uniform vector (the PRNG key is
@@ -189,7 +190,7 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
         split = state.split
         le = L.link_epoch(net, wire, split, state.q_phys, state.q_phantom,
                           axis_name=axis_name, backend=backend, halo=halo,
-                          with_loss=rel is not None)
+                          block=block, with_loss=rel is not None)
         q_phys, q_phantom = le.q_phys, le.q_phantom
         sub_frac = le.sub_frac
         if single:   # split-weighted sums collapse to one product per flow
@@ -421,11 +422,11 @@ def _default_state(net: L.FluidNet, params: FleetParams, seed: int = 0,
 
 @functools.partial(jax.jit,
                    static_argnames=("scheme", "n_epochs", "record",
-                                    "backend"))
+                                    "backend", "block"))
 def _simulate(net, params, state0, is_inter, lb, churn, scheme, n_epochs,
-              record, backend="auto", rel=None):
+              record, backend="auto", block=None, rel=None):
     step = make_step(net, params, scheme, is_inter, lb=lb, churn=churn,
-                     rel=rel, backend=backend)
+                     rel=rel, backend=backend, block=block)
     if record:
         return jax.lax.scan(step, state0, None, length=n_epochs)
     final, _ = jax.lax.scan(lambda s, x: (step(s, x)[0], None),
@@ -439,32 +440,33 @@ def simulate(net: L.FluidNet, params: FleetParams, *, n_epochs: int,
              lb: Optional[LbParams] = None,
              churn: Optional[ChurnParams] = None,
              rel: Optional[R.RelParams] = None,
-             seed: int = 0, record: bool = False, backend: str = "auto"):
+             seed: int = 0, record: bool = False, backend: str = "auto",
+             block: Optional[int] = None):
     """Run `n_epochs` epochs; returns (final_state, goodput_trajectory).
 
     `goodput_trajectory` is (n_epochs, n_flows) bytes/ns when `record`,
     else None.  Jit-compiled; recompiles only on new (scheme, n_epochs,
-    record, backend, shapes, lb/churn/rel presence).  `seed` fixes the
-    churn PRNG; `backend` picks the link-aggregation path
-    (links.LOAD_BACKENDS); `rel` turns on the loss/recovery machine
-    (reliability.make_rel_params).
+    record, backend, block, shapes, lb/churn/rel presence).  `seed` fixes
+    the churn PRNG; `backend` picks the link-aggregation path
+    (links.LOAD_BACKENDS) and `block` the Pallas flow-block size; `rel`
+    turns on the loss/recovery machine (reliability.make_rel_params).
     """
     if state0 is None:
         state0 = _default_state(net, params, seed, rel)
     if is_inter is None:
         is_inter = jnp.zeros_like(params.bdp, bool)
     return _simulate(net, params, state0, is_inter, lb, churn, scheme,
-                     n_epochs, record, backend, rel)
+                     n_epochs, record, backend, block, rel)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("scheme", "n_warm", "n_meas", "backend",
-                                    "axis_name", "halo", "churn_n",
+                                    "axis_name", "halo", "block", "churn_n",
                                     "unroll"))
 def steady_state_core(net, params, state0, is_inter, scheme, n_warm, n_meas,
                       lb=None, churn=None, backend="auto", axis_name=None,
-                      halo=None, churn_map=None, churn_n=None, unroll=1,
-                      rel=None):
+                      halo=None, block=None, churn_map=None, churn_n=None,
+                      unroll=1, rel=None):
     """Warm up, then return (final_state, mean goodput over n_meas epochs).
 
     The measurement pass accumulates a running sum in the carry instead of
@@ -479,7 +481,8 @@ def steady_state_core(net, params, state0, is_inter, scheme, n_warm, n_meas,
     just loop restructuring)."""
     step = make_step(net, params, scheme, is_inter, lb=lb, churn=churn,
                      rel=rel, backend=backend, axis_name=axis_name,
-                     halo=halo, churn_map=churn_map, churn_n=churn_n)
+                     halo=halo, block=block, churn_map=churn_map,
+                     churn_n=churn_n)
     state, _ = jax.lax.scan(lambda s, x: (step(s, x)[0], None),
                             state0, None, length=n_warm, unroll=unroll)
 
@@ -501,10 +504,11 @@ def steady_state(net: L.FluidNet, params: FleetParams, *, n_warm: int,
                  lb: Optional[LbParams] = None,
                  churn: Optional[ChurnParams] = None,
                  rel: Optional[R.RelParams] = None, seed: int = 0,
-                 backend: str = "auto"):
+                 backend: str = "auto", block: Optional[int] = None):
     if state0 is None:
         state0 = _default_state(net, params, seed, rel)
     if is_inter is None:
         is_inter = jnp.zeros_like(params.bdp, bool)
     return steady_state_core(net, params, state0, is_inter, scheme,
-                             n_warm, n_meas, lb, churn, backend, rel=rel)
+                             n_warm, n_meas, lb, churn, backend,
+                             block=block, rel=rel)

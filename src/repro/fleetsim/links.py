@@ -15,10 +15,33 @@ repro.scenarios.compile_fleetsim):
   * a by-link-sorted CSR view of the incidence — `sort_sub` (which subflow
     each route entry belongs to), `sort_link` (its link, ascending),
     `link_ptr` (CSR segment offsets), and `csr_gather` (the same order
-    reshaped into a (block, n_chunks) matrix for a blocked cumulative-sum
+    reshaped into an (n_chunks, block) matrix for a blocked cumulative-sum
     aggregation).
 
-Per-link aggregation (`offered_load`) then has three jit/vmap-compatible
+On deep-multipath topologies the layout additionally carries a `PathTable`
+— a unique-path factorization of the route tensor.  Fat-tree flows re-walk
+the same few thousand hop sequences, but full paths barely dedupe (the
+first/last hops are host-specific: only ~2.3x at k=8 / 100k flows), so the
+table factors every path into a PREFIX and a SUFFIX segment (whole-path
+prefix when it fits hseg columns, else split at half its real hop count)
+and dedupes the segments: at k=8 / 100k flows the 800k flow-paths share
+just ~58k unique segments, and with the all-padding segment's dead entries
+dropped the per-epoch entry count shrinks ~5x.  The table stores the per-(flow, path-slot) `pre_id`/`suf_id`
+indirection, the unique segment hop rows (`seg_idx`), and two compile-time
+sorted blocked-CSR views: subflow -> segment (stage 1) and segment -> link
+(stage 2).  Per epoch the compressed hot path is then O(F*P + U*H_seg)
+instead of O(F*P*H): segment-sum subflow rates by segment id, scatter the
+tiny unique-segment table into links, and run every link -> flow gather
+once per unique segment before indexing back per subflow (min composes
+exactly across the split; prod/sum regroup within the same ~1e-6 float
+tolerance the CSR backend already carries).  `compute_layout` attaches the
+table automatically when the routes are concrete AND the factorization
+actually compresses (`PT_MIN_COMPRESS`) — single-path and shallow-multipath
+dumbbells fail that test (2 hops dedupe to nothing) and stay on the flat
+layout, which is also why the flat fields always remain populated: they are
+the equivalence oracle the compressed path is tested against.
+
+Per-link aggregation (`offered_load`) then has five jit/vmap-compatible
 backends selected by `backend=`:
 
   * "reference" — the original ravel'd `.at[].add` scatter into an
@@ -28,11 +51,15 @@ backends selected by `backend=`:
     `indices_are_sorted=True`.
   * "csr"       — sorted values are cumulative-summed chunk-by-chunk via
     `csr_gather` and differenced at `link_ptr` (a segment sum with no
-    scatter at all; the fast CPU path, ~7x the reference scatter at 100k
-    flows).  Float summation order differs from the scatter, so results
-    match the reference to ~1e-6, not bitwise.
-  * "pallas"    — repro.kernels.fleet_pallas fuses the scatter and the
-    link->flow gathers into blocked kernels (interpret mode on CPU).
+    scatter at all; the fast CPU path for flat layouts, ~7x the reference
+    scatter at 100k flows).  Float summation order differs from the
+    scatter, so results match the reference to ~1e-6, not bitwise.
+  * "pt"        — the PathTable two-stage aggregation (both stages reuse
+    the same blocked-CSR segment sum); needs a layout whose `path_table`
+    is attached.  "auto" selects it whenever the table is present.
+  * "pallas" / "pt_pallas" — repro.kernels.fleet_pallas runs the flat
+    (respectively path-table) scatter and the link->flow gathers as
+    blocked one-hot-matmul kernels (interpret mode on CPU).
 
 `offered_load(..., axis_name=...)` psums the per-shard partial loads, which
 is all `repro.fleetsim.shard` needs to run the flow axis under `shard_map`.
@@ -69,6 +96,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 GBPS = 0.125               # bytes per ns per Gbit/s (matches netsim.topology)
 RATE_100G = 100 * GBPS
@@ -77,8 +105,42 @@ MS = 1_000_000.0
 MIB = 1024 * 1024
 _EPS = 1e-9
 
-LOAD_BACKENDS = ("auto", "reference", "segment", "csr", "pallas")
+LOAD_BACKENDS = ("auto", "reference", "segment", "csr", "pt",
+                 "pallas", "pt_pallas")
 CSR_BLOCK = 64             # chunk height of the blocked cumulative sum
+# `compute_layout(path_table="auto")` only attaches a PathTable when the
+# flat entry count exceeds this multiple of the compressed entry count
+# (live stage-1 entries + U*hseg table rows) — below it the two-stage
+# pipeline costs more than it saves (dumbbells: 2-hop paths dedupe to
+# nothing).
+PT_MIN_COMPRESS = 2.0
+
+
+class PathTable(NamedTuple):
+    """Unique-path-segment factorization of the route tensor.
+
+    Every (flow, path-slot) subflow's real hops are split at half their
+    count into a PREFIX and a SUFFIX segment (each left-packed into hseg =
+    ceil(max_hops / 2) columns, -1-padded) and the 2*S segments are deduped
+    to U unique rows.  Shapes: n = n_flows, p = n_paths, S = n*p,
+    U = n_segments (possibly padded up so sharded tables stack), L =
+    n_links, E1/E2 = block-rounded sorted entry counts of the two stages.
+    All arrays are static per scenario — built host-side by
+    `compute_path_table` (needs concrete routes).
+    """
+    pre_id: jnp.ndarray       # (n, p) unique-segment id of each prefix
+    suf_id: jnp.ndarray       # (n, p) unique-segment id of each suffix
+    seg_idx: jnp.ndarray      # (U, hseg) hop link ids, -1 -> L (scratch)
+    seg_gather: jnp.ndarray   # (E1/block, block) subflow ids, by-segment
+                              # sorted, one chunk per row; pads -> S
+    seg_ptr: jnp.ndarray      # (U + 2,) CSR offsets of stage 1
+    lcsr_gather: jnp.ndarray  # (E2/block, block) segment ids, by-link
+                              # sorted, one chunk per row; pads -> U
+    llink_ptr: jnp.ndarray    # (L + 2,) CSR offsets of stage 2
+
+    @property
+    def n_segments(self) -> int:
+        return self.seg_idx.shape[0]
 
 
 class RouteLayout(NamedTuple):
@@ -95,7 +157,8 @@ class RouteLayout(NamedTuple):
     sort_sub: jnp.ndarray    # (E,) subflow id per by-link-sorted entry; pads -> S
     sort_link: jnp.ndarray   # (E,) ascending link id per entry; pads -> L
     link_ptr: jnp.ndarray    # (L + 2,) CSR offsets into the sorted entries
-    csr_gather: jnp.ndarray  # (block, E/block) sort_sub in chunk-major order
+    csr_gather: jnp.ndarray  # (E/block, block) sort_sub, one chunk per row
+    path_table: Optional[PathTable] = None  # compressed view (deep multipath)
 
 
 class FluidNet(NamedTuple):
@@ -158,8 +221,134 @@ def _pad_idx(net: FluidNet) -> jnp.ndarray:
     return jnp.where(r >= 0, r, net.n_links)
 
 
+def _blocked_csr(sort_key: np.ndarray, sort_val: np.ndarray, n_keys: int,
+                 key_pad: int, val_pad: int, block: int):
+    """Block-round a by-key-sorted entry list into (gather, ptr) CSR form.
+
+    Pads the tail with (key_pad, val_pad) sentinel entries to a whole
+    number of chunks, returns the values reshaped row-per-chunk
+    ((n_chunks, block) — each chunk contiguous in memory, so the
+    chunk-local prefix sum runs down the fast axis) plus the searchsorted
+    offsets of each key in 0..n_keys+1 — the exact inputs
+    `_blocked_segment_sum` consumes.
+    """
+    n = sort_key.shape[0]
+    n_chunks = max(1, -(-n // block))
+    pad = n_chunks * block - n
+    sort_key = np.concatenate([sort_key, np.full(pad, key_pad, np.int32)])
+    sort_val = np.concatenate([sort_val, np.full(pad, val_pad, np.int32)])
+    ptr = np.searchsorted(
+        sort_key, np.arange(n_keys + 2, dtype=np.int64)).astype(np.int32)
+    return sort_val.reshape(n_chunks, block), ptr
+
+
+def compute_path_table(routes, n_links: int, *, block: int = CSR_BLOCK,
+                       pad_segments_to: Optional[int] = None,
+                       pad_entries_to: Optional[int] = None,
+                       min_compress: Optional[float] = None
+                       ) -> Optional[PathTable]:
+    """Build the unique-path-segment table for a concrete route tensor.
+
+    Each subflow's real hops (the -1 padding may be interspersed) are split
+    into a prefix and a suffix, each left-packed into hseg =
+    ceil(max_hops/2) columns: paths short enough to fit one segment
+    (m <= hseg real hops) go whole into the prefix (their suffix is the
+    shared all-padding segment), longer ones split at ceil(m/2).  Both
+    halves are deduped together through one np.unique over the (2*S, hseg)
+    rows.  Splitting beats deduping full paths because fat-tree first/last
+    hops are host-specific: halves shed one host-edge each, so they repeat
+    across far more subflows (k=8 / 100k flows: ~58k unique segments vs
+    ~350k unique full paths).  Stage-1 entries whose segment is the
+    all-padding row are dropped — its rate total only ever lands in the
+    scratch slot and its gather row composes the identity, so the entries
+    are dead weight (intra-DC paths make them ~1/3 of the total on the
+    fat tree).
+
+    `min_compress=r` returns None unless the flat entry count is at least
+    r times the compressed one (the auto-attach policy).  `pad_segments_to`
+    pads the segment axis with empty all-scratch rows and `pad_entries_to`
+    pads stage 1 with sentinel entries (they read the appended 0.0 value
+    and sum into the guaranteed-zero final slot) so per-shard tables share
+    one (U, E1) and stack into a shard_map operand — empty segments sum to
+    0 rate and scatter only into the scratch slot, harmless.
+    Host-side only (numpy): call with concrete routes.
+    """
+    r = np.asarray(routes)
+    if r.ndim == 2:
+        r = r[:, None, :]
+    n, p, h = r.shape
+    n_sub = n * p
+    hseg = max(1, (h + 1) // 2)
+    flat = r.reshape(n_sub, h)
+    real = flat >= 0
+    m = real.sum(axis=1)
+    # prefix hop count: the whole path when it fits, else ceil(m/2)
+    c = np.where(m <= hseg, m, (m + 1) // 2)
+    rank = np.cumsum(real, axis=1) - 1    # each real hop's index among reals
+    pre = np.full((n_sub, hseg), -1, np.int32)
+    suf = np.full((n_sub, hseg), -1, np.int32)
+    in_pre = real & (rank < c[:, None])
+    rows, cols = np.nonzero(in_pre)
+    pre[rows, rank[rows, cols]] = flat[rows, cols]
+    rows, cols = np.nonzero(real & ~in_pre)
+    suf[rows, rank[rows, cols] - c[rows]] = flat[rows, cols]
+    seg, inv = np.unique(np.concatenate([pre, suf]), axis=0,
+                         return_inverse=True)
+    inv = inv.reshape(-1)
+    u = seg.shape[0]
+    pre_id = inv[:n_sub].astype(np.int32)
+    suf_id = inv[n_sub:].astype(np.int32)
+    # stage 1: each subflow contributes its rate to BOTH halves' segments,
+    # except entries for the all-padding segment (scratch-only — dropped)
+    e_sub = np.tile(np.arange(n_sub, dtype=np.int32), 2)
+    e_seg = np.concatenate([pre_id, suf_id])
+    pad_row = np.nonzero((seg < 0).all(axis=1))[0]
+    if pad_row.size:
+        live = e_seg != pad_row[0]
+        e_sub, e_seg = e_sub[live], e_seg[live]
+    if min_compress is not None and \
+            n_sub * h < min_compress * (e_seg.shape[0] + u * hseg):
+        return None
+    n_seg = u if pad_segments_to is None else int(pad_segments_to)
+    if n_seg < u:
+        raise ValueError(f"pad_segments_to={n_seg} < {u} unique segments")
+    seg_idx = np.where(seg >= 0, seg, n_links).astype(np.int32)
+    if n_seg > u:
+        seg_idx = np.concatenate(
+            [seg_idx, np.full((n_seg - u, hseg), n_links, np.int32)])
+    if pad_entries_to is not None:
+        extra = int(pad_entries_to) - e_seg.shape[0]
+        if extra < 0:
+            raise ValueError(f"pad_entries_to={pad_entries_to} < "
+                             f"{e_seg.shape[0]} live entries")
+        e_sub = np.concatenate([e_sub, np.full(extra, n_sub, np.int32)])
+        e_seg = np.concatenate([e_seg, np.full(extra, n_seg, np.int32)])
+    order = np.argsort(e_seg, kind="stable")
+    # sentinel subflow id n_sub reads an appended 0.0; sentinel segment
+    # id n_seg lands past every real segment's ptr range
+    seg_gather, seg_ptr = _blocked_csr(
+        e_seg[order], e_sub[order], n_seg, n_seg, n_sub, block)
+    # stage 2: each (segment, hop) entry carries that segment's stage-1
+    # rate into its link; pad hops already point at the scratch slot
+    e_lnk = seg_idx.reshape(-1)
+    e_sid = np.repeat(np.arange(n_seg, dtype=np.int32), hseg)
+    order = np.argsort(e_lnk, kind="stable")
+    # sentinel segment id n_seg reads the (U+1,)-rate vector's final slot,
+    # which stage 1 guarantees to be 0.0
+    lcsr_gather, llink_ptr = _blocked_csr(
+        e_lnk[order], e_sid[order], n_links, n_links, n_seg, block)
+    return PathTable(pre_id=jnp.asarray(pre_id.reshape(n, p)),
+                     suf_id=jnp.asarray(suf_id.reshape(n, p)),
+                     seg_idx=jnp.asarray(seg_idx),
+                     seg_gather=jnp.asarray(seg_gather),
+                     seg_ptr=jnp.asarray(seg_ptr),
+                     lcsr_gather=jnp.asarray(lcsr_gather),
+                     llink_ptr=jnp.asarray(llink_ptr))
+
+
 def compute_layout(routes: jnp.ndarray, n_links: int, *,
-                   block: int = CSR_BLOCK, trim: bool = False) -> RouteLayout:
+                   block: int = CSR_BLOCK, trim: bool = False,
+                   path_table="auto") -> RouteLayout:
     """Compile the route tensor into a RouteLayout.
 
     jit-compatible with `trim=False` (repro.fleetsim.shard builds per-shard
@@ -168,6 +357,13 @@ def compute_layout(routes: jnp.ndarray, n_links: int, *,
     tensor is mostly padding (e.g. single-path flows in a wide multipath
     net) — but needs concrete routes (host-side only), and layouts with
     different trimmed sizes cannot be stacked into one sweep grid.
+
+    `path_table` controls the compressed unique-path view: "auto" (the
+    default) attaches one when the routes are concrete AND the
+    factorization compresses by at least PT_MIN_COMPRESS (inside jit, or
+    on dumbbell-shallow routes, the layout stays flat); True forces the
+    build (concrete routes required); False skips it; a prebuilt
+    `PathTable` is attached as-is (the sharded pad-to-common-U path).
     """
     r = routes if routes.ndim == 3 else routes[:, None, :]
     n, p, h = r.shape
@@ -195,11 +391,28 @@ def compute_layout(routes: jnp.ndarray, n_links: int, *,
         [sort_sub, jnp.full(pad_to - keep, n_sub, jnp.int32)])
     link_ptr = jnp.searchsorted(
         sort_link, jnp.arange(n_links + 2, dtype=jnp.int32)).astype(jnp.int32)
-    csr_gather = sort_sub.reshape(n_chunks, block).T
+    csr_gather = sort_sub.reshape(n_chunks, block)
+    concrete = not isinstance(routes, jax.core.Tracer)
+    if path_table is None or path_table is False:
+        pt = None
+    elif isinstance(path_table, PathTable):
+        pt = path_table
+    elif path_table is True:
+        if not concrete:
+            raise ValueError("path_table=True needs concrete routes "
+                             "(host-side compute_layout call)")
+        pt = compute_path_table(routes, n_links, block=block)
+    elif path_table == "auto":
+        pt = compute_path_table(routes, n_links, block=block,
+                                min_compress=PT_MIN_COMPRESS) \
+            if concrete else None
+    else:
+        raise ValueError(f"path_table={path_table!r}: expected 'auto', "
+                         "True, False/None, or a PathTable")
     return RouteLayout(pad_idx=pad_idx, hop_mask=hop_mask,
                        path_mask=path_mask, sort_sub=sort_sub,
                        sort_link=sort_link, link_ptr=link_ptr,
-                       csr_gather=csr_gather)
+                       csr_gather=csr_gather, path_table=pt)
 
 
 def with_layout(net: FluidNet, **kw) -> FluidNet:
@@ -266,73 +479,104 @@ def _offered_load_segment(net: FluidNet, rates, split) -> jnp.ndarray:
                                indices_are_sorted=True)
 
 
-def _doubling_cumsum0(v: jnp.ndarray) -> jnp.ndarray:
-    """Inclusive prefix sum down axis 0 via Hillis-Steele doubling.
+def _blocked_segment_sum(vals_ext: jnp.ndarray, gather: jnp.ndarray,
+                         ptr: jnp.ndarray) -> jnp.ndarray:
+    """(len(ptr) - 1,) segment totals of the sorted entries `vals_ext[gather]`.
 
-    ceil(log2(block)) shifted adds, each one wide contiguous vector op —
-    ~10x faster than XLA CPU's cumsum lowering on (block, n_chunks) tiles.
-    """
-    shift = 1
-    while shift < v.shape[0]:
-        v = jnp.concatenate([v[:shift], v[shift:] + v[:-shift]], axis=0)
-        shift *= 2
-    return v
-
-
-def _offered_load_csr(net: FluidNet, rates, split) -> jnp.ndarray:
-    """Blocked cumulative-sum segment reduction over the sorted layout.
-
-    Sorted per-entry rates are gathered straight into (block, n_chunks)
-    chunk-major form and prefix-summed down the short block axis; each
-    link's segment total is then assembled from CHUNK-LOCAL pieces — the
-    partial head/tail chunks by differencing the local prefix, the
-    interior chunks by a scatter-add of whole-chunk totals (n_chunks =
-    n_entries / block values, 64x fewer than a per-entry scatter).
+    `gather` is an (n_chunks, block) row-per-chunk matrix of entry ids
+    into `vals_ext`, whose LAST slot must hold 0.0 (the block-padding
+    sentinel reads it); `ptr` holds each output segment's CSR offsets in
+    the underlying sorted order.  Entries are gathered chunk-contiguous
+    and prefix-summed along the fast block axis (XLA's native cumsum on
+    the contiguous minor axis beats a Hillis-Steele doubling pass here —
+    the doubling's log2(block) concatenate copies cost more than they
+    save); each segment total is then assembled from CHUNK-LOCAL pieces —
+    the partial head/tail chunks by differencing the local prefix, the
+    interior chunks by a scatter-add of whole-chunk totals
+    (n_chunks = n_entries / block values, block x fewer than a per-entry
+    scatter).
 
     Differencing one *global* running prefix instead would be cheaper
-    still, but its absolute error is ulp(grand total) per link — at 1M
+    still, but its absolute error is ulp(grand total) per segment — at 1M
     flows that is ~10% relative error on a lightly loaded uplink.  All
-    pieces here are bounded by the link's own magnitude (or one chunk's),
-    so per-link relative error stays at float32 rounding scale.
+    pieces here are bounded by the segment's own magnitude (or one
+    chunk's), so per-segment relative error stays at float32 rounding
+    scale.
     """
-    lay = net.layout
-    block, n_chunks = lay.csr_gather.shape
-    sub = jnp.concatenate([(rates[:, None] * split).reshape(-1),
-                           jnp.zeros(1, rates.dtype)])
-    v = sub[lay.csr_gather]                       # (block, n_chunks)
-    cs = _doubling_cumsum0(v)                     # chunk-local prefixes
-    chunk_tot = cs[-1]
+    n_chunks, block = gather.shape
+    cs = jnp.cumsum(vals_ext[gather], axis=1)     # chunk-local prefixes
+    chunk_tot = cs[:, -1]
 
-    a = lay.link_ptr[:-1]                         # (n_links + 1,) seg starts
-    b = lay.link_ptr[1:]                          # seg ends (exclusive)
+    a = ptr[:-1]                                  # segment starts
+    b = ptr[1:]                                   # segment ends (exclusive)
     ca, ra = a // block, a % block
     cb, rb = (b - 1) // block, (b - 1) % block    # last entry (b > a only)
     # local prefix of entries < position: 0 at a chunk's first slot
-    head = jnp.where(ra > 0, cs[ra - 1, ca], 0.0)   # before the segment
-    tail = cs[rb, cb]                               # through its last entry
+    head = jnp.where(ra > 0, cs[ca, ra - 1], 0.0)   # before the segment
+    tail = cs[cb, rb]                               # through its last entry
     same = ca == cb
-    load = jnp.where(same, tail - head,
-                     (chunk_tot[ca] - head) + tail)
+    out = jnp.where(same, tail - head,
+                    (chunk_tot[ca] - head) + tail)
     # interior chunks (strictly between a segment's first and last chunk)
     # contribute whole chunk_tots via a tiny scatter over n_chunks values
-    first = jnp.arange(n_chunks, dtype=lay.link_ptr.dtype) * block
-    owner = jnp.searchsorted(lay.link_ptr, first, side="right") - 1
-    owner = jnp.clip(owner, 0, lay.link_ptr.shape[0] - 2)
+    first = jnp.arange(n_chunks, dtype=ptr.dtype) * block
+    owner = jnp.searchsorted(ptr, first, side="right") - 1
+    owner = jnp.clip(owner, 0, ptr.shape[0] - 2)
     interior = (jnp.arange(n_chunks) > ca[owner]) & \
         (jnp.arange(n_chunks) < cb[owner])
-    load = load.at[owner].add(jnp.where(interior, chunk_tot, 0.0),
-                              indices_are_sorted=True)
-    return jnp.where(b > a, load, 0.0)            # (n_links + 1,)
+    out = out.at[owner].add(jnp.where(interior, chunk_tot, 0.0),
+                            indices_are_sorted=True)
+    return jnp.where(b > a, out, 0.0)
+
+
+def _sub_vals_ext(rates, split) -> jnp.ndarray:
+    """(S + 1,) flattened subflow rates with the 0.0 sentinel appended."""
+    return jnp.concatenate([(rates[:, None] * split).reshape(-1),
+                            jnp.zeros(1, rates.dtype)])
+
+
+def _offered_load_csr(net: FluidNet, rates, split) -> jnp.ndarray:
+    """Blocked cumulative-sum segment reduction over the flat sorted layout
+    (see `_blocked_segment_sum`); returns the (n_links + 1,) load buffer."""
+    lay = net.layout
+    return _blocked_segment_sum(_sub_vals_ext(rates, split),
+                                lay.csr_gather, lay.link_ptr)
+
+
+def _pt_seg_rates(pt: PathTable, rates, split) -> jnp.ndarray:
+    """Stage 1: (U + 1,) total subflow rate traversing each unique segment
+    (every subflow contributes to BOTH its prefix and suffix segment).
+    The final slot is the stage-1 block-pad sentinel segment and is
+    guaranteed 0.0 — stage 2's own pad entries read it."""
+    return _blocked_segment_sum(_sub_vals_ext(rates, split),
+                                pt.seg_gather, pt.seg_ptr)
+
+
+def _offered_load_pt(net: FluidNet, rates, split) -> jnp.ndarray:
+    """Two-stage PathTable aggregation: segment-sum rates by unique
+    segment (O(S) entries, no hop axis), then push the tiny (U, hseg)
+    table into links (O(U*hseg) entries) — both through the same
+    blocked-CSR reduction the flat backend uses."""
+    pt = net.layout.path_table
+    seg = _pt_seg_rates(pt, rates, split)
+    return _blocked_segment_sum(seg, pt.lcsr_gather, pt.llink_ptr)
 
 
 def _resolve_backend(net: FluidNet, backend: str) -> str:
     if backend not in LOAD_BACKENDS:
         raise ValueError(f"unknown link-aggregation backend {backend!r}")
+    lay = net.layout
     if backend == "auto":
-        return "csr" if net.layout is not None else "reference"
-    if backend in ("segment", "csr") and net.layout is None:
+        if lay is None:
+            return "reference"
+        return "pt" if lay.path_table is not None else "csr"
+    if backend in ("segment", "csr") and lay is None:
         raise ValueError(f"backend {backend!r} needs a RouteLayout "
                          "(links.with_layout)")
+    if backend in ("pt", "pt_pallas") and \
+            (lay is None or lay.path_table is None):
+        raise ValueError(f"backend {backend!r} needs a PathTable "
+                         "(links.with_layout(net, path_table=True))")
     return backend
 
 
@@ -360,7 +604,8 @@ def offered_load(net: FluidNet, rates: jnp.ndarray,
                  split: Optional[jnp.ndarray] = None, *,
                  axis_name: Optional[str] = None,
                  backend: str = "auto",
-                 halo: Optional[int] = None) -> jnp.ndarray:
+                 halo: Optional[int] = None,
+                 block: Optional[int] = None) -> jnp.ndarray:
     """(n_links,) aggregate arrival rate from per-flow send rates.
 
     With a split matrix, flow i contributes rates[i] * split[i, p] to every
@@ -375,19 +620,35 @@ def offered_load(net: FluidNet, rates: jnp.ndarray,
     globally correct ONLY on this shard's own links plus the boundary
     tail — exactly the links its flows can read.  `backend` picks the
     aggregation implementation (see module docstring); "auto" uses the
-    blocked-CSR path whenever a layout is attached.
+    PathTable pipeline when the layout carries one, else the blocked-CSR
+    path whenever a layout is attached.  `block` overrides the Pallas
+    flow-block size (None picks it from n_flows).
     """
     split = _split_or_uniform(net, split)
     backend = _resolve_backend(net, backend)
+    tiled_halo = halo is not None and 0 < halo < net.n_links
     if backend == "pallas":
         from repro.kernels import fleet_pallas
-        if halo is not None and 0 < halo < net.n_links:
+        if tiled_halo:
             priv, bnd = fleet_pallas.link_scatter_tiles(
-                _pad_idx(net), rates[:, None] * split, net.n_links, halo)
+                _pad_idx(net), rates[:, None] * split, net.n_links, halo,
+                block=block)
             buf = jnp.concatenate([priv, bnd])
         else:
             buf = fleet_pallas.link_scatter(
-                _pad_idx(net), rates[:, None] * split, net.n_links)
+                _pad_idx(net), rates[:, None] * split, net.n_links,
+                block=block)
+    elif backend == "pt_pallas":
+        from repro.kernels import fleet_pallas
+        pt = net.layout.path_table
+        buf = fleet_pallas.path_table_scatter(
+            pt.pre_id, pt.suf_id, pt.seg_idx, rates[:, None] * split,
+            net.n_links, n_boundary=halo if tiled_halo else None,
+            block=block)
+        if tiled_halo:
+            buf = jnp.concatenate(buf)
+    elif backend == "pt":
+        buf = _offered_load_pt(net, rates, split)
     elif backend == "segment":
         buf = _offered_load_segment(net, rates, split)
     elif backend == "csr":
@@ -458,6 +719,37 @@ def subflow_loss_frac(net: FluidNet, p_drop: jnp.ndarray) -> jnp.ndarray:
     return 1.0 - jnp.prod(keep[_pad_idx(net)], axis=2)
 
 
+def _pt_gathers(net: FluidNet, load, p_link, q_phys):
+    """The three link->flow gathers through the PathTable: each reduction
+    (min of cap/load, prod of 1-p, sum of q/cap) runs once per UNIQUE
+    segment over the (U, hseg) table, then two (n, p) takes compose the
+    prefix and suffix halves per subflow.  min composes exactly under the
+    split; prod/sum merely regroup, staying within the backends' shared
+    ~1e-6 float tolerance.  Pad hops read the appended identity slot
+    (1.0 / 1.0 / 0.0 — valid because scale <= 1)."""
+    pt = net.layout.path_table
+    s = jnp.minimum(1.0, net.cap / jnp.maximum(load, _EPS))
+    s = jnp.concatenate([s, jnp.ones(1, s.dtype)])
+    clean = jnp.concatenate([1.0 - p_link, jnp.ones(1, p_link.dtype)])
+    d = jnp.concatenate([q_phys / net.cap, jnp.zeros(1, q_phys.dtype)])
+    seg_scale = jnp.min(s[pt.seg_idx], axis=1)       # (U,)
+    seg_clean = jnp.prod(clean[pt.seg_idx], axis=1)
+    seg_delay = jnp.sum(d[pt.seg_idx], axis=1)
+    sub_scale = jnp.minimum(seg_scale[pt.pre_id], seg_scale[pt.suf_id])
+    sub_frac = 1.0 - seg_clean[pt.pre_id] * seg_clean[pt.suf_id]
+    sub_delay = seg_delay[pt.pre_id] + seg_delay[pt.suf_id]
+    return sub_scale, sub_frac, sub_delay
+
+
+def _pt_loss_frac(net: FluidNet, p_drop: jnp.ndarray) -> jnp.ndarray:
+    """`subflow_loss_frac` through the PathTable: survival products per
+    unique segment, composed per subflow across the prefix/suffix split."""
+    pt = net.layout.path_table
+    keep = jnp.concatenate([1.0 - p_drop, jnp.ones(1, p_drop.dtype)])
+    seg_keep = jnp.prod(keep[pt.seg_idx], axis=1)
+    return 1.0 - seg_keep[pt.pre_id] * seg_keep[pt.suf_id]
+
+
 def mark_prob(net: FluidNet, q_phys: jnp.ndarray,
               q_phantom: jnp.ndarray) -> jnp.ndarray:
     """(n_links,) expected RED mark probability on the marking queue."""
@@ -497,13 +789,18 @@ def link_epoch(net: FluidNet, rates: jnp.ndarray, split: jnp.ndarray,
                axis_name: Optional[str] = None,
                backend: str = "auto",
                halo: Optional[int] = None,
+               block: Optional[int] = None,
                with_loss: bool = False) -> LinkEpoch:
     """One epoch of link physics in one call: offered load -> queue step ->
     mark probabilities -> the three link->flow gathers.
 
     The gathers share one `pad_idx` read per call via the layout; with
     `backend="pallas"` they run as one fused kernel pass over the route
-    tensor (repro.kernels.fleet_pallas.link_gathers).  `halo` restricts
+    tensor (repro.kernels.fleet_pallas.link_gathers), and with the
+    PathTable backends ("pt" / "pt_pallas", also what "auto" picks when
+    the layout carries a table) each gather reduces once per UNIQUE path
+    segment before two per-subflow takes compose the halves — including
+    the `p_loss` thinning and the `with_loss` composition.  `halo` restricts
     the sharded reduction to the trailing boundary links (see
     `offered_load`); queue/mark state on links outside this shard's reach
     is then stale, but no local flow reads it.
@@ -525,28 +822,41 @@ def link_epoch(net: FluidNet, rates: jnp.ndarray, split: jnp.ndarray,
     the composed `p_drop`/`sub_loss` loss signal.
     """
     q_prev = q_phys
+    rb = _resolve_backend(net, backend)
     load = offered_load(net, rates, split, axis_name=axis_name,
-                        backend=backend, halo=halo)
+                        backend=rb, halo=halo, block=block)
     q_phys, q_phantom = step_queues(net, q_phys, q_phantom, load)
     p_link = mark_prob(net, q_phys, q_phantom)
-    if _resolve_backend(net, backend) == "pallas":
+    compressed = rb in ("pt", "pt_pallas")
+    if rb == "pallas":
         from repro.kernels import fleet_pallas
         sub_scale, sub_frac, sub_delay = fleet_pallas.link_gathers(
             _pad_idx(net),
             jnp.minimum(1.0, net.cap / jnp.maximum(load, _EPS)),
-            1.0 - p_link, q_phys / net.cap)
+            1.0 - p_link, q_phys / net.cap, block=block)
+    elif rb == "pt_pallas":
+        from repro.kernels import fleet_pallas
+        pt = net.layout.path_table
+        sub_scale, sub_frac, sub_delay = fleet_pallas.path_table_gathers(
+            pt.pre_id, pt.suf_id, pt.seg_idx,
+            jnp.minimum(1.0, net.cap / jnp.maximum(load, _EPS)),
+            1.0 - p_link, q_phys / net.cap, block=block)
+    elif rb == "pt":
+        sub_scale, sub_frac, sub_delay = _pt_gathers(net, load, p_link,
+                                                     q_phys)
     else:
         sub_scale = subflow_scale(net, load)
         sub_frac = subflow_mark_frac(net, p_link)
         sub_delay = subflow_delay(net, q_phys)
+    loss_frac = _pt_loss_frac if compressed else subflow_loss_frac
     if net.p_loss is not None:
-        sub_scale = sub_scale * (1.0 - subflow_loss_frac(net, net.p_loss))
+        sub_scale = sub_scale * (1.0 - loss_frac(net, net.p_loss))
     p_drop = sub_loss = None
     if with_loss:
         p_drop = drop_prob(net, q_prev, load)
         if net.p_loss is not None:
             p_drop = 1.0 - (1.0 - p_drop) * (1.0 - net.p_loss)
-        sub_loss = subflow_loss_frac(net, p_drop)
+        sub_loss = loss_frac(net, p_drop)
     return LinkEpoch(load=load, q_phys=q_phys, q_phantom=q_phantom,
                      p_link=p_link, sub_scale=sub_scale, sub_frac=sub_frac,
                      sub_delay=sub_delay, p_drop=p_drop, sub_loss=sub_loss)

@@ -137,7 +137,8 @@ def shard_scenario(net: L.FluidNet, params: FleetParams, *,
                    churn: Optional[ChurnParams] = None,
                    rel: Optional[RelParams] = None,
                    mesh=None, locality: bool = True,
-                   plan=None, link_tier=None) -> ShardedFleet:
+                   plan=None, link_tier=None,
+                   path_table="auto") -> ShardedFleet:
     """Compile (net, params, ...) against a locality ShardPlan.
 
     `locality=False` reproduces the PR-3 contiguous-block sharding (full
@@ -147,6 +148,14 @@ def shard_scenario(net: L.FluidNet, params: FleetParams, *,
     on multi-tier topologies like the fat tree.  `rel` (RelParams) is
     permuted like the other flow-axis parameter families; padding rows
     are force-disabled so the reliability machine stays inert on them.
+
+    `path_table` controls the per-shard compressed PathTables: "auto"
+    attaches them only when EVERY shard clears links.PT_MIN_COMPRESS
+    (shard_map stacks the tables into one operand, so mixed flat/
+    compressed shards cannot share an executable), True forces them,
+    False keeps the flat layouts.  Shards whose unique-segment count
+    falls short of the widest shard's are rebuilt padded to the common U
+    so the stacked operand is rectangular.
     """
     from repro.scenarios.compile_fleetsim import plan_shards
     mesh = mesh if mesh is not None else flow_mesh()
@@ -178,8 +187,27 @@ def shard_scenario(net: L.FluidNet, params: FleetParams, *,
     net_p = _take_links(net, jnp.asarray(plan.new2old))._replace(
         routes=routes_p, layout=None)
     rows = plan.rows
-    lays = [L.compute_layout(routes_p[s * rows:(s + 1) * rows], net.n_links)
-            for s in range(plan.n_shards)]
+    shard_routes = [routes_p[s * rows:(s + 1) * rows]
+                    for s in range(plan.n_shards)]
+    lays = [L.compute_layout(r, net.n_links, path_table=False)
+            for r in shard_routes]
+    if path_table:
+        min_c = L.PT_MIN_COMPRESS if path_table == "auto" else None
+        pts = [L.compute_path_table(r, net.n_links, min_compress=min_c)
+               for r in shard_routes]
+        if all(pt is not None for pt in pts):
+            # pad every shard's table to the widest (U, E1) so the stack
+            # below sees one shape per field
+            u_max = max(pt.n_segments for pt in pts)
+            e1_max = max(pt.seg_gather.size for pt in pts)
+            pts = [pt if pt.n_segments == u_max and
+                   pt.seg_gather.size == e1_max else
+                   L.compute_path_table(r, net.n_links,
+                                        pad_segments_to=u_max,
+                                        pad_entries_to=e1_max)
+                   for r, pt in zip(shard_routes, pts)]
+            lays = [lay._replace(path_table=pt)
+                    for lay, pt in zip(lays, pts)]
     layouts = jax.tree.map(lambda *xs: jnp.stack(xs), *lays)
 
     params_p = jax.tree.map(lambda a: a[gc], params)
@@ -230,7 +258,7 @@ def _state_spec(has_rel: bool = False) -> FleetState:
 
 @functools.lru_cache(maxsize=64)
 def _compiled(mesh, scheme, n_warm, n_meas, backend, halo, unroll, churn_n,
-              has_lb, has_churn, has_rel, has_ploss=False):
+              has_lb, has_churn, has_rel, has_ploss=False, has_pt=False):
     """Build + cache the jitted shard_map'd steady-state executable.
 
     PR 3 rebuilt this closure (and its jit wrapper) inside every call, so
@@ -238,8 +266,11 @@ def _compiled(mesh, scheme, n_warm, n_meas, backend, halo, unroll, churn_n,
     dominant cost of the old sharded path.  Everything value-like is a
     traced argument here; only genuinely static config is in the key.
     """
+    pt_spec = None if not has_pt else L.PathTable(
+        **{f: P(AXIS) for f in L.PathTable._fields})
     lay_spec = L.RouteLayout(
-        **{f: P(AXIS) for f in L.RouteLayout._fields})
+        **{f: P(AXIS) for f in L.RouteLayout._fields
+           if f != "path_table"}, path_table=pt_spec)
     param_spec = FleetParams(**{f: P(AXIS) for f in FleetParams._fields})
     lb_spec = None if not has_lb else LbParams(
         **{f: P(AXIS) for f in LbParams._fields})
@@ -342,7 +373,8 @@ def steady_state_prepared(sf: ShardedFleet, *, n_warm: int, n_meas: int,
                     plan.n_boundary, unroll,
                     None if sf.churn is None else plan.n_real,
                     sf.lb is not None, sf.churn is not None,
-                    sf.rel is not None, net.p_loss is not None)
+                    sf.rel is not None, net.p_loss is not None,
+                    sf.layouts.path_table is not None)
     final, rates = run(net, sf.layouts, sf.params, _unalias(state0),
                        sf.is_inter, sf.lb, sf.churn, sf.churn_map, sf.own,
                        sf.rel)
@@ -361,7 +393,7 @@ def steady_state_sharded(net: L.FluidNet, params: FleetParams, *,
                          state0: Optional[FleetState] = None,
                          mesh=None, backend: str = "auto",
                          locality: bool = True, plan=None,
-                         link_tier=None,
+                         link_tier=None, path_table="auto",
                          unroll: int = 1, seed: int = 0):
     """`cc.steady_state` with the flow axis sharded over `mesh` (default:
     all local devices) under a locality ShardPlan — one-shot convenience
@@ -372,7 +404,7 @@ def steady_state_sharded(net: L.FluidNet, params: FleetParams, *,
     executable itself is cached either way)."""
     sf = shard_scenario(net, params, is_inter=is_inter, lb=lb, churn=churn,
                         rel=rel, mesh=mesh, locality=locality, plan=plan,
-                        link_tier=link_tier)
+                        link_tier=link_tier, path_table=path_table)
     return steady_state_prepared(sf, n_warm=n_warm, n_meas=n_meas,
                                  scheme=scheme, backend=backend,
                                  unroll=unroll, state0=state0, seed=seed)

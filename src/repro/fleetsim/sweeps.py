@@ -104,18 +104,47 @@ def _norm_scenario(sc):
     return net, params, ii, lb, churn, rel
 
 
+def _strip_unstackable_path_tables(nets):
+    """Drop per-cell PathTables that cannot stack into one grid operand.
+
+    Cells with different route tensors dedupe to different unique-segment
+    counts (load_mix_sweep rebuilds routes per cell), so their tables'
+    shapes disagree and jnp.stack would fail; a mix of flat and compressed
+    layouts is just as unstackable.  Every cell keeps its flat layout
+    fields, so the sweep silently falls back to the CSR backend — correct,
+    just uncompressed.
+    """
+    pts = [None if n.layout is None else n.layout.path_table for n in nets]
+    if all(pt is None for pt in pts):
+        return nets
+    sigs = {None if pt is None else
+            tuple(jnp.shape(leaf) for leaf in pt) for pt in pts}
+    if len(sigs) == 1:
+        return nets
+    warnings.warn("stack_scenarios: per-cell PathTables have mismatched "
+                  "shapes; stripping them (cells fall back to the flat "
+                  "CSR backend)")
+    return tuple(
+        n if n.layout is None or n.layout.path_table is None
+        else n._replace(layout=n.layout._replace(path_table=None))
+        for n in nets)
+
+
 def stack_scenarios(scenarios: Sequence[tuple]):
     """Stack same-shape scenario pytrees on a leading axis.
 
     Returns (nets, params, is_inter, lb, churn, rel); the LB / churn /
     reliability slots are None when absent (each must be present on all
-    scenarios or none).
+    scenarios or none).  Per-cell PathTables survive the stack only when
+    every cell carries one of identical shape (see
+    `_strip_unstackable_path_tables`).
     """
     nets, params, inters, lbs, churns, rels = zip(
         *(_norm_scenario(s) for s in scenarios))
     for tag, xs in (("lb", lbs), ("churn", churns), ("rel", rels)):
         if any(x is None for x in xs) != all(x is None for x in xs):
             raise ValueError(f"{tag} must be set on all scenarios or none")
+    nets = _strip_unstackable_path_tables(nets)
     stk = lambda *xs: jnp.stack(xs)
     return (jax.tree.map(stk, *nets), jax.tree.map(stk, *params),
             jnp.stack(inters),
@@ -295,8 +324,9 @@ def _run_grid_sharded(scenarios, scheme, n_warm, n_meas, seed, mesh,
     from repro.fleetsim.reliability import RelParams
     from repro.fleetsim.state import ChurnParams, FleetParams, LbParams
     AXIS = sh.AXIS
-    lay_spec = fl.RouteLayout(
-        **{f: P(AXIS) for f in fl.RouteLayout._fields})
+    # one spec per layout leaf — the optional nested PathTable subtree
+    # (present on deep-multipath shards) must get specs too
+    lay_spec = jax.tree.map(lambda _: P(AXIS), sf0.layouts)
     param_spec = g(FleetParams(
         **{f: P(AXIS) for f in FleetParams._fields}))
     lb_spec = None if lb is None else g(LbParams(

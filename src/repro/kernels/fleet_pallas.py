@@ -28,16 +28,38 @@ Grid: one step per `block`-flow slice (wrappers pad n_flows up and strip
 the padding; pad flows point every hop at the scratch slot with zero rate).
 The scatter accumulates into one revisited (n_links + 1,) output block
 across the sequential grid, the Pallas analogue of the `.at[].add` ravel.
+Every wrapper takes `block=None` and picks the slice height from the fleet
+size (`pick_block`) — small fleets used to pad up to one mostly-masked
+512-row tile.
+
+The `path_table_*` wrappers run repro.fleetsim.links.PathTable's
+compressed two-stage pipeline through the SAME kernel bodies: stage 1
+scatters subflow rates over the (n, p, 2) prefix/suffix segment-id tensor
+(segments play the role of links), stage 2 scatters the (U, 1, hseg)
+unique-segment table into real links, and the fused gather pass runs once
+per unique segment before two per-subflow takes compose the halves.
 """
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 BLOCK_FLOWS = 512
+
+
+def pick_block(n_flows: int) -> int:
+    """Flow-block height for a fleet of `n_flows`: BLOCK_FLOWS once the
+    tiles are dense, smaller powers of two (>= 8, the f32 sublane tile)
+    below ~4k flows so a 1k-flow scenario is not padded into one
+    mostly-masked 512-row grid step."""
+    block = 8
+    while block < BLOCK_FLOWS and block * 8 < n_flows:
+        block *= 2
+    return block
 
 
 def _onehot_vals(idx, packed, n_cols):
@@ -89,13 +111,15 @@ def _pad_flows(pad_idx, n_links, block):
 @functools.partial(jax.jit,
                    static_argnames=("n_links", "block", "interpret"))
 def link_scatter(pad_idx, sub_vals, n_links: int,
-                 block: int = BLOCK_FLOWS, interpret: bool = True):
+                 block: Optional[int] = None, interpret: bool = True):
     """Offered-load buffer from per-subflow rates.
 
     pad_idx: (n_flows, n_paths, max_hops) int32 in [0, n_links] (-1 hops
     already redirected to the n_links scratch slot); sub_vals: (n_flows,
-    n_paths) f32 wire rates.  Returns (n_links + 1,) f32.
+    n_paths) f32 wire rates.  Returns (n_links + 1,) f32.  `block=None`
+    resolves to `pick_block(n_flows)`.
     """
+    block = pick_block(pad_idx.shape[0]) if block is None else block
     pad_idx, pad = _pad_flows(pad_idx, n_links, block)
     if pad:
         sub_vals = jnp.concatenate(
@@ -137,7 +161,7 @@ def _scatter_tiles_kernel(idx_ref, val_ref, priv_ref, bnd_ref, *,
                    static_argnames=("n_links", "n_boundary", "block",
                                     "interpret"))
 def link_scatter_tiles(pad_idx, sub_vals, n_links: int, n_boundary: int,
-                       block: int = BLOCK_FLOWS, interpret: bool = True):
+                       block: Optional[int] = None, interpret: bool = True):
     """Per-shard offered-load scatter with the boundary links in their own
     tile.
 
@@ -156,6 +180,7 @@ def link_scatter_tiles(pad_idx, sub_vals, n_links: int, n_boundary: int,
         # link_scatter + a full halo exchange (links.offered_load routes it
         # there); a zero-size BlockSpec would die deep inside pallas_call
         raise ValueError(f"n_boundary {n_boundary} out of (0, {n_links})")
+    block = pick_block(pad_idx.shape[0]) if block is None else block
     pad_idx, pad = _pad_flows(pad_idx, n_links, block)
     if pad:
         sub_vals = jnp.concatenate(
@@ -178,7 +203,7 @@ def link_scatter_tiles(pad_idx, sub_vals, n_links: int, n_boundary: int,
 
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def link_gathers(pad_idx, scale, clean, delay,
-                 block: int = BLOCK_FLOWS, interpret: bool = True):
+                 block: Optional[int] = None, interpret: bool = True):
     """Fused link -> flow pass: all three per-subflow reductions at once.
 
     pad_idx: (n_flows, n_paths, max_hops) int32 in [0, n_links]; scale /
@@ -193,6 +218,7 @@ def link_gathers(pad_idx, scale, clean, delay,
         jnp.concatenate([clean, jnp.ones(1, clean.dtype)]),
         jnp.concatenate([delay, jnp.zeros(1, delay.dtype)]),
     ], axis=1).astype(jnp.float32)                # (n_links + 1, 3)
+    block = pick_block(pad_idx.shape[0]) if block is None else block
     pad_idx, pad = _pad_flows(pad_idx, n_links, block)
     n, p, h = pad_idx.shape
     out = pl.pallas_call(
@@ -209,3 +235,59 @@ def link_gathers(pad_idx, scale, clean, delay,
     if pad:
         out = tuple(o[:n - pad] for o in out)
     return tuple(out)
+
+
+# ------------------------------------------------ PathTable compressed path
+# (raw-array wrappers so repro.fleetsim.links can hand its PathTable fields
+# straight in without this module importing links)
+
+def path_rates(pre_id, suf_id, sub_vals, n_segments: int,
+               block: Optional[int] = None, interpret: bool = True):
+    """Stage 1: (n_segments + 1,) total subflow rate per unique segment.
+
+    pre_id / suf_id: (n_flows, n_paths) int32 unique-segment ids; sub_vals:
+    (n_flows, n_paths) f32 wire rates.  Each subflow contributes its rate
+    to BOTH halves' segments — the scatter kernel sees an (n, p, 2) "route"
+    tensor whose link axis is the segment id space (no -1s, so the final
+    scratch slot stays 0.0 — stage 2's pad entries rely on that).
+    """
+    ids = jnp.stack([pre_id, suf_id], axis=-1)
+    return link_scatter(ids, sub_vals, n_segments,
+                        block=block, interpret=interpret)
+
+
+def path_table_scatter(pre_id, suf_id, seg_idx, sub_vals, n_links: int,
+                       n_boundary: Optional[int] = None,
+                       block: Optional[int] = None, interpret: bool = True):
+    """Compressed offered-load scatter: `path_rates` then one scatter of
+    the (U, hseg) unique-segment table into links (pad hops already point
+    at the n_links scratch slot).  Returns the (n_links + 1,) buffer, or
+    the (private, boundary) tile pair of `link_scatter_tiles` when
+    `n_boundary` is set (the sharded halo path).
+    """
+    u = seg_idx.shape[0]
+    seg = path_rates(pre_id, suf_id, sub_vals, u,
+                     block=block, interpret=interpret)[:u]
+    if n_boundary is None:
+        return link_scatter(seg_idx[:, None, :], seg[:, None], n_links,
+                            block=block, interpret=interpret)
+    return link_scatter_tiles(seg_idx[:, None, :], seg[:, None], n_links,
+                              n_boundary, block=block, interpret=interpret)
+
+
+def path_table_gathers(pre_id, suf_id, seg_idx, scale, clean, delay,
+                       block: Optional[int] = None, interpret: bool = True):
+    """Compressed link -> flow pass: the fused gather kernel runs once per
+    UNIQUE segment over the (U, 1, hseg) table, then two per-subflow takes
+    compose the prefix/suffix halves (min of scales, product of the clean
+    probabilities, sum of delays).  Same contract as `link_gathers`.
+    """
+    seg_scale, seg_frac, seg_delay = link_gathers(
+        seg_idx[:, None, :], scale, clean, delay,
+        block=block, interpret=interpret)
+    seg_scale, seg_delay = seg_scale[:, 0], seg_delay[:, 0]
+    seg_clean = 1.0 - seg_frac[:, 0]
+    sub_scale = jnp.minimum(seg_scale[pre_id], seg_scale[suf_id])
+    sub_frac = 1.0 - seg_clean[pre_id] * seg_clean[suf_id]
+    sub_delay = seg_delay[pre_id] + seg_delay[suf_id]
+    return sub_scale, sub_frac, sub_delay

@@ -120,3 +120,42 @@ def fleet_link_gathers_ref(routes, scale, clean, delay):
     return (jnp.min(scale_ext[pad_idx], axis=2),
             1.0 - jnp.prod(clean_ext[pad_idx], axis=2),
             jnp.sum(delay_ext[pad_idx], axis=2))
+
+
+# --------------------------------------- PathTable compressed-pipeline oracles
+# (dense jnp restatements of repro.fleetsim.links' two-stage factorization;
+# tests pin the blocked-CSR and Pallas path-table backends to these AND the
+# table pipeline itself to the flat fleet_offered_load_ref oracle)
+
+def fleet_pt_offered_load_ref(pre_id, suf_id, seg_idx, rates, split,
+                              n_links: int):
+    """Two-stage unique-segment aggregation via plain `.at[].add` scatters.
+
+    pre_id / suf_id: (n_flows, n_paths) unique-segment ids; seg_idx:
+    (U, hseg) segment hop links in [0, n_links] (pads already redirected
+    to the scratch slot).  Returns the (n_links + 1,) offered-load buffer.
+    """
+    sub = (rates[:, None] * split).ravel()
+    u = seg_idx.shape[0]
+    seg = jnp.zeros(u, sub.dtype)
+    seg = seg.at[pre_id.ravel()].add(sub).at[suf_id.ravel()].add(sub)
+    buf = jnp.zeros(n_links + 1, sub.dtype)
+    per_hop = jnp.broadcast_to(seg[:, None], seg_idx.shape)
+    return buf.at[seg_idx.ravel()].add(per_hop.ravel())
+
+
+def fleet_pt_gathers_ref(pre_id, suf_id, seg_idx, scale, clean, delay):
+    """Per-unique-segment reductions composed per subflow (the oracle of
+    links._pt_gathers / fleet_pallas.path_table_gathers): min / prod / sum
+    over each segment's hops, then min / product / sum across the
+    prefix-suffix split.  Same return contract as fleet_link_gathers_ref.
+    """
+    scale_ext = jnp.concatenate([scale, jnp.ones(1, scale.dtype)])
+    clean_ext = jnp.concatenate([clean, jnp.ones(1, clean.dtype)])
+    delay_ext = jnp.concatenate([delay, jnp.zeros(1, delay.dtype)])
+    seg_scale = jnp.min(scale_ext[seg_idx], axis=1)
+    seg_clean = jnp.prod(clean_ext[seg_idx], axis=1)
+    seg_delay = jnp.sum(delay_ext[seg_idx], axis=1)
+    return (jnp.minimum(seg_scale[pre_id], seg_scale[suf_id]),
+            1.0 - seg_clean[pre_id] * seg_clean[suf_id],
+            seg_delay[pre_id] + seg_delay[suf_id])

@@ -111,6 +111,11 @@ def fleet_arrays(spec: Scenario):
     # (steady_state, sweeps.run_grid stacking, validate) steps on the
     # precomputed indices + sorted CSR view instead of re-deriving them
     # each epoch.  trim=False: layouts must stack across sweep grids.
+    # Routes are concrete here, so with_layout's path_table="auto" policy
+    # also emits the compressed unique-path-segment table at compile time
+    # whenever it clears links.PT_MIN_COMPRESS (fat trees yes, dumbbells
+    # no); the flat layout fields stay populated either way — they are
+    # the equivalence oracle the compressed backend is tested against.
     return with_layout(net), bdp, rtt, is_inter
 
 

@@ -7,6 +7,7 @@ import json
 import subprocess
 import sys
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -51,13 +52,18 @@ def _random_rates_split(rng, net):
 
 # ------------------------------------------------ aggregation equivalence
 
-@pytest.mark.parametrize("backend", ["segment", "csr", "pallas"])
+@pytest.mark.parametrize("backend", ["segment", "csr", "pallas", "pt",
+                                     "pt_pallas"])
 def test_offered_load_backends_match_reference(backend):
     """Every fast aggregation path == the `.at[].add` scatter within 1e-6
-    over random route tensors (incl. -1 padding and multipath splits)."""
+    over random route tensors (incl. -1 padding and multipath splits).
+    The pt backends force the PathTable build — random tensors rarely
+    compress enough for the auto policy to attach one."""
     rng = np.random.default_rng(7)
+    force = backend in ("pt", "pt_pallas")
     for _ in range(12):
-        net = L.with_layout(_random_net(rng))
+        net = L.with_layout(_random_net(rng),
+                            path_table=True if force else "auto")
         rates, split = _random_rates_split(rng, net)
         ref = np.asarray(kref.fleet_offered_load_ref(
             net.routes, rates, split, net.n_links)[:net.n_links])
@@ -154,12 +160,17 @@ def test_pallas_scatter_pads_nondivisible_flow_counts():
 
 
 def test_simulate_backends_agree_end_to_end():
-    """A full jitted simulation reaches the same state on every backend."""
+    """A full jitted simulation reaches the same state on every backend
+    (pt backends on a force-built table — the dumbbell never auto-attaches
+    one)."""
     net, bdp, rtt = dumbbell(3, 3)
     p = make_params(bdp, rtt, INTRA_BDP, INTRA_RTT)
+    pt_net = L.with_layout(net, path_table=True)
     finals = {}
-    for backend in ("reference", "segment", "csr", "pallas"):
-        f, _ = simulate(net, p, n_epochs=300, backend=backend)
+    for backend in ("reference", "segment", "csr", "pallas", "pt",
+                    "pt_pallas"):
+        use = pt_net if backend in ("pt", "pt_pallas") else net
+        f, _ = simulate(use, p, n_epochs=300, backend=backend)
         finals[backend] = np.asarray(f.cwnd)
     for backend, cwnd in finals.items():
         np.testing.assert_allclose(cwnd, finals["reference"], rtol=1e-4,
@@ -173,6 +184,140 @@ def test_layout_backends_require_layout():
         L.offered_load(bare, jnp.ones(2), backend="csr")
     with pytest.raises(ValueError):
         L.offered_load(bare, jnp.ones(2), backend="nope")
+    # a flat layout (no table) must refuse the compressed backends rather
+    # than silently fall back
+    flat = L.with_layout(net, path_table=False)
+    for backend in ("pt", "pt_pallas"):
+        with pytest.raises(ValueError):
+            L.offered_load(flat, jnp.ones(2), backend=backend)
+
+
+# ------------------------------------------------- path-table compression
+
+def test_path_table_reconstructs_routes():
+    """Prefix + suffix segments reassemble each subflow's real hop
+    multiset exactly — the invariant every compressed gather rests on."""
+    rng = np.random.default_rng(31)
+    for _ in range(8):
+        net = _random_net(rng)
+        pt = L.compute_path_table(net.routes, net.n_links)
+        r = np.asarray(net.routes)
+        n, p, h = r.shape
+        seg_idx = np.asarray(pt.seg_idx)
+        pre_id = np.asarray(pt.pre_id).reshape(-1)
+        suf_id = np.asarray(pt.suf_id).reshape(-1)
+        flat = r.reshape(n * p, h)
+        for s in range(n * p):
+            hops = np.concatenate([seg_idx[pre_id[s]], seg_idx[suf_id[s]]])
+            hops = hops[hops < net.n_links]          # drop scratch pads
+            want = flat[s][flat[s] >= 0]
+            assert sorted(hops.tolist()) == sorted(want.tolist()), s
+
+
+def test_path_table_auto_policy():
+    """auto attaches the table only where the factorization pays: never
+    on the shallow dumbbell, always on deep repetitive multipath, and
+    never inside jit (tracer routes cannot be deduped host-side)."""
+    net, _, _ = dumbbell(16, 16)
+    assert L.compute_layout(net.routes, net.n_links).path_table is None
+
+    # 64 flows re-walking the same 4 deep paths: dedupes massively
+    deep = jnp.asarray(
+        np.tile(np.arange(24, dtype=np.int32).reshape(4, 6), (64, 1, 1)))
+    lay = L.compute_layout(deep, 24)
+    assert lay.path_table is not None
+    assert lay.path_table.n_segments <= 16
+
+    def inside(routes):
+        return L.compute_layout(routes, 24).path_table is None
+    assert jax.jit(inside)(deep)        # tracer -> stays flat, no crash
+
+    with pytest.raises(ValueError):
+        jax.jit(lambda r: L.compute_layout(r, 24, path_table=True))(deep)
+
+
+def test_link_epoch_pt_matches_reference_with_loss():
+    """Full with_loss epoch (scale/mark/delay gathers + queue-overflow and
+    p_loss thinning) agrees between the compressed and reference
+    backends on lossy random nets."""
+    rng = np.random.default_rng(37)
+    for _ in range(6):
+        net = _random_net(rng)
+        net = net._replace(p_loss=jnp.asarray(
+            rng.uniform(0.0, 0.05, net.n_links), jnp.float32))
+        net = L.with_layout(net, path_table=True)
+        rates, split = _random_rates_split(rng, net)
+        qp = jnp.asarray(rng.uniform(0, 1, net.n_links),
+                         jnp.float32) * net.qcap
+        qv = jnp.asarray(rng.uniform(0, 1, net.n_links),
+                         jnp.float32) * net.vcap
+        got = L.link_epoch(net, rates, split, qp, qv, backend="pt",
+                           with_loss=True)
+        ref = L.link_epoch(net, rates, split, qp, qv, backend="reference",
+                           with_loss=True)
+        for f in got._fields:
+            a, b = getattr(got, f), getattr(ref, f)
+            if a is None:
+                assert b is None, f
+                continue
+            a, b = np.asarray(a), np.asarray(b)
+            scale = max(1.0, float(np.abs(b).max()))
+            np.testing.assert_allclose(a / scale, b / scale, atol=2e-5,
+                                       err_msg=f)
+
+
+def test_path_table_sharded_pad_to_common_shape():
+    """Per-shard tables with different (U, E1) are rebuilt padded to the
+    widest shape so the stacked shard_map operand has one shape — and the
+    padding changes nothing numerically."""
+    from repro.fleetsim.shard import flow_mesh, steady_state_sharded
+    from repro.fleetsim import steady_state
+    net, bdp, rtt = dumbbell(6, 5, n_bottleneck=2)
+    p = make_params(bdp, rtt, INTRA_BDP, INTRA_RTT)
+    ii = jnp.arange(11) >= 6
+    mesh = flow_mesh(1)
+    _, r1 = steady_state(net, p, n_warm=2000, n_meas=500, is_inter=ii)
+    _, r2 = steady_state_sharded(net, p, n_warm=2000, n_meas=500,
+                                 is_inter=ii, mesh=mesh, path_table=True)
+    np.testing.assert_allclose(np.asarray(r2), np.asarray(r1), atol=1e-5)
+
+
+def test_stack_scenarios_strips_mismatched_tables():
+    """Grid stacking keeps per-cell PathTables only when their shapes all
+    agree; a mismatched mix is stripped (with a warning) so the sweep
+    falls back to the flat CSR backend instead of crashing in stack."""
+    from repro.fleetsim.sweeps import _strip_unstackable_path_tables
+    rng = np.random.default_rng(41)
+    deep_a = jnp.asarray(
+        np.tile(np.arange(24, dtype=np.int32).reshape(4, 6), (8, 1, 1)))
+    # same route shape but only 2 distinct paths -> fewer unique segments
+    deep_b = jnp.asarray(np.tile(np.repeat(
+        rng.integers(0, 24, (2, 6)).astype(np.int32), 2, axis=0),
+        (8, 1, 1)))
+    net_a = _random_net(rng, n_links=24, n_flows=8, n_paths=4, max_hops=6)
+    na = L.with_layout(net_a._replace(routes=deep_a), path_table=True)
+    nb = L.with_layout(net_a._replace(routes=deep_b), path_table=True)
+    same = _strip_unstackable_path_tables((na, na))
+    assert all(n.layout.path_table is not None for n in same)
+    if nb.layout.path_table.seg_idx.shape == \
+            na.layout.path_table.seg_idx.shape:
+        pytest.skip("random tables collided to one shape")
+    with pytest.warns(UserWarning, match="mismatched"):
+        mixed = _strip_unstackable_path_tables((na, nb))
+    assert all(n.layout.path_table is None for n in mixed)
+
+
+def test_pick_block():
+    """Block size tracks the flow count instead of the old hardcoded 512:
+    tiny fleets keep the f32 sublane minimum, mid sizes scale in powers
+    of two, large fleets saturate at BLOCK_FLOWS."""
+    assert fleet_pallas.pick_block(1) == 8
+    assert fleet_pallas.pick_block(1000) == 128
+    assert fleet_pallas.pick_block(4096) == 512
+    assert fleet_pallas.pick_block(1_000_000) == fleet_pallas.BLOCK_FLOWS
+    for n in (1, 3, 77, 1000, 5000, 10 ** 6):
+        b = fleet_pallas.pick_block(n)
+        assert b & (b - 1) == 0 and 8 <= b <= fleet_pallas.BLOCK_FLOWS
 
 
 # --------------------------------------------------- locality shard plans
@@ -384,6 +529,50 @@ print(json.dumps(out))
     assert res["err_q"] <= 1e-4 * max(1.0, res["q_scale"])
     # the dumbbell boundary is the WAN pipe + at most the shared downlinks
     assert res["n_boundary"] < res["n_links"]
+
+
+@pytest.mark.slow
+def test_sharded_path_table_matches_flat_two_devices():
+    """pt-sharded steady state (forced 2-device mesh, per-shard tables
+    padded to a common (U, E1), halo exchange on the compressed scatter)
+    == the flat-sharded run on a deep-multipath net."""
+    res = _run(r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax, jax.numpy as jnp, numpy as np, json
+from repro.fleetsim import dumbbell, make_params
+from repro.fleetsim.shard import shard_scenario, steady_state_prepared
+from repro.fleetsim import links as L
+
+rng = np.random.default_rng(3)
+n, p_, h, n_links = 64, 4, 6, 24
+paths = np.arange(n_links, dtype=np.int32).reshape(4, 6)
+routes = jnp.asarray(np.tile(paths, (n, 1, 1))[:, :p_, :])
+net, bdp, rtt = dumbbell(n // 2, n - n // 2)
+cap = jnp.asarray(rng.uniform(5.0, 20.0, n_links), jnp.float32)
+qcap = jnp.asarray(rng.uniform(100.0, 1000.0, n_links), jnp.float32)
+net = L.FluidNet(cap=cap, qcap=qcap, ecn_lo=0.25 * qcap,
+                 ecn_hi=0.75 * qcap, drain=0.9 * cap, vcap=qcap,
+                 use_phantom=jnp.zeros(n_links, bool), routes=routes,
+                 dt=net.dt)
+params = make_params(bdp, rtt, float(np.mean(np.asarray(bdp))),
+                     float(np.mean(np.asarray(rtt))))
+out = {}
+# short horizon: this is an equivalence check, not a convergence check —
+# the nonlinear CC dynamics amplify float32 reorder rounding between the
+# pt and csr scatters chaotically (1e-7 at 50 epochs, 1e-2 by 200)
+kw = dict(n_warm=50, n_meas=5)
+sf_pt = shard_scenario(net, params, path_table=True)
+out["has_pt"] = sf_pt.layouts.path_table is not None
+_, r_pt = steady_state_prepared(sf_pt, **kw)
+sf_flat = shard_scenario(net, params, path_table=False)
+_, r_flat = steady_state_prepared(sf_flat, **kw)
+out["err"] = float(np.max(np.abs(np.asarray(r_pt) - np.asarray(r_flat))))
+out["scale"] = float(np.max(np.abs(np.asarray(r_flat))))
+print(json.dumps(out))
+""")
+    assert res["has_pt"]
+    assert res["err"] < 1e-5 * max(1.0, res["scale"])
 
 
 # --------------------------------------------- numerical hygiene at scale
