@@ -69,7 +69,6 @@ import os
 import pathlib
 import subprocess
 import sys
-import tempfile
 import time
 
 import jax
@@ -228,41 +227,31 @@ def _scenario(n_flows: int, multipath: bool, kind: str = "dumbbell",
     return out
 
 
-_DUMP_DIR: list = []          # one private temp dir per benchmark process
-
-
 def _dump_scenario(n_flows: int, kind: str = "dumbbell",
                    k: int = 8) -> pathlib.Path:
-    """Write the compiled scenario to an .npz the sharded subprocess can
-    load — it must not rebuild the same route tensor the parent already
-    compiled (at 1M flows that is most of the wall time).  Dumbbell
-    points ship the single-path scenario; fat-tree points ship the full
-    multipath one plus its locality tiers (and LbParams when present) so
-    the subprocess reproduces the pod-locality plan.  Files live in a
-    per-process mkdtemp dir: a fixed shared path would race with
-    concurrent runs on the same host."""
+    """Publish the compiled scenario to the content-addressed bundle cache
+    so the sharded subprocess can load it — it must not rebuild the same
+    route tensor the parent already compiled (at 1M flows that is most of
+    the wall time).  Dumbbell points ship the single-path scenario;
+    fat-tree points ship the full multipath one plus its locality tiers
+    (and LbParams when present) so the subprocess reproduces the
+    pod-locality plan.  The bundle is keyed by the bench build request,
+    so repeat runs on one host dedupe to a single write (atomic rename —
+    concurrent runs race safely) and later processes skip the build."""
+    from repro.fleetsim import service
+    from repro.scenarios import FleetScenario, fingerprint
+    key = fingerprint({"bench_scenario": "fleetsim_sweep", "kind": kind,
+                       "n_flows": n_flows, "k": k,
+                       "multipath": kind == "fat_tree"},
+                      service.CACHE_VERSION)
+    path = service.bundle_path(key)
+    if path.exists():
+        return path
     net, params, is_inter, lb, tier = _scenario(
         n_flows, kind == "fat_tree", kind, k)
-    if not _DUMP_DIR:
-        _DUMP_DIR.append(pathlib.Path(
-            tempfile.mkdtemp(prefix="fleetsim_bench_")))
-    path = _DUMP_DIR[0] / f"scn_{kind}_{n_flows}.npz"
-    # None-valued optional fields (layout, p_loss on lossless nets) would
-    # pickle as object arrays the allow_pickle=False load refuses
-    arrays = {f"net_{f}": np.asarray(getattr(net, f))
-              for f in net._fields
-              if f != "layout" and getattr(net, f) is not None}
-    arrays.update({f"par_{f}": np.asarray(getattr(params, f))
-                   for f in params._fields})
-    if tier is not None:
-        arrays["link_tier"] = np.asarray(tier)
-    if is_inter is not None:
-        arrays["is_inter"] = np.asarray(is_inter)
-    if lb is not None:
-        arrays.update({f"lb_{f}": np.asarray(getattr(lb, f))
-                       for f in lb._fields})
-    np.savez(path, **arrays)
-    return path
+    fs = FleetScenario(net=net, params=params, is_inter=is_inter, lb=lb,
+                       churn=None, seed=0, link_tier=tier)
+    return service.publish_scenario(fs, key)
 
 
 def _time_simulate(net, params, n_epochs, *, is_inter=None, lb=None,
@@ -336,29 +325,24 @@ def _sharded_point(n_flows: int, n_epochs: int, n_devices: int = 2,
     """Time the shard_map'd flow axis in a subprocess (the forced host
     device count must be set before jax initializes).  Returns warm_s
     plus the plan's boundary stats.  The compiled scenario is loaded
-    from the parent's .npz cache, not rebuilt; fat-tree points also load
-    the locality tiers (pod-grouped plan) and the adaptive LbParams."""
+    from the parent's content-addressed bundle, not rebuilt; fat-tree
+    points also load the locality tiers (pod-grouped plan) and the
+    adaptive LbParams.  The dense RouteLayout rides in the bundle but is
+    stripped before sharding — each shard compiles its own local view."""
     scn = _dump_scenario(n_flows, kind, k)
     code = f"""
 import os
 os.environ["XLA_FLAGS"] = (
     "--xla_force_host_platform_device_count={n_devices} "
     + os.environ.get("XLA_FLAGS", ""))
-import json, time, jax, numpy as np
-from repro.fleetsim.links import FluidNet
-from repro.fleetsim.state import FleetParams, LbParams
+import json, time, jax
+from repro.fleetsim import service
 from repro.fleetsim.shard import shard_scenario, steady_state_prepared
-z = np.load({str(scn)!r})
-net = FluidNet(**{{f: z["net_" + f]
-                   for f in FluidNet._fields if "net_" + f in z}})
-p = FleetParams(**{{f: z["par_" + f] for f in FleetParams._fields}})
-jnp = jax.numpy
-tier = z["link_tier"] if "link_tier" in z else None
-ii = jnp.asarray(z["is_inter"]) if "is_inter" in z else None
-lb = (LbParams(**{{f: jnp.asarray(z["lb_" + f]) for f in LbParams._fields}})
-      if "lb_eta" in z else None)
-sf = shard_scenario(net, p, is_inter=ii, lb=lb, locality={locality},
-                    link_tier=tier)
+fs = service.load_bundle({str(scn)!r})
+assert fs is not None, "scenario bundle missing or corrupt: " + {str(scn)!r}
+sf = shard_scenario(fs.net._replace(layout=None), fs.params,
+                    is_inter=fs.is_inter, lb=fs.lb, locality={locality},
+                    link_tier=fs.link_tier)
 kw = dict(n_warm={n_epochs} - 10, n_meas=10)
 _, r = steady_state_prepared(sf, **kw)
 jax.block_until_ready(r)

@@ -31,8 +31,13 @@ from repro.fleetsim.links import (LOAD_BACKENDS, FluidNet, PathTable,
                                   uniform_split, with_layout)
 from repro.fleetsim.reliability import (RelParams, RelState, init_rel_state,
                                         make_rel_params, recovery_split)
-from repro.fleetsim.shard import (ShardedFleet, shard_scenario,
-                                  steady_state_prepared,
+from repro.fleetsim.service import (SweepQuery, SweepService,
+                                    cached_scenario, load_bundle,
+                                    publish_scenario, save_bundle,
+                                    scenario_key)
+from repro.fleetsim.shard import (ShardedFleet, cache_stats,
+                                  set_executable_cache_size,
+                                  shard_scenario, steady_state_prepared,
                                   steady_state_sharded)
 from repro.fleetsim.state import (ChurnParams, FleetParams, FleetState,
                                   LbParams, init_state, make_churn_params,
@@ -45,8 +50,10 @@ __all__ = [
     "uniform_split", "with_layout",
     "RelParams", "RelState", "init_rel_state", "make_rel_params",
     "recovery_split",
-    "ShardedFleet", "shard_scenario", "steady_state_prepared",
-    "steady_state_sharded",
+    "SweepQuery", "SweepService", "cached_scenario", "load_bundle",
+    "publish_scenario", "save_bundle", "scenario_key",
+    "ShardedFleet", "cache_stats", "set_executable_cache_size",
+    "shard_scenario", "steady_state_prepared", "steady_state_sharded",
     "ChurnParams", "FleetParams", "FleetState", "LbParams",
     "init_state", "make_churn_params", "make_lb_params", "make_params",
 ]

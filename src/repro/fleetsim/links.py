@@ -421,6 +421,35 @@ def with_layout(net: FluidNet, **kw) -> FluidNet:
     return net._replace(layout=compute_layout(net.routes, net.n_links, **kw))
 
 
+def layout_to_arrays(lay: RouteLayout, prefix: str = "lay_") -> dict:
+    """RouteLayout -> {name: np.ndarray}, ready for an allow_pickle=False
+    `np.savez`.  The optional nested PathTable's fields ride under
+    `<prefix>pt_` (absent keys mean the layout was flat)."""
+    out = {prefix + f: np.asarray(getattr(lay, f))
+           for f in RouteLayout._fields if f != "path_table"}
+    if lay.path_table is not None:
+        out.update({prefix + "pt_" + f: np.asarray(getattr(lay.path_table, f))
+                    for f in PathTable._fields})
+    return out
+
+
+def layout_from_arrays(arrays, prefix: str = "lay_") -> \
+        Optional[RouteLayout]:
+    """Inverse of `layout_to_arrays`; `arrays` is any mapping (e.g. an
+    open NpzFile).  Returns None when no layout was serialized — the
+    round trip preserves "no layout" as well as flat vs PathTable'd."""
+    if prefix + "pad_idx" not in arrays:
+        return None
+    pt = None
+    if prefix + "pt_pre_id" in arrays:
+        pt = PathTable(**{f: jnp.asarray(arrays[prefix + "pt_" + f])
+                          for f in PathTable._fields})
+    return RouteLayout(
+        **{f: jnp.asarray(arrays[prefix + f])
+           for f in RouteLayout._fields if f != "path_table"},
+        path_table=pt)
+
+
 def path_mask(net: FluidNet) -> jnp.ndarray:
     """(n_flows, n_paths) bool: True where the path slot holds a real path."""
     if net.layout is not None:

@@ -36,7 +36,9 @@ link's owning shard before returning.
 loop bookkeeping batch per step instead of paying per-epoch dispatch),
 the padded initial state is donated to the compiled executable, and
 compiled executables are cached per (mesh, scheme, epochs, backend,
-halo, ...) so repeated calls — sweeps, benchmark reps — reuse them.
+halo, ...) so repeated calls — sweeps, benchmark reps — reuse them
+(capacity via FLEETSIM_EXEC_CACHE / `set_executable_cache_size`;
+hit/miss counters via `cache_stats`).
 Measured on the 2-core dev container the fusion is neutral-to-negative
 (XLA CPU loop overhead is tiny and the boundary psum is already
 payload-free; compile time grows with K), so it defaults to 1 — it is
@@ -61,6 +63,7 @@ interpreter).
 from __future__ import annotations
 
 import functools
+import os
 from typing import NamedTuple, Optional
 
 import jax
@@ -256,10 +259,22 @@ def _state_spec(has_rel: bool = False) -> FleetState:
     return FleetState(**specs)
 
 
-@functools.lru_cache(maxsize=64)
-def _compiled(mesh, scheme, n_warm, n_meas, backend, halo, unroll, churn_n,
-              has_lb, has_churn, has_rel, has_ploss=False, has_pt=False):
-    """Build + cache the jitted shard_map'd steady-state executable.
+# executable-cache capacity: FLEETSIM_EXEC_CACHE overrides the default
+# (a long-lived sweep service juggling many shapes may want more; a
+# memory-tight worker less).  Resize at runtime with
+# `set_executable_cache_size`; inspect with `cache_stats`.
+_EXEC_CACHE_DEFAULT = 64
+
+
+def _exec_cache_size() -> int:
+    return int(os.environ.get("FLEETSIM_EXEC_CACHE", _EXEC_CACHE_DEFAULT))
+
+
+def _compiled_impl(mesh, scheme, n_warm, n_meas, backend, halo, unroll,
+                   churn_n, has_lb, has_churn, has_rel, has_ploss=False,
+                   has_pt=False):
+    """Build the jitted shard_map'd steady-state executable (cached via
+    `_compiled`).
 
     PR 3 rebuilt this closure (and its jit wrapper) inside every call, so
     every benchmark rep re-traced and re-compiled the whole scan — THE
@@ -306,6 +321,33 @@ def _compiled(mesh, scheme, n_warm, n_meas, backend, halo, unroll, churn_n,
                   out_specs=(_state_spec(has_rel), P(AXIS)),
                   check_vma=False)
     return jax.jit(f, donate_argnums=(3,))
+
+
+_compiled = functools.lru_cache(maxsize=_exec_cache_size())(_compiled_impl)
+
+
+def set_executable_cache_size(maxsize: int) -> None:
+    """Rebuild the compiled-executable cache with a new capacity.
+
+    Drops every cached executable (the next call per config re-traces),
+    so resize at service startup, not mid-sweep.  The initial capacity
+    comes from the FLEETSIM_EXEC_CACHE env var (default 64)."""
+    global _compiled
+    _compiled = functools.lru_cache(maxsize=int(maxsize))(_compiled_impl)
+
+
+def cache_stats() -> dict:
+    """Hit/miss counters of the compiled-executable cache.
+
+    A healthy warm service shows hits >> misses; misses == distinct
+    (mesh, scheme, epochs, backend, halo, ...) configs seen.  `evictions`
+    > 0 means the working set exceeds the capacity — raise
+    FLEETSIM_EXEC_CACHE (or call `set_executable_cache_size`) before
+    trusting warm-latency numbers."""
+    info = _compiled.cache_info()
+    return {"hits": info.hits, "misses": info.misses,
+            "maxsize": info.maxsize, "currsize": info.currsize,
+            "evictions": max(info.misses - info.currsize, 0)}
 
 
 def _permute_state(state: FleetState, flow_idx: jnp.ndarray,

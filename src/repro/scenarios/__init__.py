@@ -40,11 +40,13 @@ from repro.scenarios.fat_tree import (TIER_AGG, TIER_CORE, TIER_EDGE,
                                       link_tier_from_name, link_tiers)
 from repro.scenarios.spec import (ChurnSpec, FlowGroup, LbSpec, LinkSpec,
                                   Path, PathSet, RelSpec, Scenario,
-                                  dumbbell_scenario)
+                                  dumbbell_scenario, fingerprint,
+                                  spec_fingerprint)
 
 __all__ = [
     "ChurnSpec", "FlowGroup", "LbSpec", "LinkSpec", "Path", "PathSet",
-    "RelSpec", "Scenario", "dumbbell_scenario",
+    "RelSpec", "Scenario", "dumbbell_scenario", "fingerprint",
+    "spec_fingerprint",
     "TIER_EDGE", "TIER_AGG", "TIER_CORE", "TIER_WAN",
     "fat_tree_spec", "link_tier_from_name", "link_tiers",
     "FleetScenario", "ShardPlan", "fleet_arrays", "plan_shards",

@@ -24,6 +24,8 @@ Units follow the repo convention: ns / bytes / bytes-per-ns.
 """
 from __future__ import annotations
 
+import hashlib
+import json
 from typing import NamedTuple, Optional, Tuple
 
 GBPS = 0.125               # bytes per ns per Gbit/s
@@ -194,6 +196,49 @@ class Scenario(NamedTuple):
                                 f"{self.name}/{g.name}: unknown link "
                                 f"{name!r}")
         return self
+
+
+# -------------------------------------------------------------- fingerprint
+
+def _canonical(obj):
+    """Nested spec value -> a JSON-stable structure.
+
+    NamedTuples are tagged with their class name (a RelSpec and an
+    equal-valued plain tuple must not collide), dicts are sorted by key,
+    and plain tuples/lists flatten to lists.  Only spec-grade leaves
+    (str / int / float / bool / None) survive — arrays do not belong in a
+    fingerprint; hash the spec that BUILT them instead.
+    """
+    if isinstance(obj, tuple) and hasattr(obj, "_fields"):
+        return ["#" + type(obj).__name__] + [_canonical(v) for v in obj]
+    if isinstance(obj, (tuple, list)):
+        return [_canonical(v) for v in obj]
+    if isinstance(obj, dict):
+        return {str(k): _canonical(v) for k, v in sorted(obj.items())}
+    if obj is None or isinstance(obj, (str, int, float, bool)):
+        return obj
+    raise TypeError(f"unfingerprintable spec value {obj!r} "
+                    f"({type(obj).__name__})")
+
+
+def fingerprint(obj, *extra) -> str:
+    """Deterministic content hash of a nested spec structure.
+
+    Works on any composition of NamedTuples / tuples / dicts over
+    primitive leaves — a full `Scenario`, a builder-kwargs dict, or both.
+    `extra` tokens (e.g. a cache-format version) fold into the digest.
+    Two structurally equal specs hash identically across processes and
+    sessions (json with sorted keys, no hash randomization); any field
+    change — seed, a group's RelSpec, a link rate — changes the digest.
+    """
+    payload = json.dumps([_canonical(obj), [_canonical(e) for e in extra]],
+                         sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(payload.encode()).hexdigest()[:20]
+
+
+def spec_fingerprint(spec: Scenario, *extra) -> str:
+    """`fingerprint` specialized to a Scenario (alias; see `fingerprint`)."""
+    return fingerprint(spec, *extra)
 
 
 # ------------------------------------------------------------------ dumbbell

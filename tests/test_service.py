@@ -1,0 +1,226 @@
+"""Persistent sweep service (repro.fleetsim.service): content addresses,
+bundle round-trips, corruption fallback, the bucket-ladder planner, and
+the configurable executable cache.
+
+Kept fast: small multipath dumbbells everywhere, plus one tiny fat tree
+(k=4, a few hundred flows) for the PathTable-bearing layout round-trip.
+"""
+import numpy as np
+import pytest
+
+jax = pytest.importorskip("jax")
+import jax.numpy as jnp
+
+from repro.fleetsim import links as fl
+from repro.fleetsim import service, shard, sweeps
+from repro.scenarios import (RelSpec, dumbbell_scenario, fat_tree_spec,
+                             fingerprint, to_fleetsim)
+
+RUN = dict(n_warm=60, n_meas=20)
+
+
+def _tiny_fs(**kw):
+    kw = {"n_intra": 4, "n_inter": 4, "multipath": True, "n_wan": 2, **kw}
+    return to_fleetsim(dumbbell_scenario(kw.pop("n_intra"),
+                                         kw.pop("n_inter"), **kw))
+
+
+# ---------------------------------------------------------------- addresses
+
+def test_fingerprint_deterministic_and_sensitive():
+    spec = dumbbell_scenario(4, 4, multipath=True)
+    assert fingerprint(spec) == fingerprint(dumbbell_scenario(
+        4, 4, multipath=True))
+    assert fingerprint(spec) != fingerprint(dumbbell_scenario(
+        4, 4, multipath=True, seed=1))
+    assert fingerprint(spec) != fingerprint(dumbbell_scenario(
+        4, 4, multipath=True, inter_rel=RelSpec(ec=(4, 2))))
+    # extras fold into the address (how CACHE_VERSION rides along)
+    assert fingerprint(spec) != fingerprint(spec, 2)
+
+
+def test_scenario_key_binds_defaults():
+    base = service.scenario_key("dumbbell", n_intra=4, n_inter=4)
+    # explicitly passing a builder default does not change the address
+    assert service.scenario_key("dumbbell", n_intra=4, n_inter=4,
+                                multipath=False) == base
+    assert service.scenario_key("dumbbell", n_intra=4, n_inter=4,
+                                seed=3) != base
+    assert service.scenario_key(
+        "dumbbell", n_intra=4, n_inter=4,
+        inter_rel=RelSpec(ec=(4, 1))) != base
+    with pytest.raises(ValueError, match="unknown scenario kind"):
+        service.scenario_key("torus", k=3)
+
+
+# ------------------------------------------------------------ bundle format
+
+def _assert_tree_identical(a, b):
+    la, ta = jax.tree.flatten(a)
+    lb_, tb = jax.tree.flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb_):
+        assert np.asarray(x).dtype == np.asarray(y).dtype
+        assert np.array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_bundle_round_trip_bit_identical(tmp_path):
+    fs = _tiny_fs(inter_rel=RelSpec(ec=(4, 2), debounce=1e5))
+    path = service.save_bundle(tmp_path / "a.npz", fs, key="a")
+    got = service.load_bundle(path)
+    assert got is not None
+    _assert_tree_identical(fs.net, got.net)
+    _assert_tree_identical(fs.params, got.params)
+    for field in ("lb", "churn", "rel"):
+        a, b = getattr(fs, field), getattr(got, field)
+        assert (a is None) == (b is None)
+        if a is not None:
+            _assert_tree_identical(a, b)
+    assert np.array_equal(np.asarray(fs.is_inter), np.asarray(got.is_inter))
+    assert (fs.link_tier is None) == (got.link_tier is None)
+
+
+def test_bundle_round_trip_fat_tree_layout(tmp_path):
+    fs = to_fleetsim(fat_tree_spec(k=4, n_wan=4, n_flows=240, n_paths=4))
+    got = service.load_bundle(
+        service.save_bundle(tmp_path / "ft.npz", fs, key="ft"))
+    assert got is not None
+    lay, glay = fs.net.layout, got.net.layout
+    assert (lay is None) == (glay is None)
+    if lay is not None:
+        _assert_tree_identical(lay._replace(path_table=None),
+                               glay._replace(path_table=None))
+        assert (lay.path_table is None) == (glay.path_table is None)
+        if lay.path_table is not None:
+            _assert_tree_identical(lay.path_table, glay.path_table)
+    assert np.array_equal(np.asarray(fs.link_tier),
+                          np.asarray(got.link_tier))
+
+
+def test_corrupt_bundle_rebuilds(tmp_path):
+    kw = dict(n_intra=4, n_inter=4, multipath=True, n_wan=2)
+    fs, src = service.cached_scenario("dumbbell", cache_dir=tmp_path, **kw)
+    assert src == "build"
+    _, src = service.cached_scenario("dumbbell", cache_dir=tmp_path, **kw)
+    assert src == "disk"
+    path = service.bundle_path(service.scenario_key("dumbbell", **kw),
+                               tmp_path)
+    # truncate to a partial write; the cache must rebuild, not crash
+    path.write_bytes(path.read_bytes()[:100])
+    fs2, src = service.cached_scenario("dumbbell", cache_dir=tmp_path, **kw)
+    assert src == "build"
+    _assert_tree_identical(fs.params, fs2.params)
+    # and the rebuild healed the bundle in place
+    _, src = service.cached_scenario("dumbbell", cache_dir=tmp_path, **kw)
+    assert src == "disk"
+
+
+def test_version_skew_orphans_bundle(tmp_path):
+    fs = _tiny_fs()
+    path = service.save_bundle(tmp_path / "v.npz", fs, key="v")
+    assert service.load_bundle(path) is not None
+    old = service.CACHE_VERSION
+    try:
+        service.CACHE_VERSION = old + 1
+        assert service.load_bundle(path) is None
+    finally:
+        service.CACHE_VERSION = old
+
+
+# ----------------------------------------------------------------- planner
+
+def test_cut_ladder():
+    assert list(service._cut_ladder(1, (1, 2, 4))) == [(1, 1)]
+    assert list(service._cut_ladder(3, (1, 2, 4))) == [(2, 2), (1, 1)]
+    assert list(service._cut_ladder(7, (2, 4))) == \
+        [(4, 4), (2, 2), (1, 2)]
+    assert list(service._cut_ladder(11, (1, 2, 4, 8, 16))) == \
+        [(8, 8), (2, 2), (1, 1)]
+    with pytest.raises(ValueError):
+        list(service._cut_ladder(3, ()))
+
+
+def test_batch_single_trace_and_matches_individual(tmp_path):
+    fs = _tiny_fs()
+    whatifs = [fs.net._replace(drain=fs.net.drain * f)
+               for f in (0.8, 0.9, 1.0, 1.1)]
+    queries = [service.SweepQuery((n, fs.params, fs.is_inter, fs.lb),
+                                  seed=i, **RUN)
+               for i, n in enumerate(whatifs)]
+    svc = service.SweepService(cache_dir=tmp_path, ladder=(1, 2, 4))
+    before = sweeps.grid_traces()
+    out = svc.submit(queries)
+    assert sweeps.grid_traces() - before <= 1   # one vmapped trace, cold
+    again = svc.submit(queries)
+    assert sweeps.grid_traces() - before <= 1   # zero new traces, warm
+    for (_, r1), (_, r2) in zip(out, again):
+        assert np.array_equal(np.asarray(r1), np.asarray(r2))
+    # batched result == the same cell run alone (per-query seeds)
+    for i, q in enumerate(queries):
+        _, solo = sweeps.run_grid([q.scenario], seeds=np.asarray([i]),
+                                  **RUN)
+        np.testing.assert_allclose(np.asarray(out[i][1]),
+                                   np.asarray(solo[0]), rtol=1e-5)
+    st = svc.stats()
+    assert st["scenario_cache"]["queries"] == 8
+    assert st["scenario_cache"]["padded_cells"] == 0
+
+
+def test_stream_pads_remainder_and_orders_results(tmp_path):
+    fs = _tiny_fs()
+    queries = [service.SweepQuery(
+        (fs.net._replace(drain=fs.net.drain * f), fs.params, fs.is_inter,
+         fs.lb), seed=7, **RUN) for f in (0.8, 0.9, 1.0)]
+    svc = service.SweepService(cache_dir=tmp_path, ladder=(2, 4))
+    got = list(svc.stream(queries))
+    assert [qid for qid, _, _ in got] == [0, 1, 2]
+    assert svc.stats()["scenario_cache"]["padded_cells"] == 1
+    # the padded replica's output is dropped, not returned
+    assert len(got) == 3
+
+
+def test_run_grid_streamed_matches_run_grid():
+    fs = _tiny_fs()
+    cells = [(fs.net._replace(drain=fs.net.drain * f), fs.params,
+              fs.is_inter, fs.lb) for f in (0.85, 0.95, 1.05)]
+    _, rates = sweeps.run_grid(cells, **RUN)
+    got = list(sweeps.run_grid_streamed(cells, chunk=2, **RUN))
+    assert [i for i, _, _ in got] == [0, 1, 2]
+    for i, _, r in got:
+        np.testing.assert_allclose(np.asarray(r), np.asarray(rates[i]),
+                                   rtol=1e-5)
+
+
+# ----------------------------------------------------------- service caches
+
+def test_service_memo_and_disk_hits(tmp_path):
+    kw = dict(n_intra=4, n_inter=4, multipath=True, n_wan=2)
+    svc = service.SweepService(cache_dir=tmp_path)
+    svc.scenario("dumbbell", **kw)
+    svc.scenario("dumbbell", **kw)
+    assert svc.stats()["scenario_cache"] == pytest.approx(
+        {**svc.stats()["scenario_cache"], "builds": 1, "memo_hits": 1,
+         "disk_hits": 0})
+    fresh = service.SweepService(cache_dir=tmp_path)      # "new process"
+    fresh.scenario("dumbbell", **kw)
+    assert fresh.stats()["scenario_cache"]["disk_hits"] == 1
+    assert fresh.stats()["scenario_cache"]["builds"] == 0
+
+
+def test_executable_cache_config():
+    old = shard.cache_stats()["maxsize"]
+    try:
+        shard.set_executable_cache_size(7)
+        st = shard.cache_stats()
+        assert st["maxsize"] == 7
+        assert st["currsize"] == 0          # rebinding resets the cache
+        assert set(st) >= {"hits", "misses", "evictions"}
+    finally:
+        shard.set_executable_cache_size(old)
+
+
+def test_exec_cache_size_env(monkeypatch):
+    monkeypatch.setenv("FLEETSIM_EXEC_CACHE", "9")
+    assert shard._exec_cache_size() == 9
+    monkeypatch.delenv("FLEETSIM_EXEC_CACHE")
+    assert shard._exec_cache_size() == shard._EXEC_CACHE_DEFAULT
