@@ -416,6 +416,113 @@ def _recovery_point(mode: str) -> dict:
     return rec
 
 
+# fault-injection grid for the trajectory point: fail time x fault kind
+# x EC policy — a hard down and a correlated loss burst, each against a
+# static-EC policy and the adaptive three-rung ladder.  Full mode runs
+# the 2x2x2 grid at 100k flows under one jitted vmap (the acceptance
+# scale); smoke shrinks the flow axis only, so the grid shape CI
+# exercises is the one the headline number ships with.
+_FAULT_GRID = {"fault_kinds": ("down", "burst"),
+               "ec_policies": (((8, 2),), ((8, 1), (8, 2), (8, 4)))}
+
+
+def _fault_point(mode: str) -> dict:
+    """Time one jitted fault_sweep grid and record its fault config
+    alongside the throughput — entries with different fault windows or
+    EC policies are flagged incomparable by compare.py."""
+    from repro.fleetsim.sweeps import fault_sweep
+    n_inter = 2_000 if mode == "smoke" else 100_000
+    n_warm = 2_000 if mode == "smoke" else 4_000
+    n_meas = 500 if mode == "smoke" else 1_000
+    # the dumbbell's epoch is its intra RTT (14 us); place the two fail
+    # times at 20% / 50% of the run so the late fault's recovery window
+    # is still inside the measured tail
+    span = (n_warm + n_meas) * 14_000.0
+    kw = dict(_FAULT_GRID, fail_times=(0.2 * span, 0.5 * span),
+              fault_rtts=5.0, n_inter=n_inter, n_warm=n_warm,
+              n_meas=n_meas)
+    t0 = time.time()
+    res = fault_sweep(**kw)
+    jax.block_until_ready(res["rates"])
+    cold = time.time() - t0
+    t0 = time.time()
+    res = fault_sweep(**kw)
+    jax.block_until_ready(res["rates"])
+    warm = time.time() - t0
+    cells = int(res["util"].size)
+    rec = _point(n_inter, cells * (n_warm + n_meas), variant="fault",
+                 path="grid", warm_s=warm, cold_s=cold)
+    rec["cells"] = cells
+    rec["fault"] = res["fault_config"]
+    rec["util_range"] = [round(float(np.min(res["util"])), 4),
+                         round(float(np.max(res["util"])), 4)]
+    rec["rung_mean_max"] = round(float(np.max(res["rung_mean"])), 3)
+    rec["loss_ratio_max"] = round(float(np.max(res["loss_ratio"])), 5)
+    for key in ("util", "jain", "loss_ratio", "rung_mean", "rates"):
+        if not np.isfinite(np.asarray(res[key])).all():
+            raise SystemExit(f"fault sweep produced non-finite {key}")
+    return rec
+
+
+def _fault_smoke() -> dict:
+    """CI fault-injection smoke: a small multipath dumbbell whose wan0
+    dies mid-run.  Asserts every carry leaf stays finite (win_delay_min
+    is +inf by design) and the aggregate re-converges after the failure,
+    then writes the evidence to results/fault_smoke.json."""
+    from repro.scenarios import (FaultSpec, LbSpec, dumbbell_scenario,
+                                 to_fleetsim)
+    spec = dumbbell_scenario(
+        0, 8, multipath=True, n_wan=4,
+        inter_lb=LbSpec(kind="unolb", n_subflows=4),
+        faults=(FaultSpec(link="wan0", kind="down", t_start=2 * fl.MS),),
+        seed=1)
+    fs = to_fleetsim(spec)
+    dt = float(fs.net.dt)
+    n = int(round(30 * fl.MS / dt))
+    t0 = time.time()
+    final, traj = simulate(fs.net, fs.params, n_epochs=n, scheme="uno",
+                           is_inter=fs.is_inter, lb=fs.lb,
+                           fault=fs.fault, seed=fs.seed, record=True)
+    jax.block_until_ready(final.cwnd)
+    wall = time.time() - t0
+    traj = np.asarray(traj)
+    agg = traj.sum(axis=1)
+    e_fail = int(np.asarray(fs.fault.t0)[0])
+    pre = float(agg[max(e_fail - 10, 0)])
+    post = float(agg[-200:].mean())
+
+    bad = []
+    if not np.isfinite(traj).all():
+        bad.append("goodput trajectory has non-finite entries")
+    for name, leaf in zip(final._fields, final):
+        if leaf is None or name == "win_delay_min":
+            continue
+        leaves = leaf if hasattr(leaf, "_fields") else (leaf,)
+        for i, a in enumerate(leaves):
+            if a is not None and not np.isfinite(
+                    np.asarray(a, np.float64)).all():
+                bad.append(f"carry field {name}[{i}] has non-finite "
+                           "entries after the link death")
+    if not post > 0.5 * pre:
+        bad.append(f"aggregate did not recover: pre-failure {pre:.2f} "
+                   f"-> tail mean {post:.2f} bytes/ns")
+
+    rec = {
+        "n_flows": int(traj.shape[1]), "n_epochs": n,
+        "fail_epoch": e_fail, "wall_s": round(wall, 2),
+        "agg_pre_fail": round(pre, 3), "agg_tail_mean": round(post, 3),
+        "recovered": not bad, "failures": bad,
+    }
+    print(json.dumps(rec, indent=1))
+    common.RESULTS.parent.mkdir(parents=True, exist_ok=True)
+    out_path = common.RESULTS.parent / "fault_smoke.json"
+    out_path.write_text(json.dumps(rec, indent=1))
+    print(f"fault smoke written to {out_path}")
+    if bad:
+        raise SystemExit("fault smoke failed:\n  " + "\n  ".join(bad))
+    return rec
+
+
 # smoke points the fast-path guard watches: the 10k dumbbell layout point
 # (the pre-existing hot path) and the k=4 fat-tree layout point (the
 # PathTable-compressed backend, ISSUE 7) — a broken table build would
@@ -622,6 +729,11 @@ def scaling_curve(mode: str = "full", *, backend: str = "auto",
     # changes are never misread as perf deltas
     points.append(_recovery_point(mode))
 
+    # fault-injection grid: fail time x fault kind x EC policy under one
+    # jitted vmap (100k flows in full mode) — the fault config rides
+    # along so changed fault knobs are never misread as perf deltas
+    points.append(_fault_point(mode))
+
     entry = {
         "meta": {
             "generated": datetime.datetime.now(
@@ -803,9 +915,15 @@ def _main() -> None:
                          "reference scatter on the smoke fat tree "
                          "(needs 2 forced host devices for the sharded "
                          "variant)")
+    ap.add_argument("--fault-smoke", action="store_true",
+                    help="CI gate: kill a WAN path mid-run on a small "
+                         "multipath dumbbell; assert finite recovery and "
+                         "write results/fault_smoke.json")
     args = ap.parse_args()
 
-    if args.check_equivalence:
+    if args.fault_smoke:
+        _fault_smoke()
+    elif args.check_equivalence:
         check_equivalence()
     elif args.profile:
         pathlib.Path(args.profile_dir).mkdir(parents=True, exist_ok=True)

@@ -30,7 +30,11 @@ the content-addressed cache ($UNO_SCENARIO_CACHE, or --cache-dir): the
 first process to request a spec builds and publishes its .npz bundle,
 every later one loads it.  Same-shape queries batch through the bucket
 ladder into shared vmapped executables; results stream as each batch
-completes, tagged with the originating line number ("id").  A final
+completes, tagged with the query index ("id") and originating input line
+("line").  A malformed or unservable line — broken JSON, missing/unknown
+"kind", kwargs the builder rejects — emits a per-query
+{"error": ..., "line": N} record and the stream keeps draining: one
+poisoned query must never take down the batch behind it.  A final
 "stats" line reports every cache layer (scenario bundles, grid traces,
 sharded-executable hits).
 
@@ -85,18 +89,26 @@ def serve(args) -> int:
     src = sys.stdin if args.queries == "-" else open(args.queries)
     out = sys.stdout if args.out is None else open(args.out, "a")
     defaults = {"n_warm": args.n_warm, "n_meas": args.n_meas}
-    queries = []
+    queries, qlines = [], []
     with src:
-        for line in src:
+        for lineno, line in enumerate(src, 1):
             line = line.strip()
             if not line or line.startswith("#"):
                 continue
-            kind, kwargs, cfg = _parse_query(line, defaults)
-            fs = svc.scenario(kind, **kwargs)
-            queries.append(service.SweepQuery(fs, **cfg))
+            try:
+                kind, kwargs, cfg = _parse_query(line, defaults)
+                fs = svc.scenario(kind, **kwargs)
+                queries.append(service.SweepQuery(fs, **cfg))
+                qlines.append(lineno)
+            except Exception as e:
+                # per-line isolation: a poisoned query emits an error
+                # record and the rest of the stream keeps draining
+                print(json.dumps({"error": f"{type(e).__name__}: {e}",
+                                  "line": lineno}), file=out, flush=True)
     t0 = time.time()
     for qid, _final, rates in svc.stream(queries):
-        rec = {"id": qid, "wall_s": round(time.time() - t0, 3),
+        rec = {"id": qid, "line": qlines[qid],
+               "wall_s": round(time.time() - t0, 3),
                **service.summarize_rates(rates)}
         print(json.dumps(rec), file=out, flush=True)
     print(json.dumps({"stats": svc.stats()}), file=out, flush=True)

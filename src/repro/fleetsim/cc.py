@@ -71,6 +71,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.unocc import gentle_md_scale, md_ecn_gain, md_factor
+from repro.fleetsim import faults as F
 from repro.fleetsim import links as L
 from repro.fleetsim import reliability as R
 from repro.fleetsim.state import (ChurnParams, FleetParams, FleetState,
@@ -79,8 +80,9 @@ from repro.fleetsim.state import (ChurnParams, FleetParams, FleetState,
 SCHEMES = ("uno", "gemini", "dctcp")
 _FRAC_EPS = 1e-6
 # state NOT selected per flow by the churn merge: shared link occupancies,
-# the PRNG key, and the active mask itself (set explicitly each epoch)
-_NON_FLOW_FIELDS = ("q_phys", "q_phantom", "key", "active")
+# the PRNG key, the replicated fault carry, and the active mask itself
+# (set explicitly each epoch)
+_NON_FLOW_FIELDS = ("q_phys", "q_phantom", "key", "active", "fault")
 
 
 def _merge_flow_state(cond: jnp.ndarray, a: FleetState,
@@ -130,7 +132,8 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
               is_inter: Optional[jnp.ndarray] = None,
               lb: Optional[LbParams] = None,
               churn: Optional[ChurnParams] = None,
-              rel: Optional[R.RelParams] = None, *,
+              rel: Optional[R.RelParams] = None,
+              fault: Optional[F.FaultSchedule] = None, *,
               axis_name: Optional[str] = None, backend: str = "auto",
               halo: Optional[int] = None, block: Optional[int] = None,
               churn_map: Optional[jnp.ndarray] = None,
@@ -140,7 +143,12 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
     `lb=None` freezes the split at its initial value (static spraying) and
     reports raw goodput; `churn=None` keeps every flow backlogged;
     `rel=None` skips the loss/recovery machine entirely (no loss arrays are
-    even computed — the trace is identical to the pre-reliability step).
+    even computed — the trace is identical to the pre-reliability step);
+    `fault=None` likewise skips fault injection.  With a `fault` schedule
+    (repro.fleetsim.faults), each epoch modulates link capacity (downs /
+    brownouts / flaps) and loss probability (Gilbert-Elliott bursts) and
+    drains the epoch's send split from dead paths — the STORED split is
+    untouched when `lb` is off, so repairs resume pre-fault weights.
     With `rel` set, the wire rate is cwnd-rate + retransmit rate, the loss
     fraction from links.drop_prob drives reliability.rel_epoch, a NACK
     batch applies `rel.loss_md`, and goodput uses the dynamic EC split —
@@ -180,6 +188,18 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
         p = params
         act = state.active
         actf = act.astype(jnp.float32)
+        # ---- fault injection: this epoch's effective net ----------------
+        # cap/drain scaled by scheduled downs/brownouts/flaps, GE burst
+        # loss composed into p_loss; the degraded SEND split shifts rate
+        # off dead paths for this epoch only (state.split is persistent)
+        net_e, fault_new = net, state.fault
+        split = state.split
+        if fault is not None:
+            cap_scale, p_extra, fault_new = F.fault_modulation(
+                fault, state.fault, net.n_links)
+            net_e = F.apply_modulation(net, cap_scale, p_extra)
+            if cap_scale is not None and not single:
+                split = F.degrade_split(net, split, cap_scale, pmask)
         # ---- network: loads, queues, marks, delays ----------------------
         rate = actf * state.cwnd / p.rtt
         if rel is None:
@@ -187,8 +207,7 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
         else:   # retransmit backlog drains onto the wire as real traffic
             rtx = R.rtx_rate(rel, state.rel, rate, p.rtt)
             wire = rate + rtx
-        split = state.split
-        le = L.link_epoch(net, wire, split, state.q_phys, state.q_phantom,
+        le = L.link_epoch(net_e, wire, split, state.q_phys, state.q_phantom,
                           axis_name=axis_name, backend=backend, halo=halo,
                           block=block, with_loss=rel is not None)
         q_phys, q_phantom = le.q_phys, le.q_phantom
@@ -366,7 +385,11 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
         cwnd = jnp.clip(cwnd, p.min_cwnd, p.max_cwnd)
 
         # ---- lb axis: adaptive subflow weights --------------------------
-        split_new, bad_count = split, state.bad_count
+        # without lb the STORED split stays state.split (a fault-degraded
+        # send split must not persist — repair resumes pre-fault weights);
+        # with lb the weight update adapts FROM the degraded split, which
+        # is what the marks it just produced correspond to
+        split_new, bad_count = state.split, state.bad_count
         if lb is not None:
             split_new, bad_count = update_split(split, path_frac, bad_count,
                                                 pmask, lb)
@@ -375,9 +398,12 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
         if rel is not None:
             # dynamic EC split: delivered payload (parity fraction of the
             # CC stream is overhead, retransmits are pure data) + payload
-            # decoded locally from parity.  rel.ec_eff carries the static
-            # efficiency for non-reliability flows, superseding lb.ec_eff.
-            goodput = goodput * rel.ec_eff + rtx * sc * (1.0 - rel.ec_eff) \
+            # decoded locally from parity.  The efficiency is evaluated at
+            # the flow's CURRENT adaptive-EC rung (static rel.ec_eff when
+            # no ladder is configured; it also carries the static
+            # efficiency for non-reliability flows, superseding lb.ec_eff).
+            eff = R.effective_eff(rel, state.rel)
+            goodput = goodput * eff + rtx * sc * (1.0 - eff) \
                 + recovered
 
         new = FleetState(
@@ -391,7 +417,7 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
             qa_deficits=qa_deficits, qa_countdown=qa_countdown, skip=skip,
             fi_clean=fi_clean, fi_active=fi_active, fi_ceiling=fi_ceiling,
             split=split_new, path_frac=path_frac, bad_count=bad_count,
-            active=act, key=state.key, rel=rel_new)
+            active=act, key=state.key, rel=rel_new, fault=fault_new)
 
         # ---- churn: freeze OFF flows, restart fresh on OFF->ON ----------
         if churn is not None:
@@ -415,18 +441,19 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
 
 
 def _default_state(net: L.FluidNet, params: FleetParams, seed: int = 0,
-                   rel=None):
+                   rel=None, fault=None):
     return init_state(params, net.n_links, n_paths=net.n_paths,
-                      split0=L.uniform_split(net), seed=seed, rel=rel)
+                      split0=L.uniform_split(net), seed=seed, rel=rel,
+                      fault=fault)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("scheme", "n_epochs", "record",
                                     "backend", "block"))
 def _simulate(net, params, state0, is_inter, lb, churn, scheme, n_epochs,
-              record, backend="auto", block=None, rel=None):
+              record, backend="auto", block=None, rel=None, fault=None):
     step = make_step(net, params, scheme, is_inter, lb=lb, churn=churn,
-                     rel=rel, backend=backend, block=block)
+                     rel=rel, fault=fault, backend=backend, block=block)
     if record:
         return jax.lax.scan(step, state0, None, length=n_epochs)
     final, _ = jax.lax.scan(lambda s, x: (step(s, x)[0], None),
@@ -440,23 +467,26 @@ def simulate(net: L.FluidNet, params: FleetParams, *, n_epochs: int,
              lb: Optional[LbParams] = None,
              churn: Optional[ChurnParams] = None,
              rel: Optional[R.RelParams] = None,
+             fault: Optional[F.FaultSchedule] = None,
              seed: int = 0, record: bool = False, backend: str = "auto",
              block: Optional[int] = None):
     """Run `n_epochs` epochs; returns (final_state, goodput_trajectory).
 
     `goodput_trajectory` is (n_epochs, n_flows) bytes/ns when `record`,
     else None.  Jit-compiled; recompiles only on new (scheme, n_epochs,
-    record, backend, block, shapes, lb/churn/rel presence).  `seed` fixes
-    the churn PRNG; `backend` picks the link-aggregation path
+    record, backend, block, shapes, lb/churn/rel/fault presence).  `seed`
+    fixes the churn PRNG; `backend` picks the link-aggregation path
     (links.LOAD_BACKENDS) and `block` the Pallas flow-block size; `rel`
-    turns on the loss/recovery machine (reliability.make_rel_params).
+    turns on the loss/recovery machine (reliability.make_rel_params);
+    `fault` a compiled fault schedule (faults.make_schedule or the
+    scenario compiler).
     """
     if state0 is None:
-        state0 = _default_state(net, params, seed, rel)
+        state0 = _default_state(net, params, seed, rel, fault)
     if is_inter is None:
         is_inter = jnp.zeros_like(params.bdp, bool)
     return _simulate(net, params, state0, is_inter, lb, churn, scheme,
-                     n_epochs, record, backend, block, rel)
+                     n_epochs, record, backend, block, rel, fault)
 
 
 @functools.partial(jax.jit,
@@ -466,7 +496,7 @@ def simulate(net: L.FluidNet, params: FleetParams, *, n_epochs: int,
 def steady_state_core(net, params, state0, is_inter, scheme, n_warm, n_meas,
                       lb=None, churn=None, backend="auto", axis_name=None,
                       halo=None, block=None, churn_map=None, churn_n=None,
-                      unroll=1, rel=None):
+                      unroll=1, rel=None, fault=None):
     """Warm up, then return (final_state, mean goodput over n_meas epochs).
 
     The measurement pass accumulates a running sum in the carry instead of
@@ -480,9 +510,9 @@ def steady_state_core(net, params, state0, is_inter, scheme, n_warm, n_meas,
     per-epoch dispatch — numerics are unchanged (same per-epoch op order,
     just loop restructuring)."""
     step = make_step(net, params, scheme, is_inter, lb=lb, churn=churn,
-                     rel=rel, backend=backend, axis_name=axis_name,
-                     halo=halo, block=block, churn_map=churn_map,
-                     churn_n=churn_n)
+                     rel=rel, fault=fault, backend=backend,
+                     axis_name=axis_name, halo=halo, block=block,
+                     churn_map=churn_map, churn_n=churn_n)
     state, _ = jax.lax.scan(lambda s, x: (step(s, x)[0], None),
                             state0, None, length=n_warm, unroll=unroll)
 
@@ -503,12 +533,13 @@ def steady_state(net: L.FluidNet, params: FleetParams, *, n_warm: int,
                  is_inter: Optional[jnp.ndarray] = None,
                  lb: Optional[LbParams] = None,
                  churn: Optional[ChurnParams] = None,
-                 rel: Optional[R.RelParams] = None, seed: int = 0,
+                 rel: Optional[R.RelParams] = None,
+                 fault: Optional[F.FaultSchedule] = None, seed: int = 0,
                  backend: str = "auto", block: Optional[int] = None):
     if state0 is None:
-        state0 = _default_state(net, params, seed, rel)
+        state0 = _default_state(net, params, seed, rel, fault)
     if is_inter is None:
         is_inter = jnp.zeros_like(params.bdp, bool)
     return steady_state_core(net, params, state0, is_inter, scheme,
                              n_warm, n_meas, lb, churn, backend,
-                             block=block, rel=rel)
+                             block=block, rel=rel, fault=fault)

@@ -760,7 +760,8 @@ def _pt_gathers(net: FluidNet, load, p_link, q_phys):
     s = jnp.minimum(1.0, net.cap / jnp.maximum(load, _EPS))
     s = jnp.concatenate([s, jnp.ones(1, s.dtype)])
     clean = jnp.concatenate([1.0 - p_link, jnp.ones(1, p_link.dtype)])
-    d = jnp.concatenate([q_phys / net.cap, jnp.zeros(1, q_phys.dtype)])
+    d = jnp.concatenate([q_phys / jnp.maximum(net.cap, _EPS),
+                         jnp.zeros(1, q_phys.dtype)])
     seg_scale = jnp.min(s[pt.seg_idx], axis=1)       # (U,)
     seg_clean = jnp.prod(clean[pt.seg_idx], axis=1)
     seg_delay = jnp.sum(d[pt.seg_idx], axis=1)
@@ -801,8 +802,13 @@ def path_mark_frac(net: FluidNet, p_link: jnp.ndarray,
 
 
 def subflow_delay(net: FluidNet, q_phys: jnp.ndarray) -> jnp.ndarray:
-    """(n_flows, n_paths) relative queueing delay: sum of q/cap (ns)."""
-    d = jnp.concatenate([q_phys / net.cap, jnp.zeros(1, q_phys.dtype)])
+    """(n_flows, n_paths) relative queueing delay: sum of q/cap (ns).
+
+    The capacity floor keeps a faulted (cap == 0) link's delay finite —
+    huge, which correctly saturates the delay-gated reactions, but never
+    NaN/Inf in the carry (repro.fleetsim.faults)."""
+    d = jnp.concatenate([q_phys / jnp.maximum(net.cap, _EPS),
+                         jnp.zeros(1, q_phys.dtype)])
     return jnp.sum(d[_pad_idx(net)], axis=2)
 
 
@@ -862,14 +868,14 @@ def link_epoch(net: FluidNet, rates: jnp.ndarray, split: jnp.ndarray,
         sub_scale, sub_frac, sub_delay = fleet_pallas.link_gathers(
             _pad_idx(net),
             jnp.minimum(1.0, net.cap / jnp.maximum(load, _EPS)),
-            1.0 - p_link, q_phys / net.cap, block=block)
+            1.0 - p_link, q_phys / jnp.maximum(net.cap, _EPS), block=block)
     elif rb == "pt_pallas":
         from repro.kernels import fleet_pallas
         pt = net.layout.path_table
         sub_scale, sub_frac, sub_delay = fleet_pallas.path_table_gathers(
             pt.pre_id, pt.suf_id, pt.seg_idx,
             jnp.minimum(1.0, net.cap / jnp.maximum(load, _EPS)),
-            1.0 - p_link, q_phys / net.cap, block=block)
+            1.0 - p_link, q_phys / jnp.maximum(net.cap, _EPS), block=block)
     elif rb == "pt":
         sub_scale, sub_frac, sub_delay = _pt_gathers(net, load, p_link,
                                                      q_phys)

@@ -64,19 +64,26 @@ import numpy as np
 
 from repro.fleetsim import links as fl
 from repro.fleetsim import shard, sweeps
+from repro.fleetsim.faults import FaultSchedule
 from repro.fleetsim.reliability import RelParams
 from repro.fleetsim.state import ChurnParams, FleetParams, LbParams
 
 # bump when the bundle format OR the scenario compiler's output changes:
 # the version folds into every content address, so old bundles are
-# orphaned (never loaded) rather than trusted
-CACHE_VERSION = 1
+# orphaned (never loaded) rather than trusted.
+# v2: Scenario grew the fault axis (FaultSchedule family in bundles,
+# `faults` in every spec fingerprint) and RelParams grew the optional
+# ladder fields.
+CACHE_VERSION = 2
 
 _META_KEY = "__meta__"
 
 # (prefix, NamedTuple type) families the bundle [de]serializes generically
 _FAMILIES = (("par_", FleetParams), ("lb_", LbParams),
-             ("churn_", ChurnParams), ("rel_", RelParams))
+             ("churn_", ChurnParams), ("rel_", RelParams),
+             ("fault_", FaultSchedule))
+
+_EVICTIONS = [0]        # process-lifetime prune_cache eviction counter
 
 
 def default_cache_dir() -> pathlib.Path:
@@ -85,6 +92,63 @@ def default_cache_dir() -> pathlib.Path:
     if env:
         return pathlib.Path(env)
     return pathlib.Path.home() / ".cache" / "uno_fleetsim" / "scenarios"
+
+
+def cache_size_cap() -> int:
+    """$FLEETSIM_CACHE_BYTES as an int cap; 0 / unset / junk = unlimited."""
+    try:
+        return max(int(os.environ.get("FLEETSIM_CACHE_BYTES", "0")), 0)
+    except ValueError:
+        return 0
+
+
+def prune_cache(cache_dir=None, max_bytes: Optional[int] = None) -> int:
+    """Evict least-recently-used bundles until the cache fits `max_bytes`.
+
+    Recency is file mtime — `load_bundle` touches a bundle on every
+    successful read, so mtime order IS access order.  `max_bytes` defaults
+    to `$FLEETSIM_CACHE_BYTES` (0 = unlimited: no-op).  Runs after every
+    `save_bundle`, so any writer keeps the shared cache bounded; returns
+    the number of bundles evicted (also accumulated into `cache_stats`).
+    """
+    if max_bytes is None:
+        max_bytes = cache_size_cap()
+    if max_bytes <= 0:
+        return 0
+    root = pathlib.Path(cache_dir or default_cache_dir())
+    sized = []
+    try:
+        for p in root.glob("*.npz"):
+            with contextlib.suppress(OSError):
+                st = p.stat()
+                sized.append((st.st_mtime, st.st_size, p))
+    except OSError:
+        return 0
+    sized.sort()                       # oldest access first
+    total = sum(s for _, s, _ in sized)
+    evicted = 0
+    for _, size, p in sized:
+        if total <= max_bytes:
+            break
+        with contextlib.suppress(OSError):
+            p.unlink()
+            total -= size
+            evicted += 1
+    _EVICTIONS[0] += evicted
+    return evicted
+
+
+def cache_stats(cache_dir=None) -> dict:
+    """On-disk scenario-cache occupancy + this process's eviction count."""
+    root = pathlib.Path(cache_dir or default_cache_dir())
+    n = total = 0
+    with contextlib.suppress(OSError):
+        for p in root.glob("*.npz"):
+            with contextlib.suppress(OSError):
+                total += p.stat().st_size
+                n += 1
+    return {"bundles": n, "bytes": total,
+            "max_bytes": cache_size_cap(), "evictions": _EVICTIONS[0]}
 
 
 def bundle_path(key: str, cache_dir=None) -> pathlib.Path:
@@ -128,9 +192,10 @@ def save_bundle(path, fs, *, key: str = "") -> pathlib.Path:
     Atomic: the arrays land in a same-directory tempfile that is renamed
     over `path`, so concurrent writers (two benchmark runs racing on one
     host) and readers never observe a partial bundle.  None-valued
-    optional members (lb/churn/rel/p_loss/is_inter/link_tier/layout) are
-    simply absent — presence is part of the format, and the loader
-    reconstructs the same Nones.
+    optional members (lb/churn/rel/fault/p_loss/is_inter/link_tier/
+    layout) are simply absent — presence is part of the format, and the
+    loader reconstructs the same Nones; the rule applies per FIELD inside
+    a family too (a ladder-less RelParams stores no ladder arrays).
     """
     path = pathlib.Path(path)
     net = fs.net
@@ -144,7 +209,8 @@ def save_bundle(path, fs, *, key: str = "") -> pathlib.Path:
         val = getattr(fs, "params" if field == "par" else field, None)
         if val is not None:
             arrays.update({prefix + f: np.asarray(getattr(val, f))
-                           for f in cls._fields})
+                           for f in cls._fields
+                           if getattr(val, f) is not None})
     if fs.is_inter is not None:
         arrays["is_inter"] = np.asarray(fs.is_inter)
     if fs.link_tier is not None:
@@ -161,7 +227,33 @@ def save_bundle(path, fs, *, key: str = "") -> pathlib.Path:
         with contextlib.suppress(OSError):
             os.unlink(tmp)
         raise
+    prune_cache(path.parent)
     return path
+
+
+def _load_family(z, prefix: str, cls):
+    """One family out of an open npz, or None when the family is absent.
+
+    A field missing from the bundle loads as None only when the class
+    declares None as its default (the optional trailing fields); a
+    missing REQUIRED field raises KeyError, which `load_bundle` treats
+    as an untrustworthy bundle.
+    """
+    if not any(k.startswith(prefix) for k in z.files):
+        return None
+    vals = {}
+    for f in cls._fields:
+        k = prefix + f
+        if k in z:
+            vals[f] = jnp.asarray(z[k])
+        elif cls._field_defaults.get(f, _MISSING) is None:
+            vals[f] = None
+        else:
+            raise KeyError(k)
+    return cls(**vals)
+
+
+_MISSING = object()
 
 
 def load_bundle(path):
@@ -181,19 +273,22 @@ def load_bundle(path):
                       if "net_" + f in z}
             net = fl.FluidNet(**net_kw,
                               layout=fl.layout_from_arrays(z))
-            fams = {}
-            for prefix, cls in _FAMILIES:
-                probe = prefix + cls._fields[0]
-                fams[prefix] = None if probe not in z else cls(
-                    **{f: jnp.asarray(z[prefix + f]) for f in cls._fields})
-            return FleetScenario(
+            fams = {prefix: _load_family(z, prefix, cls)
+                    for prefix, cls in _FAMILIES}
+            fs = FleetScenario(
                 net=net, params=fams["par_"], lb=fams["lb_"],
                 churn=fams["churn_"], rel=fams["rel_"],
+                fault=fams["fault_"],
                 is_inter=(jnp.asarray(z["is_inter"])
                           if "is_inter" in z else None),
                 link_tier=(np.asarray(z["link_tier"])
                            if "link_tier" in z else None),
                 seed=int(meta.get("seed", 0)))
+        # a read is a cache hit: refresh mtime so prune_cache's
+        # LRU-by-mtime order tracks ACCESS recency, not write recency
+        with contextlib.suppress(OSError):
+            os.utime(path)
+        return fs
     except (OSError, ValueError, KeyError, TypeError, EOFError,
             zipfile.BadZipFile, json.JSONDecodeError):
         return None
@@ -369,6 +464,7 @@ class SweepService:
     def stats(self) -> dict:
         """Effectiveness of every cache layer, for reports and CI guards."""
         return {"scenario_cache": dict(self._stats),
+                "bundle_cache": cache_stats(self.cache_dir),
                 "grid_traces": sweeps.grid_traces(),
                 "executable_cache": shard.cache_stats(),
                 "ladder": self.ladder,

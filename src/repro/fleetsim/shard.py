@@ -73,7 +73,8 @@ from jax.sharding import PartitionSpec as P
 
 from repro.fleetsim import links as L
 from repro.fleetsim.cc import steady_state_core
-from repro.fleetsim.reliability import RelParams, RelState
+from repro.fleetsim.faults import FaultCarry, FaultSchedule
+from repro.fleetsim.reliability import _LADDER_SHARED, RelParams, RelState
 from repro.fleetsim.state import (ChurnParams, FleetParams, FleetState,
                                   LbParams, init_state)
 from repro.sharding import shard_map
@@ -122,6 +123,7 @@ class ShardedFleet(NamedTuple):
     churn_map: Optional[jnp.ndarray]  # (S, rows) original flow id per row
     own: jnp.ndarray              # (S, n_links) link-ownership masks
     rel: Optional[RelParams] = None   # flow axis permuted + padded
+    fault: Optional[FaultSchedule] = None  # link ids relabeled via old2new
 
 
 def _take_links(net: L.FluidNet, new2old: jnp.ndarray) -> L.FluidNet:
@@ -139,6 +141,7 @@ def shard_scenario(net: L.FluidNet, params: FleetParams, *,
                    lb: Optional[LbParams] = None,
                    churn: Optional[ChurnParams] = None,
                    rel: Optional[RelParams] = None,
+                   fault: Optional[FaultSchedule] = None,
                    mesh=None, locality: bool = True,
                    plan=None, link_tier=None,
                    path_table="auto") -> ShardedFleet:
@@ -220,8 +223,21 @@ def shard_scenario(net: L.FluidNet, params: FleetParams, *,
     lb_p = None if lb is None else jax.tree.map(lambda a: a[gc], lb)
     rel_p = None
     if rel is not None:
-        rel_p = jax.tree.map(lambda a: a[gc], rel)._replace(
-            enabled=rel.enabled[gc] & realj)
+        # ladder arrays are RUNG-indexed (shared across flows): they ride
+        # along unpermuted — gathering them by flow id would corrupt them
+        rel_p = RelParams(**{
+            f: (v if f in _LADDER_SHARED or v is None else v[gc])
+            for f, v in zip(RelParams._fields, rel)})
+        rel_p = rel_p._replace(enabled=rel.enabled[gc] & realj)
+        if rel_p.adapt_on is not None:
+            rel_p = rel_p._replace(adapt_on=rel.adapt_on[gc] & realj)
+    fault_p = None
+    if fault is not None:
+        # schedule link ids live in the original link id space — relabel
+        # them through the plan exactly like the route tensor
+        o2n = jnp.asarray(plan.old2new)
+        fault_p = fault._replace(link=o2n[fault.link],
+                                 ge_link=o2n[fault.ge_link])
     churn_p = cmap = None
     if churn is not None:
         churn_p = ChurnParams(churned=churn.churned[gc] & realj,
@@ -239,7 +255,7 @@ def shard_scenario(net: L.FluidNet, params: FleetParams, *,
     return ShardedFleet(plan=plan, mesh=mesh, net=net_p, layouts=layouts,
                         params=params_p, is_inter=ii_p, lb=lb_p,
                         churn=churn_p, churn_map=cmap,
-                        own=jnp.asarray(own), rel=rel_p)
+                        own=jnp.asarray(own), rel=rel_p, fault=fault_p)
 
 
 def _net_spec(has_ploss: bool = False) -> L.FluidNet:
@@ -249,13 +265,17 @@ def _net_spec(has_ploss: bool = False) -> L.FluidNet:
                       layout=None, p_loss=P() if has_ploss else None)
 
 
-def _state_spec(has_rel: bool = False) -> FleetState:
+def _state_spec(has_rel: bool = False, has_fault: bool = False) -> FleetState:
     """PartitionSpec tree for FleetState: link state + PRNG key replicated.
-    The nested RelState (when present) is per-flow, so fully sharded."""
+    The nested RelState (when present) is per-flow, so fully sharded; the
+    FaultCarry (when present) is fully replicated — every shard advances
+    an identical copy (same epoch counter, same chain PRNG)."""
     specs = {f: P() if f in _REPLICATED else P(AXIS)
-             for f in FleetState._fields if f != "rel"}
+             for f in FleetState._fields if f not in ("rel", "fault")}
     specs["rel"] = RelState(**{f: P(AXIS) for f in RelState._fields}) \
         if has_rel else None
+    specs["fault"] = FaultCarry(epoch=P(), ge_bad=P(), key=P()) \
+        if has_fault else None
     return FleetState(**specs)
 
 
@@ -272,7 +292,7 @@ def _exec_cache_size() -> int:
 
 def _compiled_impl(mesh, scheme, n_warm, n_meas, backend, halo, unroll,
                    churn_n, has_lb, has_churn, has_rel, has_ploss=False,
-                   has_pt=False):
+                   has_pt=False, has_fault=False, has_ladder=False):
     """Build the jitted shard_map'd steady-state executable (cached via
     `_compiled`).
 
@@ -289,8 +309,16 @@ def _compiled_impl(mesh, scheme, n_warm, n_meas, backend, halo, unroll,
     param_spec = FleetParams(**{f: P(AXIS) for f in FleetParams._fields})
     lb_spec = None if not has_lb else LbParams(
         **{f: P(AXIS) for f in LbParams._fields})
-    rel_spec = None if not has_rel else RelParams(
-        **{f: P(AXIS) for f in RelParams._fields})
+    rel_spec = None
+    if has_rel:
+        # per-flow fields shard; the rung-indexed ladder tables replicate
+        rd = {f: P(AXIS) for f in RelParams._fields}
+        for f in _LADDER_SHARED:
+            rd[f] = P() if has_ladder else None
+        rd["adapt_on"] = P(AXIS) if has_ladder else None
+        rel_spec = RelParams(**rd)
+    fault_spec = None if not has_fault else FaultSchedule(
+        **{f: P() for f in FaultSchedule._fields})
     churn_spec = cmap_spec = None
     if has_churn:
         churn_spec = ChurnParams(
@@ -298,14 +326,14 @@ def _compiled_impl(mesh, scheme, n_warm, n_meas, backend, halo, unroll,
         cmap_spec = P(AXIS)
 
     def local(net_l, lay_l, params_l, state0_l, ii_l, lb_l, churn_l,
-              cmap_l, own_l, rel_l):
+              cmap_l, own_l, rel_l, fault_l):
         net_l = net_l._replace(layout=jax.tree.map(lambda a: a[0], lay_l))
         final, rates = steady_state_core(
             net_l, params_l, state0_l, ii_l, scheme=scheme, n_warm=n_warm,
             n_meas=n_meas, lb=lb_l, churn=churn_l, backend=backend,
             axis_name=AXIS, halo=halo,
             churn_map=None if cmap_l is None else cmap_l[0],
-            churn_n=churn_n, unroll=unroll, rel=rel_l)
+            churn_n=churn_n, unroll=unroll, rel=rel_l, fault=fault_l)
         # reassemble globally-correct link state from each link's owner
         own = own_l[0]
         return final._replace(
@@ -316,9 +344,10 @@ def _compiled_impl(mesh, scheme, n_warm, n_meas, backend, halo, unroll,
 
     f = shard_map(local, mesh,
                   in_specs=(_net_spec(has_ploss), lay_spec, param_spec,
-                            _state_spec(has_rel), P(AXIS), lb_spec,
-                            churn_spec, cmap_spec, P(AXIS), rel_spec),
-                  out_specs=(_state_spec(has_rel), P(AXIS)),
+                            _state_spec(has_rel, has_fault), P(AXIS),
+                            lb_spec, churn_spec, cmap_spec, P(AXIS),
+                            rel_spec, fault_spec),
+                  out_specs=(_state_spec(has_rel, has_fault), P(AXIS)),
                   check_vma=False)
     return jax.jit(f, donate_argnums=(3,))
 
@@ -361,6 +390,8 @@ def _permute_state(state: FleetState, flow_idx: jnp.ndarray,
         v = getattr(state, f)
         if f == "key" or v is None:
             out[f] = v
+        elif f == "fault":   # replicated carry: nothing flow/link-indexed
+            out[f] = v
         elif f in _REPLICATED:
             out[f] = v[link_idx]
         elif hasattr(v, "_fields"):  # nested per-flow pytree (RelState)
@@ -395,13 +426,16 @@ def steady_state_prepared(sf: ShardedFleet, *, n_warm: int, n_meas: int,
     if state0 is None:
         state0 = init_state(sf.params, net.n_links, n_paths=net.n_paths,
                             split0=L.uniform_split(net), seed=seed,
-                            rel=sf.rel)
+                            rel=sf.rel, fault=sf.fault)
     else:
         if state0.cwnd.shape[0] != plan.n_real:
             raise ValueError("state0 flow count does not match the plan")
         if (state0.rel is None) != (sf.rel is None):
             raise ValueError("state0 rel state does not match the "
                              "scenario's RelParams presence")
+        if (state0.fault is None) != (sf.fault is None):
+            raise ValueError("state0 fault carry does not match the "
+                             "scenario's FaultSchedule presence")
         gflat = plan.flat_gather
         real = gflat < plan.n_real
         gc = jnp.asarray(np.where(real, gflat, 0))
@@ -416,10 +450,12 @@ def steady_state_prepared(sf: ShardedFleet, *, n_warm: int, n_meas: int,
                     None if sf.churn is None else plan.n_real,
                     sf.lb is not None, sf.churn is not None,
                     sf.rel is not None, net.p_loss is not None,
-                    sf.layouts.path_table is not None)
+                    sf.layouts.path_table is not None,
+                    sf.fault is not None,
+                    sf.rel is not None and sf.rel.ladder_k is not None)
     final, rates = run(net, sf.layouts, sf.params, _unalias(state0),
                        sf.is_inter, sf.lb, sf.churn, sf.churn_map, sf.own,
-                       sf.rel)
+                       sf.rel, sf.fault)
 
     inv = jnp.asarray(plan.inverse_flow)
     return (_permute_state(final, inv, jnp.asarray(plan.old2new)),
@@ -432,6 +468,7 @@ def steady_state_sharded(net: L.FluidNet, params: FleetParams, *,
                          lb: Optional[LbParams] = None,
                          churn: Optional[ChurnParams] = None,
                          rel: Optional[RelParams] = None,
+                         fault: Optional[FaultSchedule] = None,
                          state0: Optional[FleetState] = None,
                          mesh=None, backend: str = "auto",
                          locality: bool = True, plan=None,
@@ -445,8 +482,9 @@ def steady_state_sharded(net: L.FluidNet, params: FleetParams, *,
     permutation, per-shard layouts — is the only per-call host work; the
     executable itself is cached either way)."""
     sf = shard_scenario(net, params, is_inter=is_inter, lb=lb, churn=churn,
-                        rel=rel, mesh=mesh, locality=locality, plan=plan,
-                        link_tier=link_tier, path_table=path_table)
+                        rel=rel, fault=fault, mesh=mesh, locality=locality,
+                        plan=plan, link_tier=link_tier,
+                        path_table=path_table)
     return steady_state_prepared(sf, n_warm=n_warm, n_meas=n_meas,
                                  scheme=scheme, backend=backend,
                                  unroll=unroll, state0=state0, seed=seed)

@@ -107,6 +107,9 @@ class FleetState(NamedTuple):
     active: jnp.ndarray         # (n_flows,) bool churn mask (True = sending)
     key: jnp.ndarray            # PRNG key driving the churn transitions
     rel: Optional["RelState"] = None  # reliability machine carry (or None)
+    fault: Optional["FaultCarry"] = None  # fault-injection carry (or None):
+    # epoch counter + Gilbert-Elliott chain states + chain PRNG
+    # (repro.fleetsim.faults) — replicated, never flow-indexed
 
 
 def make_params(bdp, rtt, intra_bdp: float, intra_rtt: float, *,
@@ -180,7 +183,7 @@ def make_churn_params(n_flows: int, *, mean_on: float, mean_off: float,
 def init_state(params: FleetParams, n_links: int,
                cwnd0: Optional[jnp.ndarray] = None, *,
                n_paths: int = 1, split0: Optional[jnp.ndarray] = None,
-               seed: int = 0, rel=None) -> FleetState:
+               seed: int = 0, rel=None, fault=None) -> FleetState:
     """Line-rate start (cwnd = BDP), empty queues — matches UnoCC.__init__.
 
     `split0` is the initial (n_flows, n_paths) subflow weight matrix; it is
@@ -218,9 +221,15 @@ def init_state(params: FleetParams, n_links: int,
         bad_count=jnp.zeros((n, split0.shape[1]), jnp.int32),
         active=jnp.ones(n, bool),
         key=jax.random.PRNGKey(seed),
-        rel=None if rel is None else _init_rel(rel))
+        rel=None if rel is None else _init_rel(rel),
+        fault=None if fault is None else _init_fault(fault, seed))
 
 
 def _init_rel(rel):
     from repro.fleetsim.reliability import init_rel_state
     return init_rel_state(rel)
+
+
+def _init_fault(fault, seed):
+    from repro.fleetsim.faults import init_fault_carry
+    return init_fault_carry(fault, seed)

@@ -91,22 +91,25 @@ def jain(rates: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
 
 
 def _norm_scenario(sc):
-    """Scenario -> (net, params, is_inter, lb, churn, rel) with None padding.
+    """Scenario -> (net, params, is_inter, lb, churn, rel, fault).
 
     Accepts a FleetScenario instance (any NamedTuple with these field
-    names) or a bare (net, params, is_inter[, lb[, churn[, rel]]]) tuple.
+    names) or a bare (net, params, is_inter[, lb[, churn[, rel[,
+    fault]]]]) tuple; absent trailing axes pad with None.
     """
     if hasattr(sc, "net") and hasattr(sc, "params"):
         return (sc.net, sc.params, sc.is_inter, getattr(sc, "lb", None),
-                getattr(sc, "churn", None), getattr(sc, "rel", None))
+                getattr(sc, "churn", None), getattr(sc, "rel", None),
+                getattr(sc, "fault", None))
     sc = tuple(sc)
-    if not 3 <= len(sc) <= 6:
+    if not 3 <= len(sc) <= 7:
         raise ValueError(f"scenario tuple of length {len(sc)}")
     net, params, ii = sc[:3]
     lb = sc[3] if len(sc) > 3 else None
     churn = sc[4] if len(sc) > 4 else None
     rel = sc[5] if len(sc) > 5 else None
-    return net, params, ii, lb, churn, rel
+    fault = sc[6] if len(sc) > 6 else None
+    return net, params, ii, lb, churn, rel, fault
 
 
 def _strip_unstackable_path_tables(nets):
@@ -138,15 +141,17 @@ def _strip_unstackable_path_tables(nets):
 def stack_scenarios(scenarios: Sequence[tuple]):
     """Stack same-shape scenario pytrees on a leading axis.
 
-    Returns (nets, params, is_inter, lb, churn, rel); the LB / churn /
-    reliability slots are None when absent (each must be present on all
-    scenarios or none).  Per-cell PathTables survive the stack only when
-    every cell carries one of identical shape (see
+    Returns (nets, params, is_inter, lb, churn, rel, fault); the LB /
+    churn / reliability / fault slots are None when absent (each must be
+    present on all scenarios or none — a fault grid pads inactive cells
+    with inert events, see `fault_sweep`).  Per-cell PathTables survive
+    the stack only when every cell carries one of identical shape (see
     `_strip_unstackable_path_tables`).
     """
-    nets, params, inters, lbs, churns, rels = zip(
+    nets, params, inters, lbs, churns, rels, faults = zip(
         *(_norm_scenario(s) for s in scenarios))
-    for tag, xs in (("lb", lbs), ("churn", churns), ("rel", rels)):
+    for tag, xs in (("lb", lbs), ("churn", churns), ("rel", rels),
+                    ("fault", faults)):
         if any(x is None for x in xs) != all(x is None for x in xs):
             raise ValueError(f"{tag} must be set on all scenarios or none")
     nets = _strip_unstackable_path_tables(nets)
@@ -155,7 +160,8 @@ def stack_scenarios(scenarios: Sequence[tuple]):
             jnp.stack(inters),
             None if lbs[0] is None else jax.tree.map(stk, *lbs),
             None if churns[0] is None else jax.tree.map(stk, *churns),
-            None if rels[0] is None else jax.tree.map(stk, *rels))
+            None if rels[0] is None else jax.tree.map(stk, *rels),
+            None if faults[0] is None else jax.tree.map(stk, *faults))
 
 
 _GRID_TRACES = [0]        # bumped at TRACE time inside _grid_core
@@ -175,8 +181,8 @@ def grid_traces() -> int:
 
 @functools.partial(jax.jit, static_argnames=("scheme", "n_warm", "n_meas",
                                              "backend"))
-def _grid_core(nets, params, inters, lb, churn, rel, seeds, *, scheme,
-               n_warm, n_meas, backend):
+def _grid_core(nets, params, inters, lb, churn, rel, seeds, fault=None, *,
+               scheme, n_warm, n_meas, backend):
     """The one grid executable: vmapped init + steady state over stacked
     scenario pytrees.
 
@@ -193,15 +199,18 @@ def _grid_core(nets, params, inters, lb, churn, rel, seeds, *, scheme,
     n_paths = nets.routes.shape[2] if nets.routes.ndim == 4 else 1
     splits = jax.vmap(fl.uniform_split)(nets)
     state0 = jax.vmap(
-        lambda p, s0, sd, r: init_state(p, n_links, n_paths=n_paths,
-                                        split0=s0, seed=sd, rel=r)
-    )(params, splits, seeds, rel)
+        lambda p, s0, sd, r, fa: init_state(p, n_links, n_paths=n_paths,
+                                            split0=s0, seed=sd, rel=r,
+                                            fault=fa)
+    )(params, splits, seeds, rel, fault)
 
-    def one(net, p, s0, ii, lb_i, churn_i, rel_i):
+    def one(net, p, s0, ii, lb_i, churn_i, rel_i, fault_i):
         return steady_state_core(net, p, s0, ii, scheme, n_warm, n_meas,
-                                 lb_i, churn_i, backend, rel=rel_i)
+                                 lb_i, churn_i, backend, rel=rel_i,
+                                 fault=fault_i)
 
-    return jax.vmap(one)(nets, params, state0, inters, lb, churn, rel)
+    return jax.vmap(one)(nets, params, state0, inters, lb, churn, rel,
+                         fault)
 
 
 def _grid_seeds(n: int, seed: int, seeds) -> jnp.ndarray:
@@ -240,9 +249,9 @@ def run_grid(scenarios: Sequence[tuple], *, scheme: str = "uno",
                                 mesh, link_tier, unroll, backend)
         if out is not None:
             return out
-    nets, params, inters, lb, churn, rel = stack_scenarios(scenarios)
+    nets, params, inters, lb, churn, rel, fault = stack_scenarios(scenarios)
     sd = _grid_seeds(len(scenarios), seed, seeds)
-    return _grid_core(nets, params, inters, lb, churn, rel, sd,
+    return _grid_core(nets, params, inters, lb, churn, rel, sd, fault,
                       scheme=scheme, n_warm=n_warm, n_meas=n_meas,
                       backend=backend)
 
@@ -298,7 +307,7 @@ def _run_grid_sharded(scenarios, scheme, n_warm, n_meas, seed, mesh,
     from repro.sharding import shard_map
 
     norm = [_norm_scenario(s) for s in scenarios]
-    for tag, i in (("lb", 3), ("churn", 4), ("rel", 5)):
+    for tag, i in (("lb", 3), ("churn", 4), ("rel", 5), ("fault", 6)):
         xs = [nm[i] for nm in norm]
         if any(x is None for x in xs) != all(x is None for x in xs):
             raise ValueError(f"{tag} must be set on all scenarios or none")
@@ -318,33 +327,44 @@ def _run_grid_sharded(scenarios, scheme, n_warm, n_meas, seed, mesh,
 
     # compile the shared plan + permuted routes + per-shard layouts ONCE
     # (cell 0), then permute each cell's value arrays against it
-    net0, params0, ii0, lb0, churn0, rel0 = norm[0]
+    net0, params0, ii0, lb0, churn0, rel0, fault0 = norm[0]
     sf0 = sh.shard_scenario(net0, params0, is_inter=ii0, lb=lb0,
-                            churn=churn0, rel=rel0, mesh=mesh,
-                            link_tier=link_tier)
+                            churn=churn0, rel=rel0, fault=fault0,
+                            mesh=mesh, link_tier=link_tier)
     plan = sf0.plan
     gflat = plan.flat_gather
     real = gflat < plan.n_real
     gc = jnp.asarray(np.where(real, gflat, 0))
     realj = jnp.asarray(real)
     new2old = jnp.asarray(plan.new2old)
+    old2new = jnp.asarray(plan.old2new)
+
+    from repro.fleetsim.reliability import _LADDER_SHARED, RelParams
 
     def permute_cell(nm):
-        net, params, ii, lb, churn, rel = nm
+        net, params, ii, lb, churn, rel, fault = nm
         net_p = sh._take_links(net, new2old)._replace(
             routes=sf0.net.routes, layout=None)
         params_p = jax.tree.map(lambda a: a[gc], params)
         ii_p = ii[gc] & realj
         lb_p = None if lb is None else jax.tree.map(lambda a: a[gc], lb)
-        rel_p = None if rel is None else \
-            jax.tree.map(lambda a: a[gc], rel)._replace(
-                enabled=rel.enabled[gc] & realj)
+        rel_p = None
+        if rel is not None:
+            # rung-indexed ladder tables are shared, never flow-gathered
+            rel_p = RelParams(**{
+                f: (v if f in _LADDER_SHARED or v is None else v[gc])
+                for f, v in zip(RelParams._fields, rel)})
+            rel_p = rel_p._replace(enabled=rel.enabled[gc] & realj)
+            if rel_p.adapt_on is not None:
+                rel_p = rel_p._replace(adapt_on=rel.adapt_on[gc] & realj)
         churn_p = None
         if churn is not None:
             churn_p = churn._replace(churned=churn.churned[gc] & realj,
                                      mean_on=churn.mean_on[gc],
                                      mean_off=churn.mean_off[gc])
-        return net_p, params_p, ii_p, lb_p, churn_p, rel_p
+        fault_p = None if fault is None else fault._replace(
+            link=old2new[fault.link], ge_link=old2new[fault.ge_link])
+        return net_p, params_p, ii_p, lb_p, churn_p, rel_p, fault_p
 
     cells = [permute_cell(nm) for nm in norm]
     stk = lambda *xs: jnp.stack(xs)
@@ -357,39 +377,37 @@ def _run_grid_sharded(scenarios, scheme, n_warm, n_meas, seed, mesh,
         jax.tree.map(stk, *(c[4] for c in cells))
     rel = None if cells[0][5] is None else \
         jax.tree.map(stk, *(c[5] for c in cells))
+    fault = None if cells[0][6] is None else \
+        jax.tree.map(stk, *(c[6] for c in cells))
 
     n_links = plan.n_links
     n_paths = nets.routes.shape[2] if nets.routes.ndim == 4 else 1
     seeds = seed + jnp.arange(len(scenarios), dtype=jnp.int32)
     splits = jax.vmap(fl.uniform_split)(nets)  # zero on inert padding rows
 
-    def init_cell(p, s0, sd, r):
+    def init_cell(p, s0, sd, r, fa):
         return init_state(p, n_links, n_paths=n_paths, split0=s0, seed=sd,
-                          rel=r)
+                          rel=r, fault=fa)
 
-    if rel is None:
-        state0 = jax.vmap(lambda p, s0, sd: init_cell(p, s0, sd, None))(
-            params, splits, seeds)
-    else:
-        state0 = jax.vmap(init_cell)(params, splits, seeds, rel)
+    state0 = jax.vmap(init_cell)(params, splits, seeds, rel, fault)
 
     churn_n = None if churn is None else plan.n_real
     has = lambda x: x is not None
     g = lambda spec: jax.tree.map(lambda s: P(None, *s), spec)
 
     def local(nets_l, lay_l, params_l, state0_l, ii_l, lb_l, churn_l,
-              cmap_l, own_l, rel_l):
+              cmap_l, own_l, rel_l, fault_l):
         lay = jax.tree.map(lambda a: a[0], lay_l)
         own = own_l[0]
         cmap = None if cmap_l is None else cmap_l[0]
 
-        def one(net_c, p_c, s0_c, ii_c, lb_c, churn_c, rel_c):
+        def one(net_c, p_c, s0_c, ii_c, lb_c, churn_c, rel_c, fault_c):
             net_c = net_c._replace(layout=lay)
             final, rates = steady_state_core(
                 net_c, p_c, s0_c, ii_c, scheme=scheme, n_warm=n_warm,
                 n_meas=n_meas, lb=lb_c, churn=churn_c, backend=backend,
                 axis_name=sh.AXIS, halo=plan.n_boundary, churn_map=cmap,
-                churn_n=churn_n, unroll=unroll, rel=rel_c)
+                churn_n=churn_n, unroll=unroll, rel=rel_c, fault=fault_c)
             return final._replace(
                 q_phys=jax.lax.psum(
                     jnp.where(own, final.q_phys, 0.0), sh.AXIS),
@@ -397,11 +415,13 @@ def _run_grid_sharded(scenarios, scheme, n_warm, n_meas, seed, mesh,
                     jnp.where(own, final.q_phantom, 0.0), sh.AXIS)), rates
 
         axes = (0, 0, 0, 0, 0 if has(lb_l) else None,
-                0 if has(churn_l) else None, 0 if has(rel_l) else None)
+                0 if has(churn_l) else None, 0 if has(rel_l) else None,
+                0 if has(fault_l) else None)
         return jax.vmap(one, in_axes=axes)(
-            nets_l, params_l, state0_l, ii_l, lb_l, churn_l, rel_l)
+            nets_l, params_l, state0_l, ii_l, lb_l, churn_l, rel_l,
+            fault_l)
 
-    from repro.fleetsim.reliability import RelParams
+    from repro.fleetsim.faults import FaultSchedule
     from repro.fleetsim.state import ChurnParams, FleetParams, LbParams
     AXIS = sh.AXIS
     # one spec per layout leaf — the optional nested PathTable subtree
@@ -411,24 +431,32 @@ def _run_grid_sharded(scenarios, scheme, n_warm, n_meas, seed, mesh,
         **{f: P(AXIS) for f in FleetParams._fields}))
     lb_spec = None if lb is None else g(LbParams(
         **{f: P(AXIS) for f in LbParams._fields}))
-    rel_spec = None if rel is None else g(RelParams(
-        **{f: P(AXIS) for f in RelParams._fields}))
+    rel_spec = None
+    if rel is not None:
+        rd = {f: P(AXIS) for f in RelParams._fields}
+        for fname in _LADDER_SHARED:
+            rd[fname] = P() if rel.ladder_k is not None else None
+        rd["adapt_on"] = P(AXIS) if rel.ladder_k is not None else None
+        rel_spec = g(RelParams(**rd))
+    fault_spec = None if fault is None else g(FaultSchedule(
+        **{f: P() for f in FaultSchedule._fields}))
     churn_spec = cmap_spec = None
     if churn is not None:
         churn_spec = g(ChurnParams(
             **{f: P(AXIS) for f in ChurnParams._fields}))
         cmap_spec = P(AXIS)
-    state_spec = g(sh._state_spec(rel is not None))
+    state_spec = g(sh._state_spec(rel is not None, fault is not None))
 
     f = shard_map(local, mesh,
                   in_specs=(g(sh._net_spec(nets.p_loss is not None)),
                             lay_spec, param_spec,
                             state_spec, g(P(AXIS)), lb_spec, churn_spec,
-                            cmap_spec, P(AXIS), rel_spec),
+                            cmap_spec, P(AXIS), rel_spec, fault_spec),
                   out_specs=(state_spec, g(P(AXIS))),
                   check_vma=False)
     final, rates = jax.jit(f)(nets, sf0.layouts, params, state0, inters,
-                              lb, churn, sf0.churn_map, sf0.own, rel)
+                              lb, churn, sf0.churn_map, sf0.own, rel,
+                              fault)
 
     inv = jnp.asarray(plan.inverse_flow)
     old2new = jnp.asarray(plan.old2new)
@@ -663,5 +691,131 @@ def recovery_sweep(overloads: Sequence[float],
             "nack_quantum": float(next(iter(rels.values()))
                                   .nack_quantum[0]),
             "loss_md": float(next(iter(rels.values())).loss_md[0]),
+        },
+    }
+
+
+_FAULT_KINDS = ("down", "brownout", "flap", "burst")
+
+
+def fault_sweep(fail_times: Sequence[float],
+                fault_kinds: Sequence[str],
+                ec_policies: Sequence[tuple], *, n_inter: int = 64,
+                rate: float = fl.RATE_100G, intra_rtt: float = 14 * US,
+                inter_rtt: float = 2 * fl.MS, qcap: float = 64 * 1024,
+                fault_rtts: float = 50.0, brownout_frac: float = 0.4,
+                flap_period_rtts: float = 2.0, flap_duty: float = 0.5,
+                burst_loss: float = 2e-2, burst_corr: float = 0.3,
+                mean_burst_len: float = 3.0, scheme: str = "uno",
+                n_warm: int = 20_000, n_meas: int = 10_000, seed: int = 0,
+                mesh=None, link_tier=None, unroll: int = 1) -> dict:
+    """Fault-response grid over (fail time x fault kind x EC policy).
+
+    Every cell is the recovery_sweep dumbbell (physical RED, small qcap,
+    tail drop thresholds) with ONE scheduled fault on the bottleneck
+    downlink: a `fault_rtts`-RTT window starting at `fail_times[i]` (ns)
+    whose kind is drawn from `_FAULT_KINDS` — hard 'down', 'brownout' to
+    `brownout_frac` capacity, 'flap' (period `flap_period_rtts` RTTs, ON
+    fraction `flap_duty`), or a Gilbert-Elliott loss 'burst'
+    (`burst_loss` mean loss, `burst_corr` in-burst drop prob,
+    `mean_burst_len` expected burst length in chain ticks).  Kinds use
+    inert schedule rows (a zero-length window) on the axis they don't
+    exercise, so every cell carries the same E=1 / G=1 schedule shapes and
+    the whole grid stacks into one vmapped executable — sharding under one
+    plan when `mesh` is given.
+
+    `ec_policies` are EC-strength ladders: tuples of (k, r) rungs for the
+    adaptive controller, a 1-rung tuple meaning static EC.  Shorter
+    ladders are padded by repeating their last rung so all cells share one
+    rung-table length (padding rungs are idempotent — stepping onto a
+    repeated rung changes nothing).
+
+    Returns (len(fail_times), len(fault_kinds), len(ec_policies)) arrays:
+    the recovery_sweep metrics plus 'rung_mean' (mean final ladder rung —
+    how hard the adaptive controller escalated) and 'fault_config' (the
+    resolved fault knobs, persisted by benchmark entries like
+    'rel_config').
+    """
+    from repro.fleetsim.faults import make_schedule
+    from repro.fleetsim.reliability import make_rel_params
+    from repro.scenarios import dumbbell_scenario, to_fleetsim
+    for kind in fault_kinds:
+        if kind not in _FAULT_KINDS:
+            raise ValueError(f"fault kind {kind!r} not in {_FAULT_KINDS}")
+    base = to_fleetsim(dumbbell_scenario(
+        0, n_inter, rate=rate, intra_rtt=intra_rtt, inter_rtt=inter_rtt,
+        qcap=qcap, phantom=False, red_lo_frac=0.85, red_hi_frac=0.98,
+        seed=seed))
+    dt = float(base.net.dt)
+    down = base.net.cap.shape[0] - 1
+    period = max(int(round(0.25 * inter_rtt / dt)), 1)
+    flap_ep = max(int(round(flap_period_rtts * inter_rtt / dt)), 1)
+    dur_ep = max(int(round(fault_rtts * inter_rtt / dt)), 1)
+    p_bg = 1.0 / max(float(mean_burst_len), 1.0)
+    p_gb = min(burst_loss / max(burst_corr * mean_burst_len, 1e-12), 1.0)
+    L = max(len(pol) for pol in ec_policies)
+    rels = []
+    for pol in ec_policies:
+        rungs = [tuple(map(int, kr)) for kr in pol]
+        rungs += [rungs[-1]] * (L - len(rungs))
+        rels.append(make_rel_params(n_inter, ladder=tuple(rungs),
+                                    nack_period=period))
+    inert_cap = (down, 0, 0, 1.0, 0, 0.0)       # t1 == t0: never active
+    inert_ge = (down, 0, 0, 0.0, 0.0, 0.0, 1.0)
+    scen = []
+    for t in fail_times:
+        e0 = max(int(round(float(t) / dt)), 0)
+        e1 = e0 + dur_ep
+        for kind in fault_kinds:
+            cap_ev, ge_ev = inert_cap, inert_ge
+            if kind == "down":
+                cap_ev = (down, e0, e1, 0.0, 0, 0.0)
+            elif kind == "brownout":
+                cap_ev = (down, e0, e1, float(brownout_frac), 0, 0.0)
+            elif kind == "flap":
+                cap_ev = (down, e0, e1, 0.0, flap_ep, float(flap_duty))
+            else:                                # burst
+                ge_ev = (down, e0, e1, 0.0, float(burst_corr), p_gb, p_bg)
+            fault = make_schedule(cap_events=[cap_ev], ge_events=[ge_ev])
+            for rel in rels:
+                scen.append((base.net, base.params, base.is_inter,
+                             base.lb, base.churn, rel, fault))
+    shape = (len(fail_times), len(fault_kinds), len(ec_policies))
+    final, rates = run_grid(scen, scheme=scheme, n_warm=n_warm,
+                            n_meas=n_meas, seed=seed, mesh=mesh,
+                            link_tier=link_tier, unroll=unroll)
+    rs = final.rel
+    wire = jnp.maximum(fleet_sum(rs.wire_bytes, axis=1), 1.0)
+    return {
+        "fail_times": jnp.asarray(fail_times),
+        "fault_kinds": tuple(fault_kinds),
+        "ec_policies": tuple(tuple(tuple(map(int, kr)) for kr in pol)
+                             for pol in ec_policies),
+        "rates": rates.reshape(shape + (n_inter,)),
+        "jain": jain(rates).reshape(shape),
+        "util": (fleet_sum(rates, axis=1) / rate).reshape(shape),
+        "retx_ratio": (fleet_sum(rs.rtx_bytes, axis=1) / wire)
+        .reshape(shape),
+        "rec_ratio": (fleet_sum(rs.rec_bytes, axis=1) / wire)
+        .reshape(shape),
+        "loss_ratio": (fleet_sum(rs.lost_bytes, axis=1) / wire)
+        .reshape(shape),
+        "nacks": fleet_sum(rs.nacks, axis=1).reshape(shape),
+        "nack_lat": jnp.mean(rs.lat_ewma, axis=1).reshape(shape),
+        "rung_mean": jnp.mean(rs.rung.astype(jnp.float32), axis=1)
+        .reshape(shape),
+        "fault_config": {
+            "fail_times": [float(t) for t in fail_times],
+            "fault_kinds": list(fault_kinds),
+            "ec_policies": [[list(map(int, kr)) for kr in pol]
+                            for pol in ec_policies],
+            "fault_rtts": float(fault_rtts),
+            "brownout_frac": float(brownout_frac),
+            "flap_period_rtts": float(flap_period_rtts),
+            "flap_duty": float(flap_duty),
+            "burst_loss": float(burst_loss),
+            "burst_corr": float(burst_corr),
+            "mean_burst_len": float(mean_burst_len),
+            "nack_period_epochs": period,
         },
     }

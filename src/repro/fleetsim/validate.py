@@ -242,6 +242,176 @@ def compare_recovery_steady_state(n_inter: int = 6, *,
     }
 
 
+def compare_fault_recovery(n_inter: int = 8, *,
+                           n_wan: int = 4,
+                           fail_link: str = "wan0",
+                           t_fail: float = 4 * MS,
+                           rate: float = fl.RATE_100G,
+                           intra_rtt: float = 14 * US,
+                           inter_rtt: float = 2 * MS,
+                           horizon: float = 70 * MS,
+                           t0: float = 45 * MS,
+                           n_meas: Optional[int] = None,
+                           seed: int = 1) -> dict:
+    """Fault acceptance: ONE multipath dumbbell spec with a scheduled hard
+    failure of `fail_link` at `t_fail`, compiled to both simulators.
+
+    netsim arms the fault on its event wheel (`fail_link` drops every
+    arriving packet; UnoLBRouter's loss/RTT feedback drains the dead
+    path), the fluid side runs the compiled FaultSchedule (cap_scale -> 0,
+    LB weights drain via `degrade_split` + the weight dynamics).  Both
+    sides measure POST-failure steady state over the SAME window — netsim
+    over [t0, horizon) of the ACK trace, fluid over the matching epoch
+    range (`n_meas` overrides the fluid window length; both machines
+    recover over tens of inter-RTTs, so t0 defaults well past the
+    re-convergence knee) — and the acceptance criterion is the AGGREGATE
+    goodput
+    (per-flow positions under a dead path are re-randomized by which
+    subflows each router rebalances first, so only the fleet sum is
+    oracle-comparable; see the fault-axis fidelity notes in ROADMAP.md).
+
+    Returns {"netsim", "fluid", "agg_netsim", "agg_fluid", "agg_rel_err",
+    "util_netsim", "util_fluid"}.
+    """
+    from repro.scenarios import FaultSpec, LbSpec
+    if not t_fail < t0:
+        raise ValueError("t_fail must precede the measurement window t0")
+    spec = dumbbell_scenario(
+        0, n_inter, rate=rate, intra_rtt=intra_rtt, inter_rtt=inter_rtt,
+        multipath=True, n_wan=n_wan,
+        inter_lb=LbSpec(kind="unolb", n_subflows=n_wan),
+        faults=(FaultSpec(link=fail_link, kind="down", t_start=t_fail),),
+        seed=seed)
+    ns = netsim_scenario_rates(spec, horizon=horizon, t0=t0)
+
+    fs = to_fleetsim(spec)
+    dt = float(fs.net.dt)
+    n_warm = max(int(round(t0 / dt)), 1)
+    if n_meas is None:
+        n_meas = max(int(round((horizon - t0) / dt)), 1)
+    warm, _ = fleet_cc.simulate(fs.net, fs.params, n_epochs=n_warm,
+                                scheme="uno", is_inter=fs.is_inter,
+                                lb=fs.lb, churn=fs.churn, rel=fs.rel,
+                                fault=fs.fault, seed=fs.seed)
+    _, traj = fleet_cc.simulate(fs.net, fs.params, n_epochs=n_meas,
+                                scheme="uno", state0=warm,
+                                is_inter=fs.is_inter, lb=fs.lb,
+                                churn=fs.churn, rel=fs.rel,
+                                fault=fs.fault, record=True)
+    fm = np.asarray(traj).mean(axis=0)
+    agg_ns, agg_fl = float(ns.sum()), float(fm.sum())
+    return {
+        "netsim": ns, "fluid": fm,
+        "agg_netsim": agg_ns, "agg_fluid": agg_fl,
+        "agg_rel_err": abs(agg_fl - agg_ns) / max(agg_ns, 1e-9),
+        "util_netsim": agg_ns / spec.rate,
+        "util_fluid": agg_fl / spec.rate,
+    }
+
+
+def compare_adaptive_ec(p_loss: float = 0.02, *,
+                        ladder: tuple = ((8, 1), (8, 2), (8, 4)),
+                        ladder_up: Optional[tuple] = None,
+                        ladder_down: Optional[tuple] = None,
+                        n_inter: int = 6,
+                        qcap: float = 512 * MIB,
+                        rate: float = fl.RATE_100G,
+                        intra_rtt: float = 14 * US,
+                        inter_rtt: float = 2 * MS,
+                        nack_period: Optional[float] = None,
+                        horizon: float = 60 * MS,
+                        t0: float = 20 * MS,
+                        size: int = 512 * MIB,
+                        n_warm: int = 200_000,
+                        n_meas: int = 20_000,
+                        seed: int = 1) -> dict:
+    """Adaptive-EC acceptance: the fluid ladder controller under a
+    CONFIGURED loss rate must settle on a rung whose FIXED geometry, run
+    through the packet simulator, reproduces the fluid operating point.
+
+    netsim has no adaptive controller (RelSpec.ladder is fluid-only), so
+    the oracle comparison is two-stage: (1) run the fluid dumbbell with
+    the ladder enabled and read the settled rung (the per-flow majority);
+    (2) run netsim on the SAME spec with the settled rung's (k, r) as its
+    static EC geometry.  If the controller converged to the right
+    strength for `p_loss`, the static-geometry packet run and the
+    adaptive fluid run describe the same machine — same tolerance as
+    `compare_recovery_steady_state`.  The loss-STEP transient (rung rises
+    under a burst, decays after it clears) is pinned fluid-side in
+    tests/test_faults.py; this function anchors the fixed points.
+
+    Returns the compare dict plus {"rung_fluid", "rung_geometry",
+    "retx_netsim", "retx_fluid", "rec_fluid", "loss_fluid"}.
+    """
+    from repro.scenarios import RelSpec
+    if nack_period is None:
+        nack_period = 2.0 * inter_rtt
+    spec = dumbbell_scenario(
+        0, n_inter, rate=rate, intra_rtt=intra_rtt, inter_rtt=inter_rtt,
+        qcap=qcap, wan_p_loss=p_loss,
+        inter_rel=RelSpec(ec=tuple(ladder[0]), nack_period=nack_period,
+                          ladder=tuple(tuple(kr) for kr in ladder),
+                          ladder_up=ladder_up, ladder_down=ladder_down),
+        seed=seed)
+    fs = to_fleetsim(spec)
+    warm, _ = fleet_cc.simulate(fs.net, fs.params, n_epochs=n_warm,
+                                scheme="uno", is_inter=fs.is_inter,
+                                lb=fs.lb, churn=fs.churn, rel=fs.rel,
+                                seed=fs.seed)
+    final, traj = fleet_cc.simulate(fs.net, fs.params, n_epochs=n_meas,
+                                    scheme="uno", state0=warm,
+                                    is_inter=fs.is_inter, lb=fs.lb,
+                                    churn=fs.churn, rel=fs.rel,
+                                    record=True)
+    fm = np.asarray(traj).mean(axis=0)
+    rungs = np.asarray(final.rel.rung)
+    rung = int(np.bincount(rungs, minlength=len(ladder)).argmax())
+
+    def _frac(field):
+        d = np.asarray(getattr(final.rel, field)) \
+            - np.asarray(getattr(warm.rel, field))
+        return float(np.sum(d))
+
+    wire = max(_frac("wire_bytes"), 1.0)
+
+    spec_ns = dumbbell_scenario(
+        0, n_inter, rate=rate, intra_rtt=intra_rtt, inter_rtt=inter_rtt,
+        qcap=qcap, wan_p_loss=p_loss,
+        inter_rel=RelSpec(ec=tuple(ladder[rung]),
+                          nack_period=nack_period),
+        seed=seed)
+    net = to_netsim(spec_ns)
+    flows = spawn_backlogged(net, cc_scheme="uno", size=size)
+    snap = {"sent": 0, "retx": 0}
+
+    def _snapshot():
+        snap["sent"] = sum(f.n_sent for f in flows)
+        snap["retx"] = sum(f.n_retx for f in flows)
+
+    net.sim.at(t0, _snapshot)
+    net.sim.run(until=horizon)
+    span = horizon - t0
+    ns = np.array([sum(b for (t, b) in f.rate_trace if t0 <= t < horizon)
+                   / span for f in flows])
+    d_sent = sum(f.n_sent for f in flows) - snap["sent"]
+    retx_ns = (sum(f.n_retx for f in flows) - snap["retx"]) \
+        / max(d_sent, 1)
+
+    rel_err = np.abs(fm - ns) / np.maximum(ns, 1e-9)
+    return {
+        "netsim": ns, "fluid": fm, "rel_err": rel_err,
+        "max_rel_err": float(rel_err.max()),
+        "util_netsim": float(ns.sum() / spec.rate),
+        "util_fluid": float(fm.sum() / spec.rate),
+        "rung_fluid": rung,
+        "rung_geometry": tuple(ladder[rung]),
+        "retx_netsim": float(retx_ns),
+        "retx_fluid": _frac("rtx_bytes") / wire,
+        "rec_fluid": _frac("rec_bytes") / wire,
+        "loss_fluid": _frac("lost_bytes") / wire,
+    }
+
+
 def compare_fat_tree_steady_state(k: int = 4, *,
                                   n_intra_pod: int = 0, n_cross_pod: int = 6,
                                   n_inter: int = 0, n_wan: int = 4,

@@ -131,6 +131,7 @@ class UnoLBRouter:
         self.last_sent = [0.0] * n
         self.last_reroute = -1e18
         self.n_reroutes = 0
+        self.suspect = set()        # ids of paths implicated by a timeout
 
     def path_for(self, pkt_idx, block):
         # onSend: round-robin the subflows; EC-block packets therefore spread
@@ -141,6 +142,10 @@ class UnoLBRouter:
 
     def on_ack(self, subflow, now):
         self.last_ack[subflow] = now
+        # an ACK is the "recently ACKed" proof-of-life: the subflow's path
+        # is no longer suspect (an abandoned path sends nothing, so a dead
+        # path stays suspect until repair traffic reaches it again)
+        self.suspect.discard(id(self.sub_paths[subflow]))
 
     def on_nack_or_timeout(self, now):
         # onNackOrTimeout: rate-limited to once per base RTT
@@ -151,10 +156,20 @@ class UnoLBRouter:
         bad = min(range(self.n), key=lambda i: self.last_ack[i])
         # choose a new path not currently used by any subflow ("recently
         # ACKed" bias: surviving subflows keep their proven paths; the failed
-        # one moves off the shared failure domain); never keep the current one
+        # one moves off the shared failure domain); never keep the current
+        # one, and avoid paths still suspect from an earlier timeout — a
+        # hard-down link otherwise re-enters the candidate pool as soon as
+        # its subflow drains off it, and the flow ping-pongs back onto the
+        # blackhole forever (transient congestion timeouts clear on the
+        # next ACK, so suspicion only persists for paths that stay silent)
         cur = self.sub_paths[bad]
+        self.suspect.add(id(cur))
         cands = [p for p in self.paths
-                 if p is not cur and p not in self.sub_paths]
+                 if p is not cur and p not in self.sub_paths
+                 and id(p) not in self.suspect]
+        if not cands:
+            cands = [p for p in self.paths
+                     if p is not cur and id(p) not in self.suspect]
         if not cands:
             cands = [p for p in self.paths if p is not cur]
         if cands:

@@ -31,21 +31,23 @@ collision/ordering/loss claims; use fleetsim for rate allocation and
 parameter sweeps at scale (see ROADMAP.md fidelity limits).
 """
 from repro.scenarios.compile_fleetsim import (FleetScenario, ShardPlan,
-                                              fleet_arrays, plan_shards,
-                                              to_fleetsim)
+                                              compile_faults, fleet_arrays,
+                                              plan_shards, to_fleetsim)
 from repro.scenarios.compile_netsim import (ScenarioNet, spawn_backlogged,
                                             to_netsim)
 from repro.scenarios.fat_tree import (TIER_AGG, TIER_CORE, TIER_EDGE,
                                       TIER_WAN, fat_tree_spec,
                                       link_tier_from_name, link_tiers)
-from repro.scenarios.spec import (ChurnSpec, FlowGroup, LbSpec, LinkSpec,
-                                  Path, PathSet, RelSpec, Scenario,
+from repro.scenarios.spec import (FAULT_KINDS, ChurnSpec, FaultSpec,
+                                  FlowGroup, LbSpec, LinkSpec, Path,
+                                  PathSet, RelSpec, Scenario,
                                   dumbbell_scenario, fingerprint,
                                   spec_fingerprint)
 
 __all__ = [
-    "ChurnSpec", "FlowGroup", "LbSpec", "LinkSpec", "Path", "PathSet",
-    "RelSpec", "Scenario", "dumbbell_scenario", "fingerprint",
+    "ChurnSpec", "FAULT_KINDS", "FaultSpec", "FlowGroup", "LbSpec",
+    "LinkSpec", "Path", "PathSet", "RelSpec", "Scenario",
+    "compile_faults", "dumbbell_scenario", "fingerprint",
     "spec_fingerprint",
     "TIER_EDGE", "TIER_AGG", "TIER_CORE", "TIER_WAN",
     "fat_tree_spec", "link_tier_from_name", "link_tiers",

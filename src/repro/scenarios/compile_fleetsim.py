@@ -48,6 +48,9 @@ class FleetScenario(NamedTuple):
     # present when any inter group carries a RelSpec; its ec_eff also
     # folds in the static LbSpec.ec efficiency of groups WITHOUT a
     # RelSpec, since make_step skips lb.ec_eff entirely when rel is set
+    fault: Optional[object] = None   # FaultSchedule (repro.fleetsim.faults)
+    # compiled from spec.faults; None on fault-free scenarios (the step
+    # then traces with zero fault overhead)
 
 
 def _flow_adaptive(g) -> bool:
@@ -167,11 +170,12 @@ def to_fleetsim(spec: Scenario, **make_params_kw) -> FleetScenario:
                             mean_off=jnp.asarray(mean_off, jnp.float32))
 
     rel = _compile_rel(spec, net)
+    fault = compile_faults(spec, net)
 
     from repro.scenarios.fat_tree import link_tiers
     return FleetScenario(net=net, params=params, is_inter=is_inter,
                          lb=lb, churn=churn, seed=spec.seed,
-                         link_tier=link_tiers(spec), rel=rel)
+                         link_tier=link_tiers(spec), rel=rel, fault=fault)
 
 
 def _compile_rel(spec: Scenario, net: FluidNet):
@@ -202,7 +206,9 @@ def _compile_rel(spec: Scenario, net: FluidNet):
                 g.n, ec=r.ec,
                 nack_period=max(int(round(period / dt)), 1),
                 nack_hold=int(round(r.debounce / dt)),
-                loss_md=r.loss_md, rtx_cap=r.rtx_cap))
+                loss_md=r.loss_md, rtx_cap=r.rtx_cap,
+                ladder=r.ladder, ladder_up=r.ladder_up,
+                ladder_down=r.ladder_down))
         else:
             row = make_rel_params(g.n, enabled=np.zeros(g.n, bool))
             k_r = g.lb.ec if g.inter else None
@@ -211,6 +217,47 @@ def _compile_rel(spec: Scenario, net: FluidNet):
                     g.n, k_r[0] / (k_r[0] + k_r[1]), jnp.float32))
             rows.append(row)
     return stack_rel_params(rows)
+
+
+def compile_faults(spec: Scenario, net: FluidNet):
+    """spec.faults -> the epoch-indexed FaultSchedule (None when empty).
+
+    Times round to the epoch clock (net.dt): an event covers epochs
+    [round(t_start/dt), round(t_end/dt)) — flap granularity is therefore
+    epoch-quantized (a sub-epoch flap phase collapses; netsim keeps the
+    exact times).  "burst" events reuse netsim.topology.GilbertElliott's
+    parameterization verbatim: p_gb = loss_rate / (burst *
+    mean_burst_len), p_bg = 1 / mean_burst_len — but the fluid chain
+    ticks once per EPOCH where netsim's ticks per packet, so only the
+    stationary loss expectation is oracle-comparable (ROADMAP fidelity
+    notes).
+    """
+    if not spec.faults:
+        return None
+    from repro.fleetsim.faults import make_schedule
+    idx = spec.link_index()
+    dt = float(net.dt)
+
+    def ep(t):
+        return max(int(round(t / dt)), 0)
+
+    cap_ev, ge_ev = [], []
+    for f in spec.faults:
+        li = idx[f.link]
+        e0 = ep(f.t_start)
+        e1 = None if f.t_end is None else max(ep(f.t_end), e0)
+        if f.kind == "down":
+            cap_ev.append((li, e0, e1, 0.0, 0, 0.0))
+        elif f.kind == "brownout":
+            cap_ev.append((li, e0, e1, f.cap_frac, 0, 0.0))
+        elif f.kind == "flap":
+            cap_ev.append((li, e0, e1, f.cap_frac,
+                           max(int(round(f.period / dt)), 1), f.duty))
+        else:  # "burst" (spec.validate rejects anything else)
+            p_bg = 1.0 / max(f.mean_burst_len, 1.0)
+            p_gb = f.loss_rate / max(f.burst * f.mean_burst_len, 1e-12)
+            ge_ev.append((li, e0, e1, 0.0, f.burst, min(p_gb, 1.0), p_bg))
+    return make_schedule(cap_ev, ge_ev)
 
 
 # ------------------------------------------------ locality shard planning

@@ -43,6 +43,7 @@ class ScenarioNet(Net):
                         * (spec.inter_bdp if l.wan else spec.intra_bdp))
                 ln.attach_phantom(spec.drain_frac, vcap,
                                   spec.min_frac, spec.max_frac)
+        self._schedule_faults(spec, sim, spec.seed if seed is None else seed)
         self._flow_paths = []
         self._flow_inter = []
         self._flow_rtt = []
@@ -56,6 +57,45 @@ class ScenarioNet(Net):
                 g.rtt if g.rtt is not None
                 else (spec.inter_rtt if g.inter else spec.intra_rtt))
             self._flow_group.append(g)
+
+    def _schedule_faults(self, spec: Scenario, sim, seed: int) -> None:
+        """Map spec.faults onto the packet engine's fault primitives.
+
+        "down"/"flap" schedule `fail_link`/`repair_link` pairs through
+        `sim.at`; "brownout" rescales the link's service rate (a 0.0
+        fraction degenerates to a hard failure — a zero rate would divide
+        the serialization time); "burst" wraps the link's loss_fn with a
+        windowed GilbertElliott chain (seeded per (spec seed, fault idx),
+        composed with any configured p_loss).  This is the same machinery
+        benchmarks/fig13_failures.py drives by hand — netsim stays the
+        oracle for the fluid fault axis.
+        """
+        from repro.netsim.topology import (GilbertElliott, fail_link,
+                                           repair_link)
+        for fi, f in enumerate(spec.faults):
+            ln = self.links[f.link]
+            if f.kind == "down" or (f.kind == "brownout"
+                                    and f.cap_frac <= 0.0):
+                sim.at(f.t_start, fail_link, ln)
+                if f.t_end is not None:
+                    sim.at(f.t_end, repair_link, ln)
+            elif f.kind == "brownout":
+                orig = ln.rate
+                sim.at(f.t_start, setattr, ln, "rate",
+                       orig * f.cap_frac)
+                if f.t_end is not None:
+                    sim.at(f.t_end, setattr, ln, "rate", orig)
+            elif f.kind == "flap":
+                _arm_flap(sim, ln, f, fail_link, repair_link)
+                if f.t_end is not None:
+                    sim.at(f.t_end, repair_link, ln)
+            else:  # "burst" (spec.validate rejects anything else)
+                rng = random.Random((seed << 16) ^ (0xFA17 * (fi + 1)))
+                ge = GilbertElliott(rng, loss_rate=f.loss_rate,
+                                    burst=f.burst,
+                                    mean_burst_len=f.mean_burst_len)
+                prev = ln.loss_fn
+                ln.loss_fn = _windowed_loss(ge, prev, f.t_start, f.t_end)
 
     def _flow_of(self, src: int, dst: int) -> int:
         """Global flow index: the sender endpoint identifies the flow."""
@@ -78,6 +118,35 @@ class ScenarioNet(Net):
 
     def group_of(self, flow_idx: int):
         return self._flow_group[flow_idx]
+
+
+def _arm_flap(sim, ln, f, fail_link, repair_link) -> None:
+    """Self-rescheduling down/up square wave (factored out of the fault
+    loop so the recursive closure binds ITS OWN cycle, not the loop's
+    last one)."""
+    down_len = f.duty * f.period
+
+    def cycle(t0):
+        if f.t_end is not None and t0 >= f.t_end:
+            return
+        fail_link(ln)
+        sim.at(t0 + down_len, repair_link, ln)
+        sim.at(t0 + f.period, cycle, t0 + f.period)
+
+    sim.at(f.t_start, cycle, f.t_start)
+
+
+def _windowed_loss(ge, prev, t_start: float, t_end):
+    """Compose a GilbertElliott chain active on [t_start, t_end) with the
+    link's preexisting loss_fn (configured p_loss), if any."""
+    def loss(pkt, now):
+        hit = False
+        if now >= t_start and (t_end is None or now < t_end):
+            hit = ge(pkt, now)
+        if not hit and prev is not None:
+            hit = prev(pkt, now)
+        return hit
+    return loss
 
 
 def to_netsim(spec: Scenario, seed: Optional[int] = None) -> ScenarioNet:

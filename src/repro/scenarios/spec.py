@@ -106,12 +106,57 @@ class RelSpec(NamedTuple):
     rounds them to epochs, netsim maps `nack_period` onto the flow's
     nack_timeout.  `nack_period=None` defaults to a quarter of the flow
     RTT (netsim protocol.Flow's default NACK timeout).
+
+    `ladder=((k0, r0), (k1, r1), ...)` turns on the fluid adaptive
+    EC-strength controller (reliability.make_rel_params): rung 0 replaces
+    `ec` as the base geometry and flows escalate/relax parity strength on
+    a smoothed loss signal with hysteresis (`ladder_up`/`ladder_down`
+    override the per-rung thresholds; None derives them).  netsim keeps
+    the static `ec` — the packet oracle pins the fixed-geometry endpoints
+    the ladder moves between (see ROADMAP fidelity notes).
     """
     ec: Tuple[int, int] = (8, 2)
     nack_period: Optional[float] = None   # ns between NACK batch ticks
     debounce: float = 0.0                 # ns of holdoff after a NACK fires
     loss_md: float = 0.5                  # cwnd factor on a NACK event
     rtx_cap: float = 1.0                  # retransmit rate cap vs CC rate
+    ladder: Optional[Tuple[Tuple[int, int], ...]] = None
+    ladder_up: Optional[Tuple[float, ...]] = None
+    ladder_down: Optional[Tuple[float, ...]] = None
+
+
+class FaultSpec(NamedTuple):
+    """One scheduled fault on a named link; compiles to BOTH simulators.
+
+    Kinds (times in ns from simulation start; `t_end=None` never clears):
+
+      "down"      hard failure: capacity 0 (netsim: `fail_link`);
+      "brownout"  capacity multiplied by `cap_frac` (netsim: the link's
+                  service rate is rescaled);
+      "flap"      square-wave down/up with `period`/`duty` (fraction of
+                  each period spent faulted at `cap_frac`, default fully
+                  down) — netsim schedules the fail/repair pairs, the
+                  fluid model quantizes the wave to the epoch clock;
+      "burst"     Gilbert-Elliott correlated loss on the link
+                  (`loss_rate`/`burst`/`mean_burst_len` are exactly
+                  netsim.topology.GilbertElliott's fit parameters;
+                  netsim runs the chain per packet, the fluid model per
+                  EPOCH with the same transition probabilities — burst
+                  loss is expectation-valued there, see ROADMAP).
+    """
+    link: str
+    kind: str = "down"
+    t_start: float = 0.0
+    t_end: Optional[float] = None
+    cap_frac: float = 0.0          # brownout/flap capacity multiplier
+    period: float = 0.0            # flap period (ns)
+    duty: float = 0.5              # fraction of the period spent faulted
+    loss_rate: float = 5.01e-5     # burst: mean loss prob (paper Table 1)
+    burst: float = 0.25            # burst: loss prob in the bad state
+    mean_burst_len: float = 3.0    # burst: mean bad-state dwell (ticks)
+
+
+FAULT_KINDS = ("down", "brownout", "flap", "burst")
 
 
 class FlowGroup(NamedTuple):
@@ -151,6 +196,7 @@ class Scenario(NamedTuple):
     red_hi_frac: float = 0.75
     epoch_period_frac: float = 1.0
     seed: int = 0                    # threaded to workloads AND churn masks
+    faults: Tuple[FaultSpec, ...] = ()   # scheduled link faults (both sims)
 
     @property
     def n_flows(self) -> int:
@@ -195,6 +241,18 @@ class Scenario(NamedTuple):
                             raise ValueError(
                                 f"{self.name}/{g.name}: unknown link "
                                 f"{name!r}")
+        for f in self.faults:
+            if f.link not in idx:
+                raise ValueError(
+                    f"{self.name}: fault on unknown link {f.link!r}")
+            if f.kind not in FAULT_KINDS:
+                raise ValueError(
+                    f"{self.name}: unknown fault kind {f.kind!r} "
+                    f"(expected one of {FAULT_KINDS})")
+            if f.kind == "flap" and f.period <= 0.0:
+                raise ValueError(
+                    f"{self.name}: flap fault on {f.link!r} needs a "
+                    f"positive period")
         return self
 
 
@@ -259,6 +317,7 @@ def dumbbell_scenario(n_intra: int, n_inter: int, *,
                       inter_churn: Optional[ChurnSpec] = None,
                       inter_rel: Optional[RelSpec] = None,
                       wan_p_loss: float = 0.0,
+                      faults: Tuple[FaultSpec, ...] = (),
                       seed: int = 0, name: str = "dumbbell") -> Scenario:
     """The shared inter/intra dumbbell: one spec for netsim AND fleetsim.
 
@@ -315,4 +374,4 @@ def dumbbell_scenario(n_intra: int, n_inter: int, *,
         drain_frac=drain_frac, cap_bdps=cap_bdps, min_frac=min_frac,
         max_frac=max_frac, red_lo_frac=red_lo_frac,
         red_hi_frac=red_hi_frac, epoch_period_frac=epoch_period_frac,
-        seed=seed).validate()
+        seed=seed, faults=tuple(faults)).validate()

@@ -5,6 +5,8 @@ the configurable executable cache.
 Kept fast: small multipath dumbbells everywhere, plus one tiny fat tree
 (k=4, a few hundred flows) for the PathTable-bearing layout round-trip.
 """
+import os
+
 import numpy as np
 import pytest
 
@@ -13,8 +15,9 @@ import jax.numpy as jnp
 
 from repro.fleetsim import links as fl
 from repro.fleetsim import service, shard, sweeps
-from repro.scenarios import (RelSpec, dumbbell_scenario, fat_tree_spec,
-                             fingerprint, to_fleetsim)
+from repro.scenarios import (FaultSpec, RelSpec, dumbbell_scenario,
+                             fat_tree_spec, fingerprint, to_fleetsim)
+from repro.scenarios.spec import MS
 
 RUN = dict(n_warm=60, n_meas=20)
 
@@ -113,6 +116,37 @@ def test_corrupt_bundle_rebuilds(tmp_path):
     # and the rebuild healed the bundle in place
     _, src = service.cached_scenario("dumbbell", cache_dir=tmp_path, **kw)
     assert src == "disk"
+
+
+def test_bundle_round_trip_fault_and_ladder(tmp_path):
+    """The v2 families: a FaultSchedule and a ladder-bearing RelParams
+    survive the bundle round trip bit-identically."""
+    spec = dumbbell_scenario(
+        0, 4, multipath=True, n_wan=2,
+        inter_rel=RelSpec(ladder=((4, 1), (4, 2))),
+        faults=(FaultSpec(link="wan0", kind="down", t_start=1 * MS,
+                          t_end=3 * MS),
+                FaultSpec(link="wan1", kind="burst", t_start=0.0)))
+    fs = to_fleetsim(spec)
+    assert fs.fault is not None and fs.rel.ladder_k is not None
+    got = service.load_bundle(
+        service.save_bundle(tmp_path / "f.npz", fs, key="f"))
+    assert got is not None
+    _assert_tree_identical(fs.fault, got.fault)
+    _assert_tree_identical(fs.rel, got.rel)
+
+
+def test_bundle_round_trip_restores_none_subfields(tmp_path):
+    """Per-FIELD absence: a ladder-less RelParams stores no ladder arrays
+    and the loader reconstructs the Nones (not zero-filled ghosts)."""
+    fs = _tiny_fs(inter_rel=RelSpec(ec=(4, 2)))
+    assert fs.rel is not None and fs.rel.ladder_k is None
+    got = service.load_bundle(
+        service.save_bundle(tmp_path / "l.npz", fs, key="l"))
+    assert got is not None
+    assert got.fault is None
+    assert got.rel.ladder_k is None and got.rel.adapt_on is None
+    _assert_tree_identical(fs.rel, got.rel)
 
 
 def test_version_skew_orphans_bundle(tmp_path):
@@ -224,3 +258,77 @@ def test_exec_cache_size_env(monkeypatch):
     assert shard._exec_cache_size() == 9
     monkeypatch.delenv("FLEETSIM_EXEC_CACHE")
     assert shard._exec_cache_size() == shard._EXEC_CACHE_DEFAULT
+
+
+# ------------------------------------------------- disk-cache size cap
+
+def test_cache_size_cap_env_parsing(monkeypatch):
+    monkeypatch.delenv("FLEETSIM_CACHE_BYTES", raising=False)
+    assert service.cache_size_cap() == 0          # unset = unlimited
+    monkeypatch.setenv("FLEETSIM_CACHE_BYTES", "12345")
+    assert service.cache_size_cap() == 12345
+    monkeypatch.setenv("FLEETSIM_CACHE_BYTES", "lots")
+    assert service.cache_size_cap() == 0          # junk = unlimited
+    monkeypatch.setenv("FLEETSIM_CACHE_BYTES", "-5")
+    assert service.cache_size_cap() == 0
+
+
+def _spaced_bundles(tmp_path, n):
+    """n identical bundles with strictly increasing (old) mtimes."""
+    fs = _tiny_fs()
+    paths = []
+    for i in range(n):
+        p = service.save_bundle(tmp_path / f"b{i}.npz", fs, key=f"b{i}")
+        os.utime(p, (1000.0 + i, 1000.0 + i))
+        paths.append(p)
+    return paths
+
+
+def test_prune_cache_evicts_lru_and_counts(tmp_path):
+    paths = _spaced_bundles(tmp_path, 4)
+    size = paths[0].stat().st_size
+    before = service._EVICTIONS[0]
+    # room for ~2.5 bundles: the two OLDEST-mtime bundles must go
+    assert service.prune_cache(tmp_path, max_bytes=int(2.5 * size)) == 2
+    assert not paths[0].exists() and not paths[1].exists()
+    assert paths[2].exists() and paths[3].exists()
+    st = service.cache_stats(tmp_path)
+    assert st["bundles"] == 2
+    assert st["bytes"] <= int(2.5 * size)
+    assert st["evictions"] == before + 2
+    # already under the cap: a second prune is a no-op
+    assert service.prune_cache(tmp_path, max_bytes=int(2.5 * size)) == 0
+
+
+def test_prune_cache_unlimited_is_noop(tmp_path, monkeypatch):
+    monkeypatch.delenv("FLEETSIM_CACHE_BYTES", raising=False)
+    paths = _spaced_bundles(tmp_path, 3)
+    assert service.prune_cache(tmp_path) == 0     # env unset = unlimited
+    assert all(p.exists() for p in paths)
+
+
+def test_load_refreshes_lru_position(tmp_path):
+    """A read is a hit: load_bundle touches the bundle, so the LRU order
+    tracks ACCESS recency — the oldest-WRITTEN bundle survives a prune if
+    it was read recently."""
+    paths = _spaced_bundles(tmp_path, 3)
+    assert service.load_bundle(paths[0]) is not None   # mtime -> now
+    size = paths[0].stat().st_size
+    assert service.prune_cache(tmp_path, max_bytes=int(2.5 * size)) == 1
+    assert paths[0].exists()                    # freshly read: kept
+    assert not paths[1].exists()                # now the LRU: evicted
+    assert paths[2].exists()
+
+
+def test_save_bundle_prunes_under_env_cap(tmp_path, monkeypatch):
+    """Every writer keeps the shared cache bounded: with the env cap set,
+    publishing a new bundle evicts the stalest one in the same call."""
+    paths = _spaced_bundles(tmp_path, 2)
+    size = paths[0].stat().st_size
+    monkeypatch.setenv("FLEETSIM_CACHE_BYTES", str(int(2.5 * size)))
+    p_new = service.save_bundle(tmp_path / "b2.npz", _tiny_fs(), key="b2")
+    assert p_new.exists() and paths[1].exists()
+    assert not paths[0].exists()                # oldest evicted on publish
+    assert service.cache_stats(tmp_path)["bundles"] == 2
+    st = service.SweepService(cache_dir=tmp_path).stats()
+    assert st["bundle_cache"]["bundles"] == 2   # surfaced by the service

@@ -1,0 +1,70 @@
+"""benchmarks/sweep_server serve(): per-line fault isolation of the JSONL
+query stream — one poisoned line (broken JSON, unknown kind, rejected
+kwargs) must emit an {"error": ..., "line": N} record and never take down
+the valid queries behind it."""
+import argparse
+import json
+
+import pytest
+
+jax = pytest.importorskip("jax")
+
+from benchmarks.sweep_server import serve
+
+QUERIES = """\
+# capacity what-ifs (line numbers count comments and blanks too)
+{"kind": "dumbbell", "n_intra": 2, "n_inter": 2, "n_warm": 40, "n_meas": 10}
+{"kind": "dumbbell", "n_intra": 2,
+
+{"kind": "torus", "k": 3}
+{"kind": "dumbbell", "n_intra": 2, "n_inter": 2, "qcap_misspelled": 1}
+{"kind": "dumbbell", "n_intra": 2, "n_inter": 2, "seed": 1, "n_warm": 40, "n_meas": 10}
+"""
+
+
+def test_poisoned_lines_emit_errors_and_batch_drains(tmp_path):
+    qfile = tmp_path / "queries.jsonl"
+    qfile.write_text(QUERIES)
+    out = tmp_path / "out.jsonl"
+    args = argparse.Namespace(queries=str(qfile), out=str(out),
+                              cache_dir=str(tmp_path / "cache"),
+                              n_warm=40, n_meas=10)
+    assert serve(args) == 0
+    recs = [json.loads(l) for l in out.read_text().splitlines()]
+
+    errors = [r for r in recs if "error" in r]
+    results = [r for r in recs if "id" in r]
+    stats = [r for r in recs if "stats" in r]
+
+    # lines 3 (truncated JSON), 5 (unknown kind), 6 (kwarg the builder
+    # rejects) each produced exactly one error record tagged with the
+    # ORIGINATING line number; comments/blanks shifted nothing
+    assert sorted(e["line"] for e in errors) == [3, 5, 6]
+    for e in errors:
+        assert isinstance(e["error"], str) and e["error"]
+    assert any("torus" in e["error"] for e in errors)
+
+    # both valid queries (lines 2 and 7) still ran to completion
+    assert sorted(r["line"] for r in results) == [2, 7]
+    assert sorted(r["id"] for r in results) == [0, 1]
+    for r in results:
+        assert r["n_flows"] == 4
+        assert r["mean_rate"] > 0.0
+
+    # the stream still closes with the cache-stats record
+    assert len(stats) == 1
+    assert "scenario_cache" in stats[0]["stats"]
+
+
+def test_clean_stream_has_no_error_records(tmp_path):
+    qfile = tmp_path / "q.jsonl"
+    qfile.write_text('{"kind": "dumbbell", "n_intra": 2, "n_inter": 2, '
+                     '"n_warm": 40, "n_meas": 10}\n')
+    out = tmp_path / "out.jsonl"
+    args = argparse.Namespace(queries=str(qfile), out=str(out),
+                              cache_dir=str(tmp_path / "cache"),
+                              n_warm=40, n_meas=10)
+    assert serve(args) == 0
+    recs = [json.loads(l) for l in out.read_text().splitlines()]
+    assert not any("error" in r for r in recs)
+    assert [r.get("line") for r in recs if "id" in r] == [1]
