@@ -9,7 +9,10 @@ on either side are listed as such.  Points carrying a reliability config
 and loss-MD knobs under "rel") are only compared when those knobs match —
 otherwise the pair is reported incomparable, naming the changed knobs,
 instead of printing a ratio that would misread a configuration change as
-a performance delta.  `--all` prints the whole trajectory of
+a performance delta.  The same rule covers topology: multi-DC points
+record their shape under "topology" (k, n_dc, mesh, oversub) and a pair
+with differing — or one-sided ABSENT — topology keys is incomparable,
+never ratio'd.  `--all` prints the whole trajectory of
 one metric per config instead.
 
 Most lines are a report, but the points named in `_FLOORS` are a GATE:
@@ -61,6 +64,17 @@ def _rel_diff(ra, rb) -> str:
     return ", ".join(f"{k}: {ra.get(k)} -> {rb.get(k)}" for k in keys)
 
 
+def _topo_diff(ta, tb) -> str:
+    """Name the topology knobs (k / n_dc / mesh / oversub) that differ —
+    an ABSENT dict counts as different from any present one, so a point
+    that gained or lost its topology record is never ratio'd against the
+    other shape."""
+    if ta is None or tb is None:
+        return "topology keys " + ("added" if ta is None else "removed")
+    keys = [k for k in sorted(set(ta) | set(tb)) if ta.get(k) != tb.get(k)]
+    return ", ".join(f"{k}: {ta.get(k)} -> {tb.get(k)}" for k in keys)
+
+
 def compare_last_two(hist: list) -> list:
     """Print the per-config deltas; return the list of floor violations
     (empty when every gated point held its floor)."""
@@ -100,6 +114,14 @@ def compare_last_two(hist: list) -> list:
             print(f"  {name}: reliability config changed "
                   f"({_rel_diff(a.get('rel'), b.get('rel'))}) — "
                   "incomparable")
+            continue
+        if a.get("topology") != b.get("topology"):
+            # multi-DC points record their shape (k, n_dc, mesh, oversub);
+            # a point with different — or absent — topology keys measures
+            # a different network and must not be ratio'd
+            print(f"  {name}: topology changed "
+                  f"({_topo_diff(a.get('topology'), b.get('topology'))}) "
+                  "— incomparable")
             continue
         old, new = a["flow_epochs_per_s"], b["flow_epochs_per_s"]
         if old < 1.0:

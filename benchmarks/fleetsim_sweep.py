@@ -52,6 +52,14 @@ Acceptance targets:
     `--block` overrides the Pallas flow-block size (default: picked from
     n_flows).  The smoke fast-path guard also covers the k=4 fat-tree
     layout point so the compressed backend cannot silently regress.
+  * ISSUE 10: a multi-DC point — the 3-DC k=4 ring
+    (scenarios.multi_dc_spec) sharded DC-major onto 3 forced host devices
+    so shard == datacenter, with the ppermute neighbor halo exchange.
+    Its entry records the topology knobs (k, n_dc, mesh, oversub — keys
+    compare.py requires to MATCH before printing a ratio), the boundary
+    size and BOTH payload-shrink factors; the boundary guard
+    (MIN_PSUM_SHRINK["multi_dc"]) and the neighbor-exchange shrink guard
+    are fatal in smoke mode.
 
 Reports: jitted single-scenario rate (compile time separated out), the same
 1k-flow scenario's steady utilization/fairness as a sanity check, the
@@ -193,8 +201,11 @@ MIN_SHARD_FLOWS = 5_000
 # boundary-psum payload-shrink guard, per scenario kind: the dumbbell's
 # boundary is 2-3 links (>= 10x shrink), while a fat-tree's boundary is
 # structurally the agg/core/WAN cut plus the straddling sender uplinks —
-# a ~2x shrink at k=8 (the tiered plan still beats the untiered ~1.26x)
-MIN_PSUM_SHRINK = {"dumbbell": 10.0, "fat_tree": 1.5}
+# a ~2x shrink at k=8 (the tiered plan still beats the untiered ~1.26x).
+# The multi-DC DC-major plan's boundary is the DCI attach tier only (12
+# links on the 3-DC k=4 ring, independent of flow count), so it warrants
+# a much tighter floor.
+MIN_PSUM_SHRINK = {"dumbbell": 10.0, "fat_tree": 1.5, "multi_dc": 5.0}
 
 FAT_TREE_PATHS = 8            # ECMP path-set cap for the fat-tree points
 
@@ -363,6 +374,104 @@ print(json.dumps({{"warm_s": best, "n_links": int(sf.plan.n_links),
     if out.returncode != 0:
         raise RuntimeError(out.stderr[-2000:])
     return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+# 3-DC smoke point: topology knobs ride along in the entry so compare.py
+# can refuse cross-topology ratios (absent or changed keys -> incomparable)
+_MULTI_DC = {"k": 4, "n_dc": 3, "mesh": "ring", "oversub": 1.0}
+
+
+def _multi_dc_point(mode: str, points: list) -> None:
+    """The N-DC smoke point: a 3-DC k=4 ring sharded DC-major onto 3
+    forced host devices (shard == datacenter), ppermute neighbor halo
+    exchange where the plan proves it legal.  Records the boundary
+    payload plus BOTH shrink factors — full-buffer/psum-tail and
+    psum-tail/ppermute-payload — and fails the run when either falls
+    under its floor (MIN_PSUM_SHRINK["multi_dc"] for the boundary cut;
+    the neighbor exchange must strictly shrink the tail or the DC-major
+    plan has stopped matching the topology)."""
+    from repro.fleetsim import service
+    from repro.scenarios import fingerprint, multi_dc_spec, to_fleetsim
+    n = 15_000 if mode == "smoke" else 60_000
+    ne = 300 if mode == "smoke" else 200
+    key = fingerprint({"bench_scenario": "fleetsim_sweep",
+                       "kind": "multi_dc", "n_flows": n, **_MULTI_DC},
+                      service.CACHE_VERSION)
+    path = service.bundle_path(key)
+    if not path.exists():
+        t0 = time.time()
+        fs = to_fleetsim(multi_dc_spec(n_flows=n, n_paths=4, seed=1,
+                                       **_MULTI_DC))
+        path = service.publish_scenario(fs, key)
+        print(f"   multi_dc spec build {time.time() - t0:.1f}s")
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count={_MULTI_DC['n_dc']} "
+    + os.environ.get("XLA_FLAGS", ""))
+import json, time, jax
+from repro.fleetsim import service
+from repro.fleetsim.shard import shard_scenario, steady_state_prepared
+fs = service.load_bundle({str(path)!r})
+assert fs is not None, "scenario bundle missing or corrupt: " + {str(path)!r}
+sf = shard_scenario(fs.net._replace(layout=None), fs.params,
+                    is_inter=fs.is_inter, lb=fs.lb,
+                    link_tier=fs.link_tier, link_dc=fs.link_dc,
+                    exchange="auto", seed=fs.seed)
+kw = dict(n_warm={ne} - 10, n_meas=10)
+_, r = steady_state_prepared(sf, **kw)
+jax.block_until_ready(r)
+best = float("inf")
+for _ in range(2):
+    t0 = time.time()
+    _, r = steady_state_prepared(sf, **kw)
+    jax.block_until_ready(r)
+    best = min(best, time.time() - t0)
+print(json.dumps({{
+    "warm_s": best, "n_links": int(sf.plan.n_links),
+    "n_boundary": int(sf.plan.n_boundary),
+    "nbr_width": None if sf.nbr is None else int(sf.nbr.shape[2])}}))
+"""
+    env = dict(os.environ)
+    src = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    try:
+        out = subprocess.run([sys.executable, "-c", code],
+                             capture_output=True, text=True, timeout=1800,
+                             env=env)
+        if out.returncode != 0:
+            raise RuntimeError(out.stderr[-2000:])
+        res = json.loads(out.stdout.strip().splitlines()[-1])
+    except (RuntimeError, subprocess.TimeoutExpired, OSError,
+            json.JSONDecodeError, KeyError, IndexError) as e:
+        if mode == "smoke":
+            raise SystemExit("multi_dc smoke point failed: " + str(e)[:500])
+        print("   multi_dc point failed:", str(e)[:200])
+        return
+    full_payload = res["n_links"] + 1
+    psum_shrink = full_payload / max(res["n_boundary"], 1)
+    width = res["nbr_width"]
+    nbr_shrink = (res["n_boundary"] / (2 * width)) if width else None
+    rec = _point(n, ne, variant=f"multi_dc_k{_MULTI_DC['k']}",
+                 path="sharded3-nbr", warm_s=res["warm_s"],
+                 topology=dict(_MULTI_DC),
+                 n_links=res["n_links"], n_boundary=res["n_boundary"],
+                 exchange="nbr" if width else "psum",
+                 psum_payload_shrink=round(psum_shrink, 1),
+                 ppermute_payload_shrink=(None if nbr_shrink is None
+                                          else round(nbr_shrink, 2)))
+    points.append(rec)
+    if psum_shrink < MIN_PSUM_SHRINK["multi_dc"]:
+        raise SystemExit(
+            f"multi_dc boundary payload guard failed: {res['n_boundary']} "
+            f"boundary links vs {full_payload} full buffer "
+            f"(shrink {psum_shrink:.1f}x < "
+            f"{MIN_PSUM_SHRINK['multi_dc']}x)")
+    if nbr_shrink is None or nbr_shrink <= 1.0:
+        raise SystemExit(
+            "multi_dc neighbor-exchange guard failed: the DC-major plan "
+            f"no longer yields a legal shrinking ppermute exchange "
+            f"(width={width}, boundary={res['n_boundary']})")
 
 
 # layout-path epoch counts per size (reference runs use ~1/4 of these so
@@ -723,6 +832,11 @@ def scaling_curve(mode: str = "full", *, backend: str = "auto",
                 (("sharded2-local", True), ("sharded2", False)))
     _sharded_points(ft_n, ft_ne, mode, points, speedups, kind="fat_tree",
                     k=ft_k, variant=variant, paths=ft_paths)
+
+    # multi-DC point (the N-datacenter topology layer): 3-DC k=4 ring,
+    # one shard per datacenter under the DC-major plan, ppermute neighbor
+    # halo exchange — both payload-shrink guards are fatal in smoke
+    _multi_dc_point(mode, points)
 
     # loss-recovery grid (ISSUE 6): dynamic EC + NACK state machine under
     # vmap — its reliability config rides along in the entry so config

@@ -137,7 +137,9 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
               axis_name: Optional[str] = None, backend: str = "auto",
               halo: Optional[int] = None, block: Optional[int] = None,
               churn_map: Optional[jnp.ndarray] = None,
-              churn_n: Optional[int] = None):
+              churn_n: Optional[int] = None,
+              nbr: Optional[jnp.ndarray] = None,
+              n_shards: Optional[int] = None):
     """Build the per-epoch transition: state -> (state', goodput).
 
     `lb=None` freezes the split at its initial value (static spraying) and
@@ -157,7 +159,9 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
     `axis_name` names a shard_map mesh axis the flow dimension is sharded
     over (per-epoch reduction of the partial link loads — repro.fleetsim
     .shard); `halo` shrinks that reduction to the trailing boundary links
-    of a locality-relabeled link id space (links.halo_exchange);
+    of a locality-relabeled link id space (links.halo_exchange), and
+    `nbr`/`n_shards` swap the boundary psum for the ppermute neighbor
+    exchange when the plan proved every boundary link adjacent-pair-only;
     `backend` picks the link-aggregation implementation (repro.fleetsim
     .links.LOAD_BACKENDS); `block` overrides the Pallas backends'
     flow-block size (None picks it from n_flows).
@@ -209,7 +213,8 @@ def make_step(net: L.FluidNet, params: FleetParams, scheme: str = "uno",
             wire = rate + rtx
         le = L.link_epoch(net_e, wire, split, state.q_phys, state.q_phantom,
                           axis_name=axis_name, backend=backend, halo=halo,
-                          block=block, with_loss=rel is not None)
+                          block=block, with_loss=rel is not None,
+                          nbr=nbr, n_shards=n_shards)
         q_phys, q_phantom = le.q_phys, le.q_phantom
         sub_frac = le.sub_frac
         if single:   # split-weighted sums collapse to one product per flow
@@ -492,11 +497,12 @@ def simulate(net: L.FluidNet, params: FleetParams, *, n_epochs: int,
 @functools.partial(jax.jit,
                    static_argnames=("scheme", "n_warm", "n_meas", "backend",
                                     "axis_name", "halo", "block", "churn_n",
-                                    "unroll"))
+                                    "unroll", "n_shards"))
 def steady_state_core(net, params, state0, is_inter, scheme, n_warm, n_meas,
                       lb=None, churn=None, backend="auto", axis_name=None,
                       halo=None, block=None, churn_map=None, churn_n=None,
-                      unroll=1, rel=None, fault=None):
+                      unroll=1, rel=None, fault=None, nbr=None,
+                      n_shards=None):
     """Warm up, then return (final_state, mean goodput over n_meas epochs).
 
     The measurement pass accumulates a running sum in the carry instead of
@@ -512,7 +518,8 @@ def steady_state_core(net, params, state0, is_inter, scheme, n_warm, n_meas,
     step = make_step(net, params, scheme, is_inter, lb=lb, churn=churn,
                      rel=rel, fault=fault, backend=backend,
                      axis_name=axis_name, halo=halo, block=block,
-                     churn_map=churn_map, churn_n=churn_n)
+                     churn_map=churn_map, churn_n=churn_n, nbr=nbr,
+                     n_shards=n_shards)
     state, _ = jax.lax.scan(lambda s, x: (step(s, x)[0], None),
                             state0, None, length=n_warm, unroll=unroll)
 

@@ -610,7 +610,9 @@ def _resolve_backend(net: FluidNet, backend: str) -> str:
 
 
 def halo_exchange(buf: jnp.ndarray, n_links: int, axis_name: str,
-                  halo: Optional[int]) -> jnp.ndarray:
+                  halo: Optional[int],
+                  nbr: Optional[jnp.ndarray] = None,
+                  n_shards: Optional[int] = None) -> jnp.ndarray:
     """Cross-shard reduction of a partial (n_links + 1,) link buffer.
 
     `halo=None` psums the whole buffer (every link potentially shared — the
@@ -619,7 +621,33 @@ def halo_exchange(buf: jnp.ndarray, n_links: int, axis_name: str,
     boundary links touched by more than one shard, everything below them is
     shard-private and already globally correct, and the scratch slot is
     never read.  `halo=0` means no link is shared — no collective at all.
+
+    `nbr` switches the boundary reduction from the all-to-all psum to a
+    ppermute NEIGHBOR exchange — legal when every boundary link is touched
+    by exactly one RING-ADJACENT shard pair (a DC-major plan on a ring /
+    full-mesh multi-DC topology; repro.fleetsim.shard.neighbor_halo builds
+    the operand and checks legality).  `nbr` is this shard's (2, P) slice
+    of the stacked (n_shards, 2, P) index table: row 0 lists the boundary
+    links shared with the RIGHT neighbor (pair group p on shard p), row 1
+    those shared with the LEFT (group p-1), both padded with `n_links`
+    (the scratch slot).  Group p's positions agree between shard p's row 0
+    and shard p+1's row 1 — both are built from one global group list — so
+    each shard sends two (P,) buffers and adds exactly its partner's
+    partials.  Every touched link then carries the full two-shard sum
+    (bit-equal to the psum: the other shards' psum contributions are exact
+    +0.0), links of OTHER pair groups stay stale, and no local flow reads
+    them — the same staleness contract as the psum tail.  Requires
+    `n_shards` (static) for the permutation tables.
     """
+    if nbr is not None:
+        if n_shards is None:
+            raise ValueError("neighbor halo exchange needs n_shards")
+        idx_r, idx_l = nbr[0], nbr[1]
+        to_left = [(p, (p - 1) % n_shards) for p in range(n_shards)]
+        to_right = [(p, (p + 1) % n_shards) for p in range(n_shards)]
+        from_right = jax.lax.ppermute(buf[idx_l], axis_name, to_left)
+        from_left = jax.lax.ppermute(buf[idx_r], axis_name, to_right)
+        return buf.at[idx_r].add(from_right).at[idx_l].add(from_left)
     if halo is None:
         return jax.lax.psum(buf, axis_name)
     if halo == 0:
@@ -634,7 +662,9 @@ def offered_load(net: FluidNet, rates: jnp.ndarray,
                  axis_name: Optional[str] = None,
                  backend: str = "auto",
                  halo: Optional[int] = None,
-                 block: Optional[int] = None) -> jnp.ndarray:
+                 block: Optional[int] = None,
+                 nbr: Optional[jnp.ndarray] = None,
+                 n_shards: Optional[int] = None) -> jnp.ndarray:
     """(n_links,) aggregate arrival rate from per-flow send rates.
 
     With a split matrix, flow i contributes rates[i] * split[i, p] to every
@@ -645,7 +675,9 @@ def offered_load(net: FluidNet, rates: jnp.ndarray,
     there).  `axis_name` reduces the per-shard partial loads across a
     sharded flow axis (repro.fleetsim.shard): the full buffer when
     `halo=None`, only the trailing `halo` boundary links otherwise (see
-    `halo_exchange`).  On a locality-sharded run the returned loads are
+    `halo_exchange`; `nbr`/`n_shards` switch the boundary reduction to
+    the ppermute neighbor exchange).  On a locality-sharded run the
+    returned loads are
     globally correct ONLY on this shard's own links plus the boundary
     tail — exactly the links its flows can read.  `backend` picks the
     aggregation implementation (see module docstring); "auto" uses the
@@ -685,7 +717,8 @@ def offered_load(net: FluidNet, rates: jnp.ndarray,
     else:
         buf = _offered_load_reference(net, rates, split)
     if axis_name is not None:
-        buf = halo_exchange(buf, net.n_links, axis_name, halo)
+        buf = halo_exchange(buf, net.n_links, axis_name, halo,
+                            nbr=nbr, n_shards=n_shards)
     return buf[:net.n_links]
 
 
@@ -825,7 +858,9 @@ def link_epoch(net: FluidNet, rates: jnp.ndarray, split: jnp.ndarray,
                backend: str = "auto",
                halo: Optional[int] = None,
                block: Optional[int] = None,
-               with_loss: bool = False) -> LinkEpoch:
+               with_loss: bool = False,
+               nbr: Optional[jnp.ndarray] = None,
+               n_shards: Optional[int] = None) -> LinkEpoch:
     """One epoch of link physics in one call: offered load -> queue step ->
     mark probabilities -> the three link->flow gathers.
 
@@ -859,7 +894,8 @@ def link_epoch(net: FluidNet, rates: jnp.ndarray, split: jnp.ndarray,
     q_prev = q_phys
     rb = _resolve_backend(net, backend)
     load = offered_load(net, rates, split, axis_name=axis_name,
-                        backend=rb, halo=halo, block=block)
+                        backend=rb, halo=halo, block=block,
+                        nbr=nbr, n_shards=n_shards)
     q_phys, q_phantom = step_queues(net, q_phys, q_phantom, load)
     p_link = mark_prob(net, q_phys, q_phantom)
     compressed = rb in ("pt", "pt_pallas")

@@ -74,7 +74,11 @@ from repro.fleetsim.state import ChurnParams, FleetParams, LbParams
 # v2: Scenario grew the fault axis (FaultSchedule family in bundles,
 # `faults` in every spec fingerprint) and RelParams grew the optional
 # ladder fields.
-CACHE_VERSION = 2
+# v3: the N-datacenter topology layer — FleetScenario grew `link_dc`,
+# the "multi_dc" builder joined the registry, and `_home_links` switched
+# to per-flow hub counting (shard plans, and thus any cached plan-derived
+# payloads, differ from v2 for multipath scenarios).
+CACHE_VERSION = 3
 
 _META_KEY = "__meta__"
 
@@ -176,8 +180,10 @@ def scenario_key(kind: str, **kwargs) -> str:
 
 
 def _builder(kind: str):
-    from repro.scenarios import dumbbell_scenario, fat_tree_spec
-    builders = {"dumbbell": dumbbell_scenario, "fat_tree": fat_tree_spec}
+    from repro.scenarios import (dumbbell_scenario, fat_tree_spec,
+                                 multi_dc_spec)
+    builders = {"dumbbell": dumbbell_scenario, "fat_tree": fat_tree_spec,
+                "multi_dc": multi_dc_spec}
     if kind not in builders:
         raise ValueError(f"unknown scenario kind {kind!r}; "
                          f"expected one of {sorted(builders)}")
@@ -193,7 +199,7 @@ def save_bundle(path, fs, *, key: str = "") -> pathlib.Path:
     over `path`, so concurrent writers (two benchmark runs racing on one
     host) and readers never observe a partial bundle.  None-valued
     optional members (lb/churn/rel/fault/p_loss/is_inter/link_tier/
-    layout) are simply absent — presence is part of the format, and the
+    link_dc/layout) are simply absent — presence is part of the format, and the
     loader reconstructs the same Nones; the rule applies per FIELD inside
     a family too (a ladder-less RelParams stores no ladder arrays).
     """
@@ -215,6 +221,8 @@ def save_bundle(path, fs, *, key: str = "") -> pathlib.Path:
         arrays["is_inter"] = np.asarray(fs.is_inter)
     if fs.link_tier is not None:
         arrays["link_tier"] = np.asarray(fs.link_tier)
+    if fs.link_dc is not None:
+        arrays["link_dc"] = np.asarray(fs.link_dc)
     arrays[_META_KEY] = np.asarray(json.dumps(
         {"version": CACHE_VERSION, "key": key, "seed": int(fs.seed)}))
     path.parent.mkdir(parents=True, exist_ok=True)
@@ -283,6 +291,8 @@ def load_bundle(path):
                           if "is_inter" in z else None),
                 link_tier=(np.asarray(z["link_tier"])
                            if "link_tier" in z else None),
+                link_dc=(np.asarray(z["link_dc"])
+                         if "link_dc" in z else None),
                 seed=int(meta.get("seed", 0)))
         # a read is a cache hit: refresh mtime so prune_cache's
         # LRU-by-mtime order tracks ACCESS recency, not write recency

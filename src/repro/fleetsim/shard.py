@@ -124,6 +124,46 @@ class ShardedFleet(NamedTuple):
     own: jnp.ndarray              # (S, n_links) link-ownership masks
     rel: Optional[RelParams] = None   # flow axis permuted + padded
     fault: Optional[FaultSchedule] = None  # link ids relabeled via old2new
+    nbr: Optional[jnp.ndarray] = None  # (S, 2, P) neighbor-exchange index
+    # table (links.halo_exchange nbr mode); None -> boundary psum fallback
+
+
+def neighbor_halo(plan) -> Optional[np.ndarray]:
+    """(S, 2, P) ppermute halo-exchange index table, or None when illegal.
+
+    Legal iff every boundary link is touched by exactly one RING-ADJACENT
+    shard pair {p, (p+1) % S} (ShardPlan.boundary_pairs) — the DC-major
+    guarantee on ring/full multi-DC meshes, and trivially true on any
+    2-shard mesh.  Pair group p (shared by shards p and p+1) is one global
+    link list; shard p's row 0 is group p (its RIGHT group), row 1 group
+    p-1 (LEFT), both padded to the widest group with `n_links` (the
+    scratch slot).  Links with 3+ touchers (a hub fanning to many
+    spokes) or a non-adjacent toucher pair (a ring DC pinned to both
+    its neighbors d-1 / d+1 at S >= 4) make this return None — the psum
+    path is the documented fallback there (see the mesh-by-mesh legality
+    notes in repro.scenarios.multi_dc).
+    """
+    bp = getattr(plan, "boundary_pairs", None)
+    S = plan.n_shards
+    if bp is None or S < 2 or plan.n_boundary == 0:
+        return None
+    a = bp[:, 0].astype(np.int64)
+    b = bp[:, 1].astype(np.int64)
+    if np.any(a < 0):
+        return None                       # 3+ touchers somewhere
+    g = np.where((b - a) % S == 1, a,
+                 np.where((a - b) % S == 1, b, -1))
+    if np.any(g < 0):
+        return None                       # non-adjacent pair
+    base = plan.n_links - plan.n_boundary
+    groups = [base + np.flatnonzero(g == gg) for gg in range(S)]
+    width = max(gr.shape[0] for gr in groups)
+    nbr = np.full((S, 2, width), plan.n_links, np.int32)
+    for p in range(S):
+        r, l = groups[p], groups[(p - 1) % S]
+        nbr[p, 0, :r.shape[0]] = r
+        nbr[p, 1, :l.shape[0]] = l
+    return nbr
 
 
 def _take_links(net: L.FluidNet, new2old: jnp.ndarray) -> L.FluidNet:
@@ -143,7 +183,9 @@ def shard_scenario(net: L.FluidNet, params: FleetParams, *,
                    rel: Optional[RelParams] = None,
                    fault: Optional[FaultSchedule] = None,
                    mesh=None, locality: bool = True,
-                   plan=None, link_tier=None,
+                   plan=None, link_tier=None, link_dc=None,
+                   sender_private: Optional[bool] = None,
+                   exchange: str = "auto", seed: int = 0,
                    path_table="auto") -> ShardedFleet:
     """Compile (net, params, ...) against a locality ShardPlan.
 
@@ -151,9 +193,21 @@ def shard_scenario(net: L.FluidNet, params: FleetParams, *,
     link buffer exchanged every epoch) — kept for A/B benchmarking.  An
     explicit `plan` overrides both.  `link_tier` (a (n_links,) locality
     array, e.g. FleetScenario.link_tier) feeds the planner's tier score
-    on multi-tier topologies like the fat tree.  `rel` (RelParams) is
+    on multi-tier topologies like the fat tree; `link_dc` (e.g.
+    FleetScenario.link_dc) its DC-major shard order, and
+    `sender_private` the first-hop rehoming pass (default: on exactly
+    when `link_dc` is given).  `seed` fixes the planner's deal/split
+    draws.  `rel` (RelParams) is
     permuted like the other flow-axis parameter families; padding rows
     are force-disabled so the reliability machine stays inert on them.
+
+    `exchange` picks the boundary collective: "auto" uses the ppermute
+    NEIGHBOR exchange whenever the plan proves every boundary link
+    adjacent-pair-only (`neighbor_halo`) and falls back to the psum tail
+    otherwise; "psum" forces the fallback; "nbr" demands the neighbor
+    exchange and raises when the plan cannot support it.  In neighbor
+    mode each boundary link's final queue state is reassembled from its
+    FIRST toucher shard (both touchers hold the full two-shard sum).
 
     `path_table` controls the per-shard compressed PathTables: "auto"
     attaches them only when EVERY shard clears links.PT_MIN_COMPRESS
@@ -164,14 +218,20 @@ def shard_scenario(net: L.FluidNet, params: FleetParams, *,
     so the stacked operand is rectangular.
     """
     from repro.scenarios.compile_fleetsim import plan_shards
+    if exchange not in ("auto", "psum", "nbr"):
+        raise ValueError(f"unknown boundary exchange {exchange!r}")
     mesh = mesh if mesh is not None else flow_mesh()
     n_dev = mesh.devices.size
     n_real = params.bdp.shape[0]
     routes3 = np.asarray(net.routes if net.routes.ndim == 3
                          else net.routes[:, None, :])
+    if sender_private is None:
+        sender_private = link_dc is not None
     if plan is None:
         plan = (plan_shards(routes3, net.n_links, n_dev,
-                            link_tier=link_tier) if locality
+                            link_tier=link_tier, seed=seed,
+                            link_dc=link_dc,
+                            sender_private=sender_private) if locality
                 else _contiguous_plan(n_real, net.n_links, n_dev))
     if plan.n_shards != n_dev or plan.n_real != n_real:
         raise ValueError(
@@ -245,17 +305,35 @@ def shard_scenario(net: L.FluidNet, params: FleetParams, *,
                               mean_off=churn.mean_off[gc])
         cmap = gc.reshape(plan.n_shards, rows).astype(jnp.int32)
 
-    # link-ownership masks: shard s owns its private range; shard 0 also
-    # claims the boundary tail (identical on every shard after the halo
-    # exchange) and any untouched links (identically zero everywhere)
+    nbr = None
+    if exchange != "psum":
+        nbr = neighbor_halo(plan)
+        if nbr is None and exchange == "nbr":
+            raise ValueError(
+                "exchange='nbr' but the plan's boundary links are not all "
+                "ring-adjacent shard pairs (neighbor_halo); hub-spoke "
+                "relays and straddled multi-shard hubs need the psum path")
+
+    # link-ownership masks: shard s owns its private range plus (on shard
+    # 0) any untouched links (identically zero everywhere).  The boundary
+    # tail: under the psum exchange it is identical on every shard, so
+    # shard 0 claims it wholesale; under the neighbor exchange only a
+    # link's two touchers hold the full sum, so each boundary link is
+    # credited to its FIRST toucher.
     iota = np.arange(plan.n_links)
     own = (iota >= plan.owner_ptr[:-1, None]) & \
         (iota < plan.owner_ptr[1:, None])
-    own[0] |= iota >= plan.n_links - plan.n_boundary
+    base = plan.n_links - plan.n_boundary
+    if nbr is None:
+        own[0] |= iota >= base
+    else:
+        own[plan.boundary_pairs[:, 0],
+            base + np.arange(plan.n_boundary)] = True
     return ShardedFleet(plan=plan, mesh=mesh, net=net_p, layouts=layouts,
                         params=params_p, is_inter=ii_p, lb=lb_p,
                         churn=churn_p, churn_map=cmap,
-                        own=jnp.asarray(own), rel=rel_p, fault=fault_p)
+                        own=jnp.asarray(own), rel=rel_p, fault=fault_p,
+                        nbr=None if nbr is None else jnp.asarray(nbr))
 
 
 def _net_spec(has_ploss: bool = False) -> L.FluidNet:
@@ -292,7 +370,8 @@ def _exec_cache_size() -> int:
 
 def _compiled_impl(mesh, scheme, n_warm, n_meas, backend, halo, unroll,
                    churn_n, has_lb, has_churn, has_rel, has_ploss=False,
-                   has_pt=False, has_fault=False, has_ladder=False):
+                   has_pt=False, has_fault=False, has_ladder=False,
+                   has_nbr=False):
     """Build the jitted shard_map'd steady-state executable (cached via
     `_compiled`).
 
@@ -326,14 +405,16 @@ def _compiled_impl(mesh, scheme, n_warm, n_meas, backend, halo, unroll,
         cmap_spec = P(AXIS)
 
     def local(net_l, lay_l, params_l, state0_l, ii_l, lb_l, churn_l,
-              cmap_l, own_l, rel_l, fault_l):
+              cmap_l, own_l, rel_l, fault_l, nbr_l):
         net_l = net_l._replace(layout=jax.tree.map(lambda a: a[0], lay_l))
         final, rates = steady_state_core(
             net_l, params_l, state0_l, ii_l, scheme=scheme, n_warm=n_warm,
             n_meas=n_meas, lb=lb_l, churn=churn_l, backend=backend,
             axis_name=AXIS, halo=halo,
             churn_map=None if cmap_l is None else cmap_l[0],
-            churn_n=churn_n, unroll=unroll, rel=rel_l, fault=fault_l)
+            churn_n=churn_n, unroll=unroll, rel=rel_l, fault=fault_l,
+            nbr=nbr_l[0] if has_nbr else None,
+            n_shards=mesh.devices.size if has_nbr else None)
         # reassemble globally-correct link state from each link's owner
         own = own_l[0]
         return final._replace(
@@ -346,7 +427,8 @@ def _compiled_impl(mesh, scheme, n_warm, n_meas, backend, halo, unroll,
                   in_specs=(_net_spec(has_ploss), lay_spec, param_spec,
                             _state_spec(has_rel, has_fault), P(AXIS),
                             lb_spec, churn_spec, cmap_spec, P(AXIS),
-                            rel_spec, fault_spec),
+                            rel_spec, fault_spec,
+                            P(AXIS) if has_nbr else None),
                   out_specs=(_state_spec(has_rel, has_fault), P(AXIS)),
                   check_vma=False)
     return jax.jit(f, donate_argnums=(3,))
@@ -452,10 +534,11 @@ def steady_state_prepared(sf: ShardedFleet, *, n_warm: int, n_meas: int,
                     sf.rel is not None, net.p_loss is not None,
                     sf.layouts.path_table is not None,
                     sf.fault is not None,
-                    sf.rel is not None and sf.rel.ladder_k is not None)
+                    sf.rel is not None and sf.rel.ladder_k is not None,
+                    sf.nbr is not None)
     final, rates = run(net, sf.layouts, sf.params, _unalias(state0),
                        sf.is_inter, sf.lb, sf.churn, sf.churn_map, sf.own,
-                       sf.rel, sf.fault)
+                       sf.rel, sf.fault, sf.nbr)
 
     inv = jnp.asarray(plan.inverse_flow)
     return (_permute_state(final, inv, jnp.asarray(plan.old2new)),
@@ -472,7 +555,9 @@ def steady_state_sharded(net: L.FluidNet, params: FleetParams, *,
                          state0: Optional[FleetState] = None,
                          mesh=None, backend: str = "auto",
                          locality: bool = True, plan=None,
-                         link_tier=None, path_table="auto",
+                         link_tier=None, link_dc=None,
+                         sender_private: Optional[bool] = None,
+                         exchange: str = "auto", path_table="auto",
                          unroll: int = 1, seed: int = 0):
     """`cc.steady_state` with the flow axis sharded over `mesh` (default:
     all local devices) under a locality ShardPlan — one-shot convenience
@@ -483,8 +568,9 @@ def steady_state_sharded(net: L.FluidNet, params: FleetParams, *,
     executable itself is cached either way)."""
     sf = shard_scenario(net, params, is_inter=is_inter, lb=lb, churn=churn,
                         rel=rel, fault=fault, mesh=mesh, locality=locality,
-                        plan=plan, link_tier=link_tier,
-                        path_table=path_table)
+                        plan=plan, link_tier=link_tier, link_dc=link_dc,
+                        sender_private=sender_private, exchange=exchange,
+                        seed=seed, path_table=path_table)
     return steady_state_prepared(sf, n_warm=n_warm, n_meas=n_meas,
                                  scheme=scheme, backend=backend,
                                  unroll=unroll, state0=state0, seed=seed)

@@ -144,20 +144,64 @@ class Dumbbell(Net):
 
 # ----------------------------------------------------------------- fat-tree
 
-class TwoDCFatTree(Net):
-    """Two k-ary fat-trees joined by 2 border switches x `n_wan` links."""
+def wan_mesh_pairs(n_dc: int, mesh: str) -> tuple:
+    """Unordered DC pairs joined by a WAN link group under `mesh`.
 
-    def __init__(self, k: int = 8, n_wan: int = 8, rate: float = RATE_100G,
+    ring      — i <-> i+1 around the circle (for n_dc <= 3 this equals full)
+    full      — every pair
+    hubspoke  — DC 0 is the hub; every spoke attaches only to it
+    """
+    if n_dc < 2:
+        raise ValueError("need at least two datacenters")
+    if mesh == "full":
+        return tuple((a, b) for a in range(n_dc) for b in range(a + 1, n_dc))
+    if mesh == "ring":
+        if n_dc == 2:
+            return ((0, 1),)
+        return tuple(sorted(tuple(sorted((i, (i + 1) % n_dc)))
+                            for i in range(n_dc)))
+    if mesh == "hubspoke":
+        return tuple((0, b) for b in range(1, n_dc))
+    raise ValueError(f"unknown WAN mesh {mesh!r}")
+
+
+class MultiDCFatTree(Net):
+    """`n_dc` k-ary fat-trees, each behind a dedicated DCI (border) switch,
+    joined by a WAN mesh of `n_wan`-link groups per connected DC pair.
+
+    The DCI tier is the per-DC border switch plus its core-attach links;
+    `oversub` divides the attach-link rate (oversub=1.0 keeps attach links
+    at line rate, matching the historical two-DC topology bit-for-bit).
+    WAN meshes: "full" (every pair), "ring" (i <-> i+1), "hubspoke"
+    (DC 0 relays for all spokes).  Non-adjacent traffic transits
+    intermediate border switches WAN-hop by WAN-hop without re-entering
+    the intermediate DC's core.
+    """
+
+    def __init__(self, k: int = 8, n_dc: int = 2, mesh: str = "full",
+                 oversub: float = 1.0, n_wan: int = 8,
+                 rate: float = RATE_100G,
                  qcap: int = 1 * MIB, wan_qcap: Optional[int] = None,
                  intra_rtt: float = 14 * US, inter_rtt: float = 2 * MS,
                  seed: int = 0, max_paths: int = 24,
                  wan_rate: Optional[float] = None):
         self.k = k
         half = k // 2
-        self.hosts_per_dc = k * half * half          # 8*4*4 = 128
+        self.hosts_per_dc = k * half * half          # k=8: 8*4*4 = 128
+        if oversub < 1.0:
+            raise ValueError("oversub must be >= 1.0")
         sim = Simulator(seed)
-        super().__init__(sim, 2 * self.hosts_per_dc, intra_rtt, inter_rtt, rate)
+        super().__init__(sim, n_dc * self.hosts_per_dc,
+                         intra_rtt, inter_rtt, rate)
+        self.n_dc = n_dc
+        self.mesh = mesh
+        self.oversub = oversub
         self.max_paths = max_paths
+        self.wan_pairs = wan_mesh_pairs(n_dc, mesh)
+        self._adj = {a: set() for a in range(n_dc)}
+        for a, b in self.wan_pairs:
+            self._adj[a].add(b)
+            self._adj[b].add(a)
         self._prng = random.Random(seed ^ 0xDEADBEEF)
 
         # Per-hop propagation so the server-server RTT lands on intra_rtt:
@@ -167,9 +211,10 @@ class TwoDCFatTree(Net):
         wan_d = (inter_rtt - intra_rtt) / 2.0        # one-way WAN propagation
         wq = wan_qcap if wan_qcap is not None else qcap
         wr = wan_rate if wan_rate is not None else rate
+        attach_rate = rate / oversub                 # DCI tier oversubscription
 
         L = self._mk_link
-        for dc in range(2):
+        for dc in range(n_dc):
             for p in range(k):
                 for e in range(half):
                     for h in range(half):
@@ -185,15 +230,16 @@ class TwoDCFatTree(Net):
                         L(f"d{dc}p{p}a{a}->c{ci}", rate, d, qcap)
                         L(f"d{dc}c{ci}->p{p}a{a}", rate, d, qcap)
             for ci in range(half * half):
-                L(f"d{dc}c{ci}->B", rate, d, qcap)
-                L(f"d{dc}B->c{ci}", rate, d, qcap)
-        for w in range(n_wan):
-            a = L(f"B0->B1.{w}", wr, wan_d, wq)
-            b = L(f"B1->B0.{w}", wr, wan_d, wq)
-            self.wan_links += [a, b]
+                L(f"d{dc}c{ci}->B", attach_rate, d, qcap)
+                L(f"d{dc}B->c{ci}", attach_rate, d, qcap)
+        for pa, pb in self.wan_pairs:
+            for w in range(n_wan):
+                a = L(f"B{pa}->B{pb}.{w}", wr, wan_d, wq)
+                b = L(f"B{pb}->B{pa}.{w}", wr, wan_d, wq)
+                self.wan_links += [a, b]
         self.n_wan = n_wan
 
-    # host ids: dc*128 + pod*16 + edge*4 + h
+    # host ids: dc*hosts_per_dc + pod*(k/2)^2 + edge*(k/2) + h
     def host_id(self, dc, pod, edge, h) -> int:
         half = self.k // 2
         return dc * self.hosts_per_dc + pod * half * half + edge * half + h
@@ -205,8 +251,28 @@ class TwoDCFatTree(Net):
         edge, h = divmod(r, half)
         return dc, pod, edge, h
 
+    def dc_of(self, hid: int) -> int:
+        return hid // self.hosts_per_dc
+
     def is_inter(self, src, dst) -> bool:
         return (src // self.hosts_per_dc) != (dst // self.hosts_per_dc)
+
+    def wan_route(self, sdc: int, ddc: int) -> list:
+        """Ordered border-to-border hops from `sdc` to `ddc`."""
+        if ddc in self._adj[sdc]:
+            return [(sdc, ddc)]
+        if self.mesh == "hubspoke":
+            return [(sdc, 0), (0, ddc)]
+        # ring: walk the shorter way round; ties break clockwise
+        n = self.n_dc
+        fwd = (ddc - sdc) % n
+        step = 1 if fwd <= n - fwd else -1
+        route, cur = [], sdc
+        while cur != ddc:
+            nxt = (cur + step) % n
+            route.append((cur, nxt))
+            cur = nxt
+        return route
 
     # ------------------------------------------------------------- paths
 
@@ -247,18 +313,21 @@ class TwoDCFatTree(Net):
                         ln[f"d{sdc}p{dpod}a{a}->e{dedge}"],
                         down_last))
             return out
-        # cross-DC: up-core (16) x WAN link (n_wan) x down-core (16) — sample
-        # max_paths combo INDICES directly (materializing + shuffling all
-        # half^4 * n_wan tuples per host pair made 100k-flow fat-tree
-        # scenario builds take minutes)
+        # cross-DC: up-core (half^2) x WAN link per hop (n_wan each) x
+        # down-core (half^2) — sample max_paths combo INDICES directly
+        # (materializing + shuffling all half^4 * n_wan^hops tuples per host
+        # pair made 100k-flow fat-tree scenario builds take minutes)
+        hops = self.wan_route(sdc, ddc)
         rng = random.Random((src * 131071 + dst) ^ 0xABCDEF)
-        total = half * half * self.n_wan * half * half
+        total = half * half * half * half * self.n_wan ** len(hops)
         picks = rng.sample(range(total), min(self.max_paths, total))
-        wan_tag = "B0->B1" if sdc == 0 else "B1->B0"
         for idx in picks:
             idx, c2 = divmod(idx, half)
             idx, a2 = divmod(idx, half)
-            idx, w = divmod(idx, self.n_wan)
+            wan_legs = []
+            for ha, hb in hops:
+                idx, w = divmod(idx, self.n_wan)
+                wan_legs.append(ln[f"B{ha}->B{hb}.{w}"])
             a, c = divmod(idx, half)
             ci = a * half + c
             ci2 = a2 * half + c2
@@ -267,12 +336,31 @@ class TwoDCFatTree(Net):
                 ln[f"d{sdc}p{spod}e{sedge}->a{a}"],
                 ln[f"d{sdc}p{spod}a{a}->c{ci}"],
                 ln[f"d{sdc}c{ci}->B"],
-                ln[f"{wan_tag}.{w}"],
+                *wan_legs,
                 ln[f"d{ddc}B->c{ci2}"],
                 ln[f"d{ddc}c{ci2}->p{dpod}a{a2}"],
                 ln[f"d{ddc}p{dpod}a{a2}->e{dedge}"],
                 down_last))
         return out
+
+
+class TwoDCFatTree(MultiDCFatTree):
+    """Two k-ary fat-trees joined by 2 border switches x `n_wan` links.
+
+    Thin specialization of :class:`MultiDCFatTree` (n_dc=2, full mesh,
+    no oversubscription) kept for the historical name; link names and
+    creation order are bit-identical to the original two-DC topology.
+    """
+
+    def __init__(self, k: int = 8, n_wan: int = 8, rate: float = RATE_100G,
+                 qcap: int = 1 * MIB, wan_qcap: Optional[int] = None,
+                 intra_rtt: float = 14 * US, inter_rtt: float = 2 * MS,
+                 seed: int = 0, max_paths: int = 24,
+                 wan_rate: Optional[float] = None):
+        super().__init__(k=k, n_dc=2, mesh="full", oversub=1.0, n_wan=n_wan,
+                         rate=rate, qcap=qcap, wan_qcap=wan_qcap,
+                         intra_rtt=intra_rtt, inter_rtt=inter_rtt, seed=seed,
+                         max_paths=max_paths, wan_rate=wan_rate)
 
 
 # --------------------------------------------------------------- loss models

@@ -29,6 +29,27 @@ the flow's full offered share simultaneously, where the packet system
 thins downstream arrivals through upstream bottlenecks.  Use netsim for
 collision/ordering/loss claims; use fleetsim for rate allocation and
 parameter sweeps at scale (see ROADMAP.md fidelity limits).
+
+N-datacenter scenarios (`multi_dc_spec`, repro.scenarios.multi_dc):
+`netsim.topology.MultiDCFatTree` generalizes the two-DC fat tree to
+`n_dc` per-DC fat-trees behind dedicated DCI border switches on a
+ring / full / hub-spoke WAN mesh, with `oversub` thinning the DCI
+attach rate; ``n_dc=2, mesh="full", oversub=1.0`` reproduces
+`fat_tree_spec`'s link set bit-identically.  The DC-MAJOR ordering
+contract: `link_dcs(spec)` labels every link with its datacenter (WAN
+mesh links -1), `plan_shards(link_dc=...)` sorts flows by (home DC,
+home link) and — at ``n_shards == n_dc`` — cuts the flow population at
+the DC boundaries themselves, so shard s IS datacenter s and, under
+the "hotcold" preset (hot pods pinned to ONE WAN-adjacent remote DC),
+every sender uplink stays private and the shard boundary collapses to
+the DCI attach / WAN tiers.  When every boundary link is shared by
+exactly one RING-ADJACENT shard pair, the per-epoch boundary psum is
+replaced by a two-`ppermute` neighbor exchange carrying only the pair
+groups (`fleetsim.shard.neighbor_halo`; bit-equal to the psum, smaller
+payload) — legal for every mesh at n_dc <= 3 and for hub-spoke while
+the hub fans to two consecutive spokes; ring / full at n_dc >= 4 and
+hubs fanning to 3+ spokes fall back to the psum path (hub-spoke
+asymmetry and per-mesh legality notes: repro.scenarios.multi_dc).
 """
 from repro.scenarios.compile_fleetsim import (FleetScenario, ShardPlan,
                                               compile_faults, fleet_arrays,
@@ -38,6 +59,8 @@ from repro.scenarios.compile_netsim import (ScenarioNet, spawn_backlogged,
 from repro.scenarios.fat_tree import (TIER_AGG, TIER_CORE, TIER_EDGE,
                                       TIER_WAN, fat_tree_spec,
                                       link_tier_from_name, link_tiers)
+from repro.scenarios.multi_dc import (MESHES, MULTI_DC_WORKLOADS, link_dcs,
+                                      multi_dc_spec)
 from repro.scenarios.spec import (FAULT_KINDS, ChurnSpec, FaultSpec,
                                   FlowGroup, LbSpec, LinkSpec, Path,
                                   PathSet, RelSpec, Scenario,
@@ -51,6 +74,7 @@ __all__ = [
     "spec_fingerprint",
     "TIER_EDGE", "TIER_AGG", "TIER_CORE", "TIER_WAN",
     "fat_tree_spec", "link_tier_from_name", "link_tiers",
+    "MESHES", "MULTI_DC_WORKLOADS", "link_dcs", "multi_dc_spec",
     "FleetScenario", "ShardPlan", "fleet_arrays", "plan_shards",
     "to_fleetsim",
     "ScenarioNet", "spawn_backlogged", "to_netsim",

@@ -44,6 +44,9 @@ class FleetScenario(NamedTuple):
     seed: int
     link_tier: Optional[np.ndarray] = None   # (n_links,) locality tiers
     # (host-side; feeds plan_shards — None on single-tier topologies)
+    link_dc: Optional[np.ndarray] = None     # (n_links,) datacenter id per
+    # link, -1 on WAN mesh links (host-side; feeds the planner's DC-major
+    # shard order — None on topologies without DC structure)
     rel: Optional[object] = None     # RelParams (None -> static-EC only):
     # present when any inter group carries a RelSpec; its ec_eff also
     # folds in the static LbSpec.ec efficiency of groups WITHOUT a
@@ -173,9 +176,11 @@ def to_fleetsim(spec: Scenario, **make_params_kw) -> FleetScenario:
     fault = compile_faults(spec, net)
 
     from repro.scenarios.fat_tree import link_tiers
+    from repro.scenarios.multi_dc import link_dcs
     return FleetScenario(net=net, params=params, is_inter=is_inter,
                          lb=lb, churn=churn, seed=spec.seed,
-                         link_tier=link_tiers(spec), rel=rel, fault=fault)
+                         link_tier=link_tiers(spec), link_dc=link_dcs(spec),
+                         rel=rel, fault=fault)
 
 
 def _compile_rel(spec: Scenario, net: FluidNet):
@@ -282,6 +287,10 @@ class ShardPlan(NamedTuple):
     new2old: np.ndarray      # (n_links,) int32: old link id per new id
     old2new: np.ndarray      # (n_links,) int32 inverse relabeling
     owner_ptr: np.ndarray    # (n_shards + 1,) int32 private-range offsets
+    boundary_pairs: Optional[np.ndarray] = None  # (n_boundary, 2) int32
+    # sorted toucher-shard pair per boundary link IN TAIL ORDER, (-1, -1)
+    # when 3+ shards touch it — the neighbor (ppermute) halo exchange is
+    # legal only when every row is a ring-adjacent pair (shard.py checks)
 
     @property
     def rows(self) -> int:
@@ -313,7 +322,7 @@ def _home_links(routes3: np.ndarray, n_links: int, n_shards: int,
     flows that had NO non-hub hop to choose from.
 
     Without tiers, the preference is the most-shared link that is NOT a
-    hub (a link touched by >= ceil(n_flows / n_shards) route entries can
+    hub (a link touched by >= ceil(n_flows / n_shards) distinct flows can
     never be private to one shard once its flows overflow a shard, so
     grouping by it buys nothing); flows whose every hop is a hub fall
     back to their rarest hop.  On the standard dumbbell this resolves to
@@ -331,7 +340,15 @@ def _home_links(routes3: np.ndarray, n_links: int, n_shards: int,
     """
     n = routes3.shape[0]
     pidx = np.where(routes3 >= 0, routes3, n_links).reshape(n, -1)
-    counts = np.bincount(pidx.ravel(), minlength=n_links + 1)[:n_links]
+    # Hub-ness is measured in FLOWS, not route entries: with multipath
+    # route tensors every path repeats the shared first/last hop, so raw
+    # entry counts would inflate any fan-in edge past the flow-count
+    # threshold (n_paths flows would look like n_paths**2).  Dedupe link
+    # ids per flow before counting.
+    srt = np.sort(pidx, axis=1)
+    fresh = np.concatenate(
+        [np.ones((n, 1), bool), srt[:, 1:] != srt[:, :-1]], axis=1)
+    counts = np.bincount(srt[fresh], minlength=n_links + 1)[:n_links]
     counts_ext = np.concatenate([counts, [0]])
     hub_ext = np.concatenate(
         [counts >= max(2, -(-n // n_shards)), [True]])
@@ -363,8 +380,41 @@ def _home_links(routes3: np.ndarray, n_links: int, n_shards: int,
     return np.where(home >= n_links, 0, home), no_nonhub
 
 
+def _rehome_sender_uplinks(r3: np.ndarray, home: np.ndarray,
+                           n_links: int) -> np.ndarray:
+    """Make every first-hop (sender uplink) group share ONE home link.
+
+    Today's receiver-side homing guarantees private receiver edges; a
+    sender uplink stays boundary whenever its host's flows home into
+    different shards.  This pass rehomes every flow sharing a first hop
+    onto the group's MODAL home (ties -> smaller link id), so first-hop
+    links localize too — exact on workloads where a host sends toward one
+    DC (the multi-DC "hotcold" preset pins each hot pod to one remote
+    DC), a boundary-minimizing majority vote everywhere else.
+    """
+    f0 = r3[:, 0, 0]
+    ok = f0 >= 0
+    if not np.any(ok):
+        return home
+    uniq, inv = np.unique(f0[ok], return_inverse=True)
+    key = inv.astype(np.int64) * (n_links + 1) + home[ok]
+    pairs, counts = np.unique(key, return_counts=True)
+    pg = pairs // (n_links + 1)
+    ph = pairs % (n_links + 1)
+    best = np.lexsort((ph, -counts, pg))      # group asc, count desc
+    lead = np.unique(pg[best], return_index=True)[1]
+    modal = np.empty(uniq.shape[0], np.int64)
+    modal[pg[best[lead]]] = ph[best[lead]]
+    out = home.copy()
+    out[ok] = modal[inv]
+    return out
+
+
 def plan_shards(routes, n_links: int, n_shards: int,
-                link_tier: Optional[np.ndarray] = None) -> ShardPlan:
+                link_tier: Optional[np.ndarray] = None, *,
+                seed: int = 0,
+                link_dc: Optional[np.ndarray] = None,
+                sender_private: bool = False) -> ShardPlan:
     """Partition flows by link locality into `n_shards` balanced shards.
 
     Flows are sorted by home link (`_home_links`; `link_tier` enables the
@@ -376,10 +426,30 @@ def plan_shards(routes, n_links: int, n_shards: int,
     iff flows of at most one shard touch it — so the relabeled id space
     is correct whatever the heuristic did.
 
+    `link_dc` (a (n_links,) datacenter id array, -1 on WAN links — e.g.
+    FleetScenario.link_dc) makes the shard order DC-MAJOR: flows sort by
+    (home link's DC, home link).  At n_shards == n_dc the cut moves from
+    equal chunks to the DC-group boundaries themselves — shard s IS
+    datacenter s, shards pad to the largest DC's flow count instead of
+    straddling a DC across two shards — so cross-shard traffic collapses
+    to the DCI/WAN tiers and is adjacent-only on ring/full meshes, where
+    the halo exchange can run as a ppermute neighbor exchange
+    (repro.fleetsim.shard) — `boundary_pairs` records each boundary
+    link's toucher pair so the runtime can check legality.
+    `sender_private=True` additionally rehomes every first-hop (sender
+    uplink) group onto its modal home (`_rehome_sender_uplinks`).
+
+    Hub splitting: a single home link saturated past one shard's row
+    budget is split across ADJACENT shards by the contiguous cut; its
+    flows are dealt in seeded order so the split is deterministic under
+    the spec seed and load-balanced, and adjacency keeps the neighbor
+    exchange legal.
+
     Degenerate case: when EVERY flow's every hop is a hub and no tiers
     are given, the home grouping carries no locality signal at all (the
     rarest-hop pick is arbitrary), so flows are dealt round-robin into
-    shards instead — balanced real-flow counts by construction — with a
+    balanced shards in a seed-determined order — deterministic under the
+    spec `seed`, balanced real-flow counts by construction — with a
     warning suggesting `link_tier`.
     """
     r = np.asarray(routes)
@@ -388,8 +458,8 @@ def plan_shards(routes, n_links: int, n_shards: int,
     if n_shards < 1:
         raise ValueError(f"n_shards must be >= 1, got {n_shards}")
     home, no_nonhub = _home_links(r3, n_links, n_shards, link_tier)
-    rows = -(-n // n_shards)
-    gather = np.full((n_shards, rows), n, np.int32)
+    if sender_private and n:
+        home = _rehome_sender_uplinks(r3, home, n_links)
     flow_shard = np.empty(n, np.int32)
     if link_tier is None and n and no_nonhub.all() and n_shards > 1:
         warnings.warn(
@@ -397,16 +467,59 @@ def plan_shards(routes, n_links: int, n_shards: int,
             "localizes anything; dealing flows round-robin into balanced "
             "shards (pass link_tier for locality grouping on multi-tier "
             "topologies)", RuntimeWarning, stacklevel=2)
-        flow_shard[:] = np.arange(n, dtype=np.int32) % n_shards
+        rows = -(-n // n_shards)
+        gather = np.full((n_shards, rows), n, np.int32)
+        deal = np.random.default_rng([seed, 0x5EED]).permutation(n)
+        deal = deal.astype(np.int32)
+        flow_shard[deal] = np.arange(n, dtype=np.int32) % n_shards
         for s in range(n_shards):
-            chunk = np.arange(s, n, n_shards, dtype=np.int32)
+            chunk = deal[s::n_shards]
             gather[s, :chunk.shape[0]] = chunk
     else:
-        order = np.argsort(home, kind="stable")
-        for s in range(n_shards):
-            chunk = order[s * rows:(s + 1) * rows]
-            gather[s, :chunk.shape[0]] = chunk
-        flow_shard[order] = np.minimum(np.arange(n) // rows, n_shards - 1)
+        dc_home = None
+        if link_dc is not None:
+            dc = np.asarray(link_dc, np.int64)
+            if dc.shape != (n_links,):
+                raise ValueError(f"link_dc must have shape ({n_links},), "
+                                 f"got {dc.shape}")
+            dc_home = dc[home]
+            key = (dc_home - dc.min()) * np.int64(n_links + 1) + home
+        else:
+            key = home.astype(np.int64)
+        order = np.argsort(key, kind="stable")
+        aligned = (dc_home is not None and n
+                   and int(dc.max()) + 1 == n_shards
+                   and dc_home.min() >= 0)
+        if aligned:
+            # DC-aligned cut: shard s = datacenter s; shards pad to the
+            # largest DC's flow count instead of straddling a DC
+            sizes = np.bincount(dc_home, minlength=n_shards)
+            rows = max(int(sizes.max()), 1)
+            gather = np.full((n_shards, rows), n, np.int32)
+            ptr = np.concatenate([[0], np.cumsum(sizes)])
+            for s in range(n_shards):
+                chunk = order[ptr[s]:ptr[s + 1]]
+                gather[s, :chunk.shape[0]] = chunk
+                flow_shard[chunk] = s
+        else:
+            rows = -(-n // n_shards)
+            gather = np.full((n_shards, rows), n, np.int32)
+            counts_home = np.bincount(home, minlength=n_links) if n else \
+                np.zeros(n_links, np.int64)
+            fat = np.flatnonzero(counts_home > rows)
+            if fat.size:  # hub splitting: deal saturated groups seeded
+                rng = np.random.default_rng([seed, 0x4B5])
+                ksort = key[order]
+                for h in fat:
+                    kv = key[np.flatnonzero(home == h)[0]]
+                    a, b = np.searchsorted(ksort, [kv, kv + 1])
+                    seg = order[a:b].copy()
+                    order[a:b] = seg[rng.permutation(b - a)]
+            for s in range(n_shards):
+                chunk = order[s * rows:(s + 1) * rows]
+                gather[s, :chunk.shape[0]] = chunk
+            flow_shard[order] = np.minimum(np.arange(n) // rows,
+                                           n_shards - 1)
     flat = r3.reshape(n, -1)
     valid = flat >= 0
     touched = np.zeros((n_shards, n_links), bool)
@@ -424,6 +537,14 @@ def plan_shards(routes, n_links: int, n_shards: int,
     old2new[new2old] = np.arange(n_links, dtype=np.int32)
     owner_ptr = np.concatenate(
         [[0], np.cumsum([p.shape[0] for p in priv])]).astype(np.int32)
+    bidx = np.flatnonzero(boundary)
+    pairs = np.full((bidx.shape[0], 2), -1, np.int32)
+    if bidx.size:
+        two = n_touching[bidx] == 2
+        pairs[two, 0] = np.argmax(touched[:, bidx], axis=0)[two]
+        pairs[two, 1] = (n_shards - 1
+                         - np.argmax(touched[::-1, bidx], axis=0))[two]
     return ShardPlan(n_shards=n_shards, n_real=n, n_links=n_links,
                      n_boundary=int(boundary.sum()), gather=gather,
-                     new2old=new2old, old2new=old2new, owner_ptr=owner_ptr)
+                     new2old=new2old, old2new=old2new, owner_ptr=owner_ptr,
+                     boundary_pairs=pairs)

@@ -56,11 +56,12 @@ WORKLOADS = ("permutation", "incast")
 
 _CORE_RE = re.compile(r"^d\d+c\d+->")        # core -> pod-agg downlinks
 _AGG_CORE_RE = re.compile(r"a\d+->c\d+$")    # pod-agg -> core uplinks
+_WAN_RE = re.compile(r"^B\d+->B\d+\.")       # border <-> border mesh links
 
 
 def link_tier_from_name(name: str) -> int:
-    """Classify a TwoDCFatTree link name into a locality tier."""
-    if "B0->B1" in name or "B1->B0" in name:
+    """Classify a MultiDCFatTree link name into a locality tier."""
+    if _WAN_RE.match(name):
         return TIER_WAN
     if name.endswith("->B") or "B->" in name:
         return TIER_WAN          # core<->border attach: inter-DC only

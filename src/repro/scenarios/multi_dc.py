@@ -1,0 +1,303 @@
+"""N-datacenter fat-tree scenarios: `multi_dc_spec` lifts
+`netsim.topology.MultiDCFatTree` — per-DC k-ary fat-trees behind dedicated
+DCI (border) switches, joined by a ring / full / hub-spoke WAN mesh — into
+ONE declarative Scenario that compiles to BOTH simulators, exactly like
+`fat_tree_spec` does for the historical two-DC case (which `multi_dc_spec`
+reproduces bit-identically at ``n_dc=2, mesh="full", oversub=1.0``).
+
+Workload presets (all pair draws deterministic under the spec seed; the
+cross-DC ECMP path-sets come from MultiDCFatTree's combo-INDEX draw — no
+tuple materialization or shuffling):
+
+  * "hotcold" — each DC's first `n_hot` pods are HOT: they carry only
+    inter-DC traffic, and hot pod j is pinned to ONE WAN-adjacent remote
+    DC (``adj[j % len(adj)]``, cycling the sorted adjacency list).  The
+    remaining COLD pods carry only the intra classes ("intra_pod" rounds
+    of per-pod permutations, "cross_pod" permutations between cold pods
+    of the same DC).  The pinning is what makes the shard plan
+    topology-matched: every sender uplink (host->edge and pod edge->agg /
+    agg->core) carries flows homed to a single receiver DC, so under a
+    DC-major plan the only multi-shard links are the DCI attach and WAN
+    tiers — see `plan_shards(sender_private=...)` and the N-DC notes in
+    the package docstring.
+  * "incast" — every class converges on host 0's downlink (DC 0, hot
+    pod 0); inter senders are drawn round-robin from the DCs WAN-adjacent
+    to DC 0.  This is the single-class regime the fluid-vs-packet
+    tolerance is documented for (validate.compare_multi_dc_steady_state).
+
+Hub-spoke asymmetry: under "hotcold" a spoke's hot pods can only pin to
+the hub (their lone WAN neighbor), so spokes never exchange traffic and
+the only shared links are the HUB's DCI attach links — shared by the
+consecutive spoke shards the hub's hot pods fan to.  With few hot pods
+(k=4: two) that is an adjacent pair and the neighbor (ppermute) halo
+stays legal even at n_dc >= 4; once the hub fans to THREE or more
+distinct spokes (e.g. k=8, n_dc=5: four hot pods -> four spokes), or a
+workload routes spoke->spoke traffic relayed through the hub, the
+toucher set stops being an adjacent pair and `neighbor_halo` refuses —
+the plan falls back to the psum path (`exchange="auto"`), and
+`exchange="nbr"` raises.  The same per-link test decides every mesh.
+Under the hotcold defaults (two hot pods per DC): at n_dc <= 3 every
+shard pair is ring-adjacent, so ring / full / hub-spoke are all
+ppermute-legal; at n_dc >= 4 hub-spoke REMAINS legal while the hub fans
+to two consecutive spokes, but ring and full refuse — some DC's two
+pinned targets are distance-2 shards (ring: its neighbors d-1 and d+1;
+full: DC 1's first two adjacency entries are 0 and 2) sharing that DC's
+attach links.  The psum fallback is always available and numerically
+identical (equivalence-tested); ppermute only changes the exchange's
+payload and fan-in, never its sum.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.scenarios.fat_tree import (_split_counts, link_tier_from_name)
+from repro.scenarios.spec import (ChurnSpec, FlowGroup, LbSpec, LinkSpec,
+                                  MIB, MS, RATE_100G, Scenario, US)
+
+MULTI_DC_WORKLOADS = ("hotcold", "incast")
+MESHES = ("ring", "full", "hubspoke")
+
+_DC_RE = re.compile(r"^d(\d+)")
+_WAN_RE = re.compile(r"^B\d+->B\d+\.")
+
+
+def link_dcs(spec: Scenario) -> Optional[np.ndarray]:
+    """(n_links,) datacenter id per link, -1 for the WAN mesh links.
+
+    Parsed from the fat-tree link-name grammar (``d{dc}...``, ``h{hid}->e``,
+    ``e->h{hid}``, ``B{a}->B{b}.{w}``); returns None on any other topology
+    (dumbbells have no DC structure to exploit).  Feeds the planner's
+    DC-major shard order (`plan_shards(link_dc=...)`).
+    """
+    names = [l.name for l in spec.links]
+    n_hosts = sum(1 for nm in names
+                  if nm.startswith("h") and nm.endswith("->e"))
+    dcs = [int(m.group(1)) for nm in names if (m := _DC_RE.match(nm))]
+    if not n_hosts or not dcs:
+        return None
+    hpd = n_hosts // (max(dcs) + 1)
+    out = np.empty(len(names), np.int64)
+    for i, nm in enumerate(names):
+        m = _DC_RE.match(nm)
+        if m:
+            out[i] = int(m.group(1))
+        elif _WAN_RE.match(nm):
+            out[i] = -1
+        elif nm.startswith("h") and nm.endswith("->e"):
+            out[i] = int(nm[1:-3]) // hpd
+        elif nm.startswith("e->h"):
+            out[i] = int(nm[4:]) // hpd
+        else:
+            return None
+    return out
+
+
+class _MultiDCPairPicker:
+    """Deterministic (src, dst) pair streams over a MultiDCFatTree."""
+
+    def __init__(self, net, workload: str, n_hot: int, seed: int):
+        self.net = net
+        self.k = net.k
+        self.half = net.k // 2
+        self.hpd = net.hosts_per_dc
+        self.n_dc = net.n_dc
+        self.n_hot = n_hot
+        self.workload = workload
+        self.rng = np.random.default_rng([seed, 0xD0D0])
+        self.adj = {d: sorted(net._adj[d]) for d in range(net.n_dc)}
+        self.victim = net.host_id(0, 0, 0, 0)
+
+    def _pod_hosts(self, dc: int, pod: int) -> np.ndarray:
+        base = dc * self.hpd + pod * self.half * self.half
+        return np.arange(base, base + self.half * self.half)
+
+    def _hot_hosts(self, dc: int) -> np.ndarray:
+        return np.concatenate([self._pod_hosts(dc, p)
+                               for p in range(self.n_hot)])
+
+    def _perm(self, src: np.ndarray) -> np.ndarray:
+        """Nonzero cyclic shift of an already-shuffled list: a guaranteed
+        derangement (no host sends to itself)."""
+        return np.roll(src, int(self.rng.integers(1, src.shape[0])))
+
+    def pod_target(self, dc: int, pod: int) -> int:
+        """The ONE remote DC hot pod `pod` of `dc` is pinned to."""
+        a = self.adj[dc]
+        return a[pod % len(a)]
+
+    def intra_pod(self, n: int) -> list:
+        if self.workload == "incast":
+            pool = [h for h in self._pod_hosts(0, 0) if h != self.victim]
+            return [(pool[i % len(pool)], self.victim) for i in range(n)]
+        out = []
+        scopes = [(dc, p) for dc in range(self.n_dc)
+                  for p in range(self.n_hot, self.k)]
+        while len(out) < n:
+            for dc, p in scopes:
+                hosts = self._pod_hosts(dc, p)
+                src = hosts[self.rng.permutation(hosts.shape[0])]
+                out.extend(zip(src.tolist(), self._perm(src).tolist()))
+        return out[:n]
+
+    def cross_pod(self, n: int) -> list:
+        if self.workload == "incast":
+            pool = [h for p in range(1, self.k)
+                    for h in self._pod_hosts(0, p)]
+            return [(pool[i % len(pool)], self.victim) for i in range(n)]
+        out = []
+        cold = list(range(self.n_hot, self.k))
+        while len(out) < n:
+            for dc in range(self.n_dc):
+                shift = int(self.rng.integers(1, len(cold)))
+                for i, p in enumerate(cold):
+                    src = self._pod_hosts(dc, p)
+                    dstp = self._pod_hosts(dc, cold[(i + shift) % len(cold)])
+                    dst = dstp[self.rng.permutation(dstp.shape[0])]
+                    out.extend(zip(src.tolist(), dst.tolist()))
+        return out[:n]
+
+    def inter(self, n: int) -> list:
+        if self.workload == "incast":
+            pool = [h for dc in self.adj[0] for h in self._hot_hosts(dc)]
+            return [(pool[i % len(pool)], self.victim) for i in range(n)]
+        out = []
+        while len(out) < n:
+            for dc in range(self.n_dc):
+                for p in range(self.n_hot):
+                    t = self.pod_target(dc, p)
+                    src = self._pod_hosts(dc, p)
+                    src = src[self.rng.permutation(src.shape[0])]
+                    pool = self._hot_hosts(t)
+                    dst = pool[self.rng.permutation(pool.shape[0])]
+                    out.extend(zip(src.tolist(),
+                                   dst[:src.shape[0]].tolist()))
+        return out[:n]
+
+
+def multi_dc_spec(k: int = 4, n_dc: int = 3, *,
+                  mesh: str = "ring",
+                  oversub: float = 1.0,
+                  n_wan: int = 4,
+                  n_flows: Optional[int] = None,
+                  mix: Tuple[float, float, float] = (0.25, 0.25, 0.5),
+                  n_intra_pod: Optional[int] = None,
+                  n_cross_pod: Optional[int] = None,
+                  n_inter: Optional[int] = None,
+                  workload: str = "hotcold",
+                  hot_frac: float = 0.5,
+                  n_paths: int = 8,
+                  rate: float = RATE_100G,
+                  wan_rate: Optional[float] = None,
+                  intra_rtt: float = 14 * US, inter_rtt: float = 2 * MS,
+                  qcap: float = 1 * MIB,
+                  phantom: bool = True, drain_frac: float = 0.9,
+                  cap_bdps: float = 1.0,
+                  min_frac: float = 0.05, max_frac: float = 0.35,
+                  red_lo_frac: float = 0.25, red_hi_frac: float = 0.75,
+                  epoch_period_frac: float = 1.0,
+                  intra_lb: Optional[LbSpec] = None,
+                  inter_lb: Optional[LbSpec] = None,
+                  intra_churn: Optional[ChurnSpec] = None,
+                  inter_churn: Optional[ChurnSpec] = None,
+                  seed: int = 0,
+                  name: Optional[str] = None) -> Scenario:
+    """`n_dc` k-ary fat-tree DCs on a `mesh` WAN, as ONE spec.
+
+    `oversub` divides the DCI attach-link rate (1.0 = non-blocking, the
+    two-DC historical value).  Flow counts: `n_flows` split by `mix`
+    (intra_pod, cross_pod, inter; largest-remainder rounding) or the three
+    explicit counts.  `hot_frac` sets the hot-pod count per DC
+    (``max(1, round(hot_frac * k))``, capped at k-1 whenever intra flows
+    are requested so cold pods exist).  Groups are declared intra-first
+    and pairs are drawn deterministically from `seed` (module docstring).
+    Compiles to both simulators via the usual `to_netsim` / `to_fleetsim`.
+    """
+    from repro.netsim.topology import MultiDCFatTree
+    if workload not in MULTI_DC_WORKLOADS:
+        raise ValueError(f"unknown multi-DC workload {workload!r}; "
+                         f"expected one of {MULTI_DC_WORKLOADS}")
+    if mesh not in MESHES:
+        raise ValueError(f"unknown WAN mesh {mesh!r}; "
+                         f"expected one of {MESHES}")
+    if k < 4 or k % 2:
+        raise ValueError(f"k must be even and >= 4, got {k}")
+    if n_dc < 2:
+        raise ValueError(f"n_dc must be >= 2, got {n_dc}")
+    if n_paths < 1:
+        raise ValueError(f"n_paths must be >= 1, got {n_paths}")
+    if n_intra_pod is None and n_cross_pod is None and n_inter is None:
+        if n_flows is None:
+            raise ValueError("give n_flows (+ mix) or explicit class counts")
+        n_intra_pod, n_cross_pod, n_inter = _split_counts(n_flows, mix)
+    else:
+        n_intra_pod = n_intra_pod or 0
+        n_cross_pod = n_cross_pod or 0
+        n_inter = n_inter or 0
+    n_hot = max(1, int(round(hot_frac * k)))
+    if n_intra_pod or n_cross_pod:
+        n_hot = min(n_hot, k - 1)
+    if n_cross_pod and k - n_hot < 2:
+        raise ValueError("cross_pod flows need >= 2 cold pods; lower "
+                         f"hot_frac (k={k}, n_hot={n_hot})")
+
+    oracle = MultiDCFatTree(k=k, n_dc=n_dc, mesh=mesh, oversub=oversub,
+                            n_wan=n_wan, rate=rate, qcap=int(qcap),
+                            intra_rtt=intra_rtt, inter_rtt=inter_rtt,
+                            seed=seed, max_paths=n_paths, wan_rate=wan_rate)
+    wan_names = {ln.name for ln in oracle.wan_links}
+    links = tuple(
+        LinkSpec(ln.name, ln.rate, ln.pdelay, float(ln.qcap),
+                 wan=ln.name in wan_names,
+                 tier=link_tier_from_name(ln.name))
+        for ln in oracle.links.values())
+
+    picker = _MultiDCPairPicker(oracle, workload, n_hot, seed)
+    path_cache: dict = {}
+
+    def _path_set(src: int, dst: int):
+        key = (src, dst)
+        ps = path_cache.get(key)
+        if ps is None:
+            ps = oracle.path_link_names(src, dst)
+            if len(ps) > n_paths:
+                # sample, don't prefix-cut: intra-DC sets enumerate
+                # source-agg-major (see fat_tree._path_set); cross-DC sets
+                # are already combo-index-sampled inside MultiDCFatTree
+                import random
+                rng = random.Random((src * 131071 + dst) ^ (seed << 12)
+                                    ^ 0x5A17)
+                ps = tuple(rng.sample(ps, n_paths))
+            path_cache[key] = ps
+        return ps
+
+    groups = []
+    specs = [("intra_pod", n_intra_pod, picker.intra_pod, False),
+             ("cross_pod", n_cross_pod, picker.cross_pod, False),
+             ("inter", n_inter, picker.inter, True)]
+    for gname, n, pairs_fn, inter in specs:
+        if not n:
+            continue
+        pairs = pairs_fn(n)
+        path_sets = tuple(_path_set(s, d) for s, d in pairs)
+        if inter:
+            lb = inter_lb or LbSpec(kind="unolb", n_subflows=n_paths)
+            churn = inter_churn
+        else:
+            lb = intra_lb or LbSpec(kind="ecmp", n_subflows=n_paths)
+            churn = intra_churn
+        groups.append(FlowGroup(gname, n, path_sets, inter=inter,
+                                lb=lb, churn=churn))
+    if not groups:
+        raise ValueError("multi_dc_spec: zero flows requested")
+
+    return Scenario(
+        name=name or f"multi_dc_k{k}_dc{n_dc}_{mesh}_{workload}",
+        links=links, groups=tuple(groups), rate=rate,
+        intra_rtt=intra_rtt, inter_rtt=inter_rtt, phantom=phantom,
+        drain_frac=drain_frac, cap_bdps=cap_bdps, min_frac=min_frac,
+        max_frac=max_frac, red_lo_frac=red_lo_frac,
+        red_hi_frac=red_hi_frac, epoch_period_frac=epoch_period_frac,
+        seed=seed).validate()

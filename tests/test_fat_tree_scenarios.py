@@ -241,6 +241,26 @@ def test_plan_all_hub_falls_back_to_round_robin_with_warning():
     assert plan.n_boundary == n_links       # everything genuinely shared
 
 
+def test_plan_all_hub_deal_is_seed_deterministic():
+    """The all-hub round-robin deal is a SEEDED permutation: same seed ->
+    bit-identical plan across calls (cache keys and resumed sweeps rely
+    on this), different seed -> a different deal of the same flow set."""
+    n, n_links, n_shards = 10, 2, 4
+    routes = np.tile(np.array([0, 1], np.int32), (n, 1))
+    with pytest.warns(RuntimeWarning, match="round-robin"):
+        a = plan_shards(routes, n_links, n_shards, seed=3)
+    with pytest.warns(RuntimeWarning, match="round-robin"):
+        b = plan_shards(routes, n_links, n_shards, seed=3)
+    assert np.array_equal(a.gather, b.gather)
+    assert np.array_equal(a.new2old, b.new2old)
+    with pytest.warns(RuntimeWarning, match="round-robin"):
+        c = plan_shards(routes, n_links, n_shards, seed=4)
+    assert not np.array_equal(a.gather, c.gather)
+    # every seed still deals a balanced, complete permutation
+    flat = c.flat_gather
+    assert sorted(flat[flat < n].tolist()) == list(range(n))
+
+
 def test_cross_validation_fat_tree_incast():
     """Acceptance: fat_tree_spec(k=4) compiled to BOTH simulators, the
     cross-pod incast preset — fluid steady-state per-flow rates within

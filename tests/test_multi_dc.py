@@ -1,0 +1,257 @@
+"""N-datacenter topology layer: MultiDCFatTree / multi_dc_spec /
+DC-major shard plans / ppermute neighbor halo exchange.
+
+Sharding invariants are checked on REAL compiled scenarios (3-DC ring
+and hub-spoke), the exchange itself on forced-host-device meshes in
+subprocesses (the parent process must not pin XLA_FLAGS)."""
+import json
+import re
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.netsim.topology import MultiDCFatTree, TwoDCFatTree, wan_mesh_pairs
+from repro.scenarios import (fat_tree_spec, link_dcs, multi_dc_spec,
+                             plan_shards, to_fleetsim, to_netsim)
+from repro.fleetsim.shard import neighbor_halo
+
+_DCI_WAN = re.compile(r"^(d\d+c\d+->B|d\d+B->c\d+|B\d+->B\d+\.)")
+
+
+def _run(code: str) -> dict:
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=900)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+# ------------------------------------------------------------- topology
+
+def test_wan_mesh_pairs():
+    assert wan_mesh_pairs(2, "ring") == ((0, 1),)
+    assert wan_mesh_pairs(2, "full") == ((0, 1),)
+    assert wan_mesh_pairs(3, "ring") == ((0, 1), (0, 2), (1, 2))
+    assert wan_mesh_pairs(4, "ring") == ((0, 1), (0, 3), (1, 2), (2, 3))
+    assert wan_mesh_pairs(4, "full") == tuple(
+        (a, b) for a in range(4) for b in range(a + 1, 4))
+    assert wan_mesh_pairs(4, "hubspoke") == ((0, 1), (0, 2), (0, 3))
+    with pytest.raises(ValueError):
+        wan_mesh_pairs(3, "torus")
+
+
+def test_two_dc_subclass_and_mesh_equivalence():
+    """TwoDCFatTree is MultiDCFatTree(n_dc=2, mesh="full", oversub=1) with
+    the historical signature; every link field matches bit-for-bit."""
+    a = TwoDCFatTree(k=4, n_wan=4, seed=3)
+    b = MultiDCFatTree(k=4, n_dc=2, mesh="full", oversub=1.0, n_wan=4,
+                       seed=3)
+    assert isinstance(a, MultiDCFatTree)
+    la = [(ln.name, ln.rate, ln.pdelay, ln.qcap) for ln in a.links.values()]
+    lb = [(ln.name, ln.rate, ln.pdelay, ln.qcap) for ln in b.links.values()]
+    assert la == lb
+    assert [ln.name for ln in a.wan_links] == [ln.name for ln in b.wan_links]
+    # the combo-index cross-DC path draw agrees too
+    for s, d in [(0, 20), (7, 25), (31, 2)]:
+        assert a.path_link_names(s, d) == b.path_link_names(s, d)
+
+
+def test_multi_dc_two_dc_spec_is_bit_identical_to_fat_tree():
+    """Acceptance: multi_dc_spec(n_dc=2, mesh="full") reproduces the
+    fat_tree_spec link set bit-identically (every LinkSpec field)."""
+    a = fat_tree_spec(k=4, n_wan=4, n_flows=60, seed=2)
+    b = multi_dc_spec(k=4, n_dc=2, mesh="full", n_wan=4, n_flows=60, seed=2)
+    assert a.links == b.links
+
+
+def test_oversub_divides_attach_rate():
+    net = MultiDCFatTree(k=4, n_dc=3, mesh="ring", oversub=2.0, rate=100.0)
+    attach = [ln for ln in net.links.values()
+              if re.match(r"^d\d+c\d+->B$", ln.name)]
+    assert attach and all(ln.rate == 50.0 for ln in attach)
+    up = [ln for ln in net.links.values()
+          if re.match(r"^d0p0a0->c0$", ln.name)]
+    assert up and up[0].rate == 100.0          # only the DCI tier thins
+    with pytest.raises(ValueError, match="oversub"):
+        MultiDCFatTree(k=4, n_dc=3, oversub=0.5)
+
+
+def test_link_dcs_mapping():
+    s = multi_dc_spec(k=4, n_dc=3, mesh="ring", n_flows=30, n_paths=2)
+    dc = link_dcs(s)
+    assert dc is not None and dc.shape == (len(s.links),)
+    by_name = dict(zip((l.name for l in s.links), dc.tolist()))
+    assert by_name["B0->B1.0"] == -1
+    assert by_name["d2c0->B"] == 2
+    assert by_name["h0->e"] == 0
+    hosts_per_dc = 4 * 2 * 2                   # k=4: 4 pods x 4 hosts
+    assert by_name[f"e->h{hosts_per_dc + 1}"] == 1
+    from repro.scenarios import dumbbell_scenario
+    assert link_dcs(dumbbell_scenario(3, 3)) is None
+
+
+def test_multi_dc_compiles_to_both_simulators():
+    """Acceptance: multi_dc_spec(k=4, n_dc=3) drives BOTH simulators."""
+    s = multi_dc_spec(k=4, n_dc=3, mesh="ring", n_flows=30, n_paths=4)
+    net = to_netsim(s)
+    fs = to_fleetsim(s)
+    assert len(net.links) == fs.net.n_links == len(s.links)
+    assert fs.net.routes.shape[0] == 30
+    assert fs.link_dc is not None
+    assert fs.link_tier is not None
+
+
+# ------------------------------------------------------- DC-major plans
+
+@pytest.mark.parametrize("mesh,n_dc", [("ring", 3), ("hubspoke", 3),
+                                       ("full", 3), ("hubspoke", 4)])
+def test_plan_boundary_is_dci_wan_cut(mesh, n_dc):
+    """DC-major plan on the hotcold preset: the only multi-shard links
+    are the DCI attach / WAN tiers, every sender uplink is private, and
+    the boundary toucher pairs are ring-adjacent (ppermute-legal)."""
+    s = multi_dc_spec(k=4, n_dc=n_dc, mesh=mesh, n_flows=40 * n_dc, seed=5)
+    fs = to_fleetsim(s)
+    routes = np.asarray(fs.net.routes)
+    plan = plan_shards(routes, fs.net.n_links, n_dc, link_tier=fs.link_tier,
+                       seed=s.seed, link_dc=fs.link_dc, sender_private=True)
+    names = [l.name for l in s.links]
+    bnames = [names[o]
+              for o in plan.new2old[plan.n_links - plan.n_boundary:]]
+    assert bnames and all(_DCI_WAN.match(b) for b in bnames), bnames[:8]
+
+    # sender uplinks (first hops) are touched by at most one shard
+    touched = np.zeros((n_dc, fs.net.n_links), bool)
+    shard_of = plan.inverse_flow // plan.gather.shape[1]
+    for f in range(routes.shape[0]):
+        ls = np.unique(routes[f])
+        touched[shard_of[f], ls[ls >= 0]] = True
+    first = np.unique(routes[:, 0, 0])
+    assert all(touched[:, l].sum() <= 1 for l in first[first >= 0])
+
+    nbr = neighbor_halo(plan)
+    assert nbr is not None and nbr.shape[:2] == (n_dc, 2)
+    # the declared toucher pairs match the actual assignment
+    base = plan.n_links - plan.n_boundary
+    for i, (a, b) in enumerate(np.asarray(plan.boundary_pairs)):
+        actual = set(np.flatnonzero(
+            touched[:, plan.new2old[base + i]]).tolist())
+        assert actual == {int(a), int(b)}
+
+
+def test_neighbor_halo_refused_on_non_adjacent_meshes():
+    """Documented asymmetry: at n_dc >= 4 a ring DC pins hot pods to BOTH
+    its neighbors (distance-2 shards share its attach links), so the
+    neighbor exchange is refused and exchange="nbr" raises while "auto"
+    falls back to psum."""
+    from repro.fleetsim.shard import shard_scenario
+    import jax
+    s = multi_dc_spec(k=4, n_dc=4, mesh="ring", n_flows=160, seed=5,
+                      n_paths=4)
+    fs = to_fleetsim(s)
+    plan = plan_shards(np.asarray(fs.net.routes), fs.net.n_links, 4,
+                       link_tier=fs.link_tier, seed=s.seed,
+                       link_dc=fs.link_dc, sender_private=True)
+    assert plan.n_boundary > 0
+    assert neighbor_halo(plan) is None
+    if jax.device_count() == 4:                # forced-device sessions only
+        with pytest.raises(ValueError, match="neighbor"):
+            shard_scenario(fs.net, fs.params, is_inter=fs.is_inter,
+                           link_tier=fs.link_tier, link_dc=fs.link_dc,
+                           exchange="nbr", seed=s.seed)
+    with pytest.raises(ValueError, match="exchange"):
+        shard_scenario(fs.net, fs.params, exchange="bogus")
+
+
+# --------------------------------------------------- ppermute exchange
+
+@pytest.mark.slow
+def test_halo_exchange_nbr_matches_psum_two_devices():
+    """links.halo_exchange in neighbor mode == the psum tail, bit-exact,
+    on a forced 2-host-device mesh (S=2: every pair trivially adjacent)."""
+    res = _run(r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax, jax.numpy as jnp, numpy as np, json
+from jax.sharding import PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+from repro.fleetsim.links import halo_exchange
+from repro.fleetsim.shard import flow_mesh
+
+n_links, halo = 6, 4
+rng = np.random.default_rng(0)
+# per-shard partial buffers (n_links + 1 scratch slot), stacked on axis 0
+bufs = jnp.asarray(rng.normal(size=(2, n_links + 1)).astype(np.float32))
+# boundary tail = links 2..5; group 0 = {2,3} (pair 0-1), group 1 = {4,5}
+nbr = jnp.asarray(np.array(
+    [[[2, 3], [4, 5]], [[4, 5], [2, 3]]], np.int32))
+mesh = flow_mesh(2)
+
+def go(fn, *extra):
+    f = shard_map(fn, mesh=mesh,
+                  in_specs=(P("flows"),) + (P("flows"),) * len(extra),
+                  out_specs=P("flows"))
+    return np.asarray(f(bufs, *extra))
+
+r_psum = go(lambda b: halo_exchange(b[0], n_links, "flows", halo)[None])
+r_nbr = go(lambda b, t: halo_exchange(b[0], n_links, "flows", halo,
+                                      nbr=t[0], n_shards=2)[None], nbr)
+out = {"bit_equal": bool((r_psum[:, 2:n_links] == r_nbr[:, 2:n_links])
+                         .all()),
+       "private_kept": bool((r_nbr[:, :2] == np.asarray(bufs)[:, :2])
+                            .all())}
+print(json.dumps(out))
+""")
+    assert res["bit_equal"]
+    assert res["private_kept"]
+
+
+@pytest.mark.slow
+def test_sharded_multi_dc_nbr_matches_psum_three_devices():
+    """End-to-end acceptance: the DC-major ppermute exchange on a 3-DC
+    ring (3 forced host devices) is bit-equal to the psum fallback and
+    SHRINKS the per-epoch boundary payload (factor recorded in
+    BENCH_fleetsim.json by benchmarks/fleetsim_sweep)."""
+    res = _run(r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=3"
+import numpy as np, json
+from repro.scenarios import multi_dc_spec, to_fleetsim
+from repro.fleetsim.shard import shard_scenario, steady_state_prepared
+
+s = multi_dc_spec(k=4, n_dc=3, mesh="ring", n_flows=120, seed=5)
+fs = to_fleetsim(s)
+kw = dict(n_warm=200, n_meas=20)
+out = {}
+sf_n = shard_scenario(fs.net, fs.params, is_inter=fs.is_inter, lb=fs.lb,
+                      link_tier=fs.link_tier, link_dc=fs.link_dc,
+                      exchange="nbr", seed=s.seed)
+out["has_nbr"] = sf_n.nbr is not None
+out["shrink"] = (sf_n.plan.n_boundary / (2 * sf_n.nbr.shape[2])
+                 if sf_n.nbr is not None else 0.0)
+st_n, r_n = steady_state_prepared(sf_n, **kw)
+sf_p = shard_scenario(fs.net, fs.params, is_inter=fs.is_inter, lb=fs.lb,
+                      link_tier=fs.link_tier, link_dc=fs.link_dc,
+                      exchange="psum", seed=s.seed)
+st_p, r_p = steady_state_prepared(sf_p, **kw)
+out["rate_err"] = float(np.max(np.abs(np.asarray(r_n) - np.asarray(r_p))))
+out["q_err"] = float(np.max(np.abs(
+    np.asarray(st_n.q_phantom) - np.asarray(st_p.q_phantom))))
+print(json.dumps(out))
+""")
+    assert res["has_nbr"]
+    assert res["rate_err"] == 0.0              # bit-equal, not just close
+    assert res["q_err"] == 0.0
+    assert res["shrink"] > 1.0                 # payload strictly smaller
+
+
+# --------------------------------------------------- fluid vs packet
+
+def test_cross_validation_multi_dc_incast():
+    """Acceptance: multi_dc_spec(k=4, n_dc=3) compiled to BOTH simulators
+    agrees within the documented fat-tree tolerance (single-class
+    cross-pod incast; see compare_multi_dc_steady_state)."""
+    from repro.fleetsim.validate import compare_multi_dc_steady_state
+    res = compare_multi_dc_steady_state()
+    assert res["max_rel_err"] < 0.35, res
+    assert abs(res["util_fluid"] - res["util_netsim"]) < 0.15, res

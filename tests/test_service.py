@@ -56,6 +56,42 @@ def test_scenario_key_binds_defaults():
         service.scenario_key("torus", k=3)
 
 
+def test_scenario_key_multi_dc_topology_fields():
+    """Multi-DC spec fields are address-bearing: n_dc / mesh / oversub
+    each produce a distinct key, and "multi_dc" never collides with a
+    "fat_tree" request — stale two-DC bundles can't shadow N-DC builds."""
+    base = service.scenario_key("multi_dc", k=4, n_flows=60)
+    # builder defaults bind: n_dc=3 / mesh="ring" / oversub=1.0 explicit
+    assert service.scenario_key("multi_dc", k=4, n_flows=60,
+                                n_dc=3, mesh="ring", oversub=1.0) == base
+    keys = {base,
+            service.scenario_key("multi_dc", k=4, n_flows=60, n_dc=4),
+            service.scenario_key("multi_dc", k=4, n_flows=60, mesh="full"),
+            service.scenario_key("multi_dc", k=4, n_flows=60,
+                                 mesh="hubspoke"),
+            service.scenario_key("multi_dc", k=4, n_flows=60, oversub=2.0),
+            service.scenario_key("fat_tree", k=4, n_flows=60)}
+    assert len(keys) == 6
+
+
+def test_bundle_round_trip_link_dc(tmp_path):
+    from repro.scenarios import multi_dc_spec
+    fs = to_fleetsim(multi_dc_spec(k=4, n_dc=3, mesh="ring", n_flows=60,
+                                   n_paths=4))
+    assert fs.link_dc is not None
+    got = service.load_bundle(
+        service.save_bundle(tmp_path / "mdc.npz", fs, key="mdc"))
+    assert got is not None
+    assert np.array_equal(np.asarray(fs.link_dc), np.asarray(got.link_dc))
+    assert np.array_equal(np.asarray(fs.link_tier),
+                          np.asarray(got.link_tier))
+    # absence round-trips too (dumbbell has no DC structure)
+    fs2 = _tiny_fs()
+    got2 = service.load_bundle(
+        service.save_bundle(tmp_path / "db.npz", fs2, key="db"))
+    assert got2 is not None and got2.link_dc is None
+
+
 # ------------------------------------------------------------ bundle format
 
 def _assert_tree_identical(a, b):
